@@ -1,0 +1,104 @@
+"""Figure 1: DIANA vs Rand-DIANA on ridge regression (m=100, d=80,
+n=10 workers — the paper's exact setup).
+
+Protocols reported:
+  * TUNED gamma (best over power-of-2 multiples of the theoretical step
+    size, among converging runs) — the implicit protocol behind the
+    paper's figures; metric = ITERATIONS to rel_err <= 1e-6 and bits.
+  * theory gamma (exact Theorem 3/4 step sizes) for reference.
+
+Paper's claims reproduced / checked:
+  * Fig1-left: Rand-DIANA beats DIANA for every Rand-K q (we observe
+    this in ITERATIONS for most q under tuned gamma; under our FULL bit
+    accounting — which charges Rand-DIANA's rare full-vector refresh
+    p*32d bits/step — DIANA leads on wire bits; see EXPERIMENTS.md
+    discussion of the accounting difference).
+  * Fig1-right: DIANA with tuned Natural-Dithering s* can beat
+    Rand-DIANA; Rand-DIANA preferable at s=2 (aggressive compression).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    diana_run,
+    fmt_bits,
+    print_table,
+    rand_diana_run,
+    tuned_run,
+)
+from repro.core import (
+    DCGDShift,
+    DianaShift,
+    NaturalDithering,
+    RandDianaShift,
+    RandK,
+    rand_diana_default_p,
+    stepsize_diana,
+    stepsize_rand_diana,
+)
+from repro.core.simulate import run_dcgd_shift
+from repro.data.problems import make_ridge
+
+TOL = 1e-6
+STEPS = 20_000
+
+
+def _pair(prob, q, steps):
+    omega = q.omega(prob.d)
+    alpha, g_d = stepsize_diana(prob.L_max, omega, 0.0, prob.n_workers)
+    p = rand_diana_default_p(omega)
+    _, g_r = stepsize_rand_diana(prob.L_max, omega, prob.n_workers, p)
+
+    bits_d, it_d, _ = tuned_run(
+        lambda m: run_dcgd_shift(
+            prob, DCGDShift(q=q, rule=DianaShift(alpha=alpha)),
+            g_d * m, steps),
+        tol=TOL,
+    )
+    bits_r, it_r, _ = tuned_run(
+        lambda m: run_dcgd_shift(
+            prob, DCGDShift(q=q, rule=RandDianaShift(p=p)),
+            g_r * m, steps),
+        tol=TOL,
+    )
+    return (bits_d, it_d), (bits_r, it_r)
+
+
+def main(steps: int = STEPS):
+    prob = make_ridge(m=100, d=80, n_workers=10, seed=0)
+    rows, iter_wins = [], 0
+    qs = (0.1, 0.25, 0.5, 0.75, 0.9)
+    for qf in qs:
+        (bd, id_), (br, ir) = _pair(prob, RandK(qf), steps)
+        iter_wins += ir < id_
+        rows.append((f"rand-k q={qf}", f"{id_:.0f}", f"{ir:.0f}",
+                     fmt_bits(bd), fmt_bits(br),
+                     "rand-diana" if ir < id_ else "diana"))
+    print_table(
+        "Fig1-left (tuned gamma): DIANA vs Rand-DIANA, Rand-K",
+        ["compressor", "DIANA iters", "RD iters", "DIANA bits", "RD bits",
+         "iter winner"], rows,
+    )
+    print(f"rand-diana wins {iter_wins}/{len(qs)} q values on iterations "
+          f"(paper Fig1: wins on its bits metric for all q)")
+
+    rows = []
+    best = {}
+    for s in (2, 4, 8, 16):
+        (bd, id_), (br, ir) = _pair(prob, NaturalDithering(s), steps)
+        best[s] = (id_, ir)
+        rows.append((f"nat-dith s={s}", f"{id_:.0f}", f"{ir:.0f}",
+                     fmt_bits(bd), fmt_bits(br),
+                     "rand-diana" if ir < id_ else "diana"))
+    print_table(
+        "Fig1-right (tuned gamma): DIANA vs Rand-DIANA, Natural Dithering",
+        ["compressor", "DIANA iters", "RD iters", "DIANA bits", "RD bits",
+         "iter winner"], rows,
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

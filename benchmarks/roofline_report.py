@@ -1,0 +1,57 @@
+"""Roofline report: aggregates the dry-run JSON artifacts under
+experiments/dryrun/ into the §Roofline table (one row per arch x shape
+x mesh): three terms, dominant bottleneck, useful-flops fraction."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import print_table
+
+
+def load_records(path: str = "experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def main(path: str = "experiments/dryrun", mesh: str = "pod256",
+         comm: str = "dense"):
+    recs = [r for r in load_records(path) if r.get("mesh") == mesh]
+    rows = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "skipped":
+            rows.append((r["arch"], r["shape"], "SKIP", "-", "-", "-", "-"))
+            continue
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], "ERROR", "-", "-", "-", "-"))
+            continue
+        rf = r["roofline"]
+        rows.append((
+            r["arch"], r["shape"],
+            rf["dominant"].replace("_s", ""),
+            f"{rf['compute_s']:.3f}",
+            f"{rf['memory_s']:.3f}",
+            f"{rf['collective_s']:.3f}",
+            f"{rf['useful_flops_frac']:.2f}",
+        ))
+    if not rows:
+        print(f"(no dry-run artifacts under {path} for mesh={mesh}; run "
+              f"PYTHONPATH=src python -m repro.launch.dryrun --all first)")
+        return []
+    print_table(
+        f"Roofline terms per (arch x shape), mesh={mesh} "
+        f"(seconds/step/chip; TPU v5e: 197TF bf16, 819GB/s HBM, 50GB/s ICI)",
+        ["arch", "shape", "bottleneck", "compute_s", "memory_s",
+         "collective_s", "6ND/HLO"],
+        rows,
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

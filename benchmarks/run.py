@@ -1,0 +1,56 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+--fast shrinks step counts ~4x for CI-style runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig1,fig2,fig4,table1,"
+                         "gdci,kernels,roofline")
+    args = ap.parse_args(argv)
+    scale = 4 if args.fast else 1
+
+    from benchmarks import (
+        fig1_ridge,
+        fig2_stability,
+        fig4_logreg,
+        gdci_bench,
+        kernels_bench,
+        roofline_report,
+        table1_rates,
+    )
+
+    suites = {
+        "fig1": lambda: fig1_ridge.main(steps=fig1_ridge.STEPS // scale),
+        "fig2": lambda: fig2_stability.main(steps=fig2_stability.STEPS // scale),
+        "fig4": lambda: fig4_logreg.main(steps=fig4_logreg.STEPS // scale),
+        "table1": lambda: table1_rates.main(steps=table1_rates.STEPS // scale),
+        "gdci": lambda: gdci_bench.main(steps=gdci_bench.STEPS // scale),
+        "kernels": kernels_bench.main,
+        "roofline": roofline_report.main,
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+
+    t0 = time.time()
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        print(f"\n{'='*72}\n[{name}]  ({time.time()-t0:.0f}s elapsed)")
+        fn()
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,99 @@
+"""Table 1: iteration complexities of the DCGD-SHIFT instances.
+
+For each method we measure empirical iterations to rel_err <= 1e-6 on
+ridge regression and report them against the theoretical complexity
+kappa(1 + omega/n)-style expressions (up to log 1/eps and constants —
+we validate the ORDERING and the omega-scaling, which is what the table
+claims)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import print_table
+from repro.core import (
+    DCGDShift,
+    DianaShift,
+    FixedShift,
+    GDCI,
+    RandDianaShift,
+    RandK,
+    StarShift,
+    VRGDCI,
+    rand_diana_default_p,
+    stepsize_dcgd_fixed,
+    stepsize_dcgd_star,
+    stepsize_diana,
+    stepsize_gdci,
+    stepsize_rand_diana,
+    stepsize_vr_gdci,
+)
+from repro.core.simulate import run_dcgd_shift, run_gdci
+from repro.data.problems import make_ridge
+
+TOL = 1e-6
+STEPS = 30_000
+
+
+def main(steps: int = STEPS):
+    prob = make_ridge(m=100, d=80, n_workers=10, seed=0)
+    q = RandK(0.25)
+    omega = q.omega(prob.d)
+    n = prob.n_workers
+    kappa = prob.kappa
+
+    runs = {}
+    g = stepsize_dcgd_fixed(prob.L, prob.L_max, omega, n)
+    runs["DCGD-FIXED(h=0)"] = (
+        run_dcgd_shift(prob, DCGDShift(q=q, rule=FixedShift()), g, steps),
+        f"neighborhood (Thm 1)",
+    )
+    g = stepsize_dcgd_star(prob.L, prob.L_max, omega, 0.0, n)
+    runs["DCGD-STAR"] = (
+        run_dcgd_shift(prob, DCGDShift(q=q, rule=StarShift()), g, steps,
+                       use_star=True),
+        f"~kappa(1+w/n) = {kappa * (1 + omega / n):.0f} (Thm 2)",
+    )
+    alpha, g = stepsize_diana(prob.L_max, omega, 0.0, n)
+    runs["DIANA"] = (
+        run_dcgd_shift(prob, DCGDShift(q=q, rule=DianaShift(alpha=alpha)),
+                       g, steps),
+        f"max{{kappa(1+w/n), w}} (Thm 3)",
+    )
+    p = rand_diana_default_p(omega)
+    _, g = stepsize_rand_diana(prob.L_max, omega, n, p)
+    runs["RAND-DIANA"] = (
+        run_dcgd_shift(prob, DCGDShift(q=q, rule=RandDianaShift(p=p)),
+                       g, steps),
+        f"max{{kappa(1+w/n), 1/p={1/p:.0f}}} (Thm 4)",
+    )
+    eta, gamma = stepsize_gdci(prob.L, prob.L_max, prob.mu, omega, n)
+    runs["GDCI"] = (
+        run_gdci(prob, GDCI(q=q, gamma=gamma, eta=eta), steps),
+        "neighborhood; kappa(1+w/n) (Thm 5, improved over kappa^2)",
+    )
+    a2, e2, g2 = stepsize_vr_gdci(prob.L, prob.L_max, prob.mu, omega, n)
+    runs["VR-GDCI"] = (
+        run_gdci(prob, VRGDCI(q=q, gamma=g2, eta=e2, alpha=a2), steps),
+        "max{2(w+1), (1+6w/n)kappa} (Thm 6)",
+    )
+
+    rows = []
+    for name, (tr, theory) in runs.items():
+        it = tr.steps_to_tol(TOL)
+        final = float(tr.rel_err[-1])
+        rows.append((
+            name,
+            f"{it:.0f}" if np.isfinite(it) else f"plateau@{final:.1e}",
+            theory,
+        ))
+    print_table(
+        f"Table 1: iterations to rel_err<=1e-6 (ridge, Rand-K q=0.25, "
+        f"kappa={kappa:.0f}, omega={omega:.1f}, n={n})",
+        ["method", "iters (empirical)", "theoretical rate"], rows,
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Quickstart: the paper's core objects in ~60 lines.
+
+1. Build a shifted compressor and see its defining property.
+2. Run DCGD-SHIFT (Alg. 1) with three shift rules on ridge regression.
+3. Train a tiny LM with DIANA-compressed gradients via the launch layer.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DCGDShift,
+    DianaShift,
+    FixedShift,
+    NaturalCompression,
+    RandDianaShift,
+    RandK,
+    rand_diana_default_p,
+    shifted,
+    stepsize_diana,
+    stepsize_rand_diana,
+    stepsize_dcgd_fixed,
+)
+from repro.core.simulate import run_dcgd_shift
+from repro.data.problems import make_ridge
+
+# --- 1. shifted compressors -------------------------------------------------
+q = NaturalCompression()
+x = jnp.asarray([1.3, -0.7, 4.2, 0.05])
+h = jnp.asarray([1.0, -0.5, 4.0, 0.0])
+print("Q(x)    =", q(jax.random.PRNGKey(0), x))
+print("Q_h(x)  =", shifted(q, h, jax.random.PRNGKey(0), x))
+print("Q_h(h)  =", shifted(q, h, jax.random.PRNGKey(0), h),
+      "<- exact at the shift: variance vanishes at h, not at 0")
+
+# --- 2. DCGD-SHIFT on the paper's ridge problem ------------------------------
+prob = make_ridge(m=100, d=80, n_workers=10)
+comp = RandK(0.25)
+omega = comp.omega(prob.d)
+
+gamma = stepsize_dcgd_fixed(prob.L, prob.L_max, omega, prob.n_workers)
+t1 = run_dcgd_shift(prob, DCGDShift(q=comp, rule=FixedShift()), gamma, 5000)
+
+alpha, gamma = stepsize_diana(prob.L_max, omega, 0.0, prob.n_workers)
+t2 = run_dcgd_shift(prob, DCGDShift(q=comp, rule=DianaShift(alpha=alpha)),
+                    gamma, 5000)
+
+p = rand_diana_default_p(omega)
+_, gamma = stepsize_rand_diana(prob.L_max, omega, prob.n_workers, p)
+t3 = run_dcgd_shift(prob, DCGDShift(q=comp, rule=RandDianaShift(p=p)),
+                    gamma, 5000)
+
+print("\nrel_err after 5000 steps (ridge, Rand-K q=0.25):")
+print(f"  DCGD (h=0):   {t1.rel_err[-1]:.3e}   <- stalls in a neighborhood")
+print(f"  DIANA:        {t2.rel_err[-1]:.3e}   <- exact convergence")
+print(f"  Rand-DIANA:   {t3.rel_err[-1]:.3e}   <- exact, simpler analysis")
+
+# --- 3. a tiny LM trained with compressed gradients --------------------------
+from repro.launch import train as T
+
+print("\ntiny LM with DIANA-compressed gradient exchange:")
+T.main(["--arch", "qwen3-0.6b", "--smoke", "--steps", "10",
+        "--batch", "4", "--seq", "64"])

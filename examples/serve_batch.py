@@ -1,0 +1,78 @@
+"""Serve a small model with batched requests: prefill-free batched greedy
+decode against rolling KV caches / recurrent state, across three arch
+families (dense GQA, MLA+MoE, RWKV) through the same serve_step API.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import build_serve_step
+from repro.models import model as M
+
+
+def serve(arch: str, batch: int = 4, gen: int = 48):
+    cfg = get_smoke_config(arch).with_(dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    enc_len = 16 if cfg.is_encoder_decoder else 0
+    state = M.make_decode_state(cfg, batch, cache_len=64, enc_len=enc_len)
+    step = jax.jit(build_serve_step(cfg))
+
+    toks = jax.random.randint(jax.random.PRNGKey(1), (batch, 1), 0,
+                              cfg.vocab_size)
+    # warmup/compile
+    logits, st = step(params, state, toks, jnp.int32(0))
+    jax.block_until_ready(logits)
+
+    t0 = time.time()
+    state = st
+    out = [toks[:, 0]]
+    for t in range(1, gen):
+        logits, state = step(params, state, toks, jnp.int32(t))
+        toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(toks[:, 0])
+    jax.block_until_ready(toks)
+    dt = time.time() - t0
+    total = batch * (gen - 1)
+    print(f"{arch:24s} {total:4d} tokens in {dt:5.2f}s  "
+          f"{total/dt:7.1f} tok/s (batched greedy, CPU smoke cfg)")
+    return jnp.stack(out, 1)
+
+
+def continuous_batching_demo():
+    """The serving ENGINE: requests of different lengths admitted into
+    recycled slots on a shared decode clock (see repro.serving)."""
+    from repro.serving import Engine, Request
+
+    cfg = get_smoke_config("qwen3-0.6b").with_(dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_batch=3, cache_len=128)
+    prompts = [[5, 17, 99], [42, 7], [123, 9, 11, 2], [88, 3], [3, 1, 4],
+               [2, 7, 1, 8], [61, 80]]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=16))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    total = sum(len(r.output) for r in done)
+    print(f"\ncontinuous batching: {len(done)} requests, {total} tokens "
+          f"in {dt:.2f}s over {eng.clock} shared-clock ticks "
+          f"(3 slots, {len(prompts)} requests)")
+    for r in sorted(done, key=lambda r: r.uid)[:3]:
+        print(f"  req {r.uid}: prompt {r.prompt} -> {r.output[:8]}...")
+
+
+def main():
+    print("batched serving across architecture families:")
+    for arch in ("qwen3-0.6b", "deepseek-v2-lite-16b", "rwkv6-3b",
+                 "zamba2-1.2b"):
+        serve(arch)
+    continuous_batching_demo()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with shifted-compression gradient exchange, comparing the wire-bit cost
+of dense vs DIANA-compressed training at matched loss.
+
+This is the paper's technique doing its actual job on the framework's
+actual substrate: per-worker grads -> shifted compression -> compressed
+mean -> AdamW, with periodic checkpointing.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(CPU: ~100M params; expect a few minutes.)
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save
+from repro.configs import get_config
+from repro.configs.base import CompressionConfig, TrainConfig
+from repro.data.tokens import TokenStream
+from repro.launch.mesh import make_host_mesh, n_workers
+from repro.launch.train import build_train_step, init_state
+from repro.models import model as M
+
+
+def make_100m_cfg():
+    """A ~100M dense GQA config (qwen3-0.6b family, trimmed)."""
+    return get_config("qwen3-0.6b").with_(
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=1536, vocab_size=32768, dtype="float32",
+    )
+
+
+def run(comp: CompressionConfig, steps: int, batch: int, seq: int,
+        label: str):
+    cfg = make_100m_cfg()
+    tcfg = TrainConfig(learning_rate=1e-3, total_steps=steps,
+                       warmup_steps=max(1, steps // 20), compression=comp)
+    mesh = make_host_mesh()
+    w = n_workers(mesh)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg, w)
+    step_fn = jax.jit(build_train_step(cfg, tcfg, mesh, w))
+    stream = TokenStream(cfg, seq, batch)
+
+    n_params = M.count_params_analytic(cfg)
+    print(f"\n[{label}] params={n_params/1e6:.1f}M workers={w} "
+          f"rule={comp.shift_rule if comp.enabled else 'none'}")
+    t0 = time.time()
+    losses = []
+    for i in range(steps):
+        state, metrics = step_fn(state, stream.batch(i))
+        losses.append(float(metrics["loss"]))
+        if i % max(1, steps // 10) == 0 or i == steps - 1:
+            print(f"  step {i:4d} loss {losses[-1]:.4f} "
+                  f"bits {float(metrics['bits']):.3e} "
+                  f"({time.time()-t0:.0f}s)")
+    save(f"/tmp/repro_{label}.npz", state.params, step=steps)
+    return losses, float(state.bits)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args(argv)
+
+    dense_losses, _ = run(
+        CompressionConfig(enabled=False), args.steps, args.batch, args.seq,
+        "dense",
+    )
+    diana_losses, diana_bits = run(
+        CompressionConfig(enabled=True, compressor="natural",
+                          shift_rule="diana", shift_alpha=0.5),
+        args.steps, args.batch, args.seq, "diana-natural",
+    )
+
+    import numpy as np
+    k = max(1, args.steps // 10)
+    d_tail = float(np.mean(dense_losses[-k:]))
+    c_tail = float(np.mean(diana_losses[-k:]))
+    dense_bits_step = 32 * M.count_params_analytic(make_100m_cfg())
+    comp_bits_step = diana_bits / args.steps / 2  # w=1 host: per worker
+    print(f"\nfinal loss: dense {d_tail:.4f} vs diana {c_tail:.4f} "
+          f"(gap {c_tail - d_tail:+.4f})")
+    print(f"uplink bits/worker/step: dense(f32) {dense_bits_step:.2e} vs "
+          f"compressed {comp_bits_step:.2e} "
+          f"({dense_bits_step / max(comp_bits_step,1):.1f}x reduction)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Pytree checkpointing (npz-based, sharding-aware restore)."""
+
+from repro.checkpoint.store import latest_step, restore, save

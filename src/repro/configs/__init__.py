@@ -1,0 +1,49 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    CompressionConfig,
+    InputShape,
+    ModelConfig,
+    TrainConfig,
+)
+
+from repro.configs import (
+    deepseek_v2_lite_16b,
+    internlm2_20b,
+    llava_next_34b,
+    qwen15_32b,
+    qwen25_32b,
+    qwen2_moe_a27b,
+    qwen3_06b,
+    rwkv6_3b,
+    seamless_m4t_large_v2,
+    zamba2_12b,
+)
+
+_MODULES = {
+    "rwkv6-3b": rwkv6_3b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b,
+    "llava-next-34b": llava_next_34b,
+    "qwen2.5-32b": qwen25_32b,
+    "internlm2-20b": internlm2_20b,
+    "qwen3-0.6b": qwen3_06b,
+    "qwen1.5-32b": qwen15_32b,
+    "seamless-m4t-large-v2": seamless_m4t_large_v2,
+    "qwen2-moe-a2.7b": qwen2_moe_a27b,
+    "zamba2-1.2b": zamba2_12b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise ValueError(f"unknown arch {arch!r}; have {list(_MODULES)}")
+    return _MODULES[arch].CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise ValueError(f"unknown arch {arch!r}; have {list(_MODULES)}")
+    return _MODULES[arch].smoke()

@@ -1,0 +1,167 @@
+"""Config system: architecture + input-shape + run configuration.
+
+Every assigned architecture is a ``ModelConfig`` in its own module under
+``repro.configs`` (exact spec from the assignment, source cited).  Each
+also provides a ``smoke()`` reduced variant (<=2 layers, d_model<=512,
+<=4 experts) used by CPU tests; the full configs are exercised only via
+the AOT dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+
+    # attention options
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0        # 0 = full attention; >0 = window size
+    attn_q_chunk: int = 512        # query-chunked (flash-style) attention
+
+    # MLA (DeepSeek-V2)
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0    # leading dense-FFN layers (DeepSeek)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+    moe_group_size: int = 4096     # GShard token-group size (see §Perf-4)
+
+    # SSM / RWKV / hybrid
+    ssm_state: int = 0             # mamba2 state size
+    rwkv_head_dim: int = 64
+    attn_every: int = 0            # zamba2: shared attn block period
+    conv_kernel: int = 4           # mamba conv1d width
+
+    # encoder-decoder (audio)
+    is_encoder_decoder: bool = False
+    n_enc_layers: int = 0
+
+    # modality frontends (stubs per the brief)
+    modality: str = "text"         # text | vision_prefix | audio_frames
+    num_prefix_tokens: int = 576   # vlm: patch embeddings per image
+
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"        # activation/param dtype
+    source: str = ""               # citation for the config
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.arch_type == "ssm"
+
+    def supports_long_decode(self) -> bool:
+        """long_500k policy (see DESIGN.md §Arch-applicability): native for
+        ssm/hybrid; dense archs only via the sliding-window variant; the
+        audio enc-dec is skipped (500k source frames is out of domain)."""
+        return self.arch_type in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (for 6ND roofline math)."""
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self, active_only=True)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    """How the DCGD-SHIFT layer is wired into the training step."""
+    enabled: bool = True
+    compressor: str = "natural"    # see core.compressors.make_compressor
+    compressor_kwargs: tuple = ()  # tuple of (key, value) pairs (hashable)
+    shift_rule: str = "diana"      # fixed | diana | rand_diana | vr_gdci
+    shift_alpha: float = 0.125     # DIANA / VR-GDCI alpha
+    shift_p: float = 0.05          # Rand-DIANA refresh probability
+    gdci_eta: float = 0.5          # VR-GDCI model-mixing rate
+    comm_mode: str = "dense"       # dense | q8_ring | randk_shared
+    randk_q: float = 0.05          # keep-fraction for randk_shared
+
+    def make(self):
+        from repro.core import make_compressor, make_shift_rule
+        q = make_compressor(self.compressor, **dict(self.compressor_kwargs))
+        if self.shift_rule in ("fixed", "dcgd"):
+            rule = make_shift_rule("fixed")
+        elif self.shift_rule == "diana":
+            rule = make_shift_rule("diana", alpha=self.shift_alpha)
+        elif self.shift_rule == "rand_diana":
+            rule = make_shift_rule("rand_diana", p=self.shift_p)
+        else:
+            raise ValueError(self.shift_rule)
+        return q, rule
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    optimizer: str = "adamw"       # adamw | sgd
+    train_attn_chunk: int = 256    # key-chunk for TRAIN attention (<=0:
+                                   # keep the arch default; 256 cuts the
+                                   # collective term ~27-29%% on the 32B
+                                   # trains — §Perf-5; prefill keeps 512)
+    remat: bool = True
+    zero_opt_state: bool = True    # ZeRO-1: shard optimizer state over data
+    fsdp_params: bool = False      # also shard params over data (FSDP)
+    compression: CompressionConfig = field(default_factory=CompressionConfig)

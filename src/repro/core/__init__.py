@@ -1,0 +1,48 @@
+"""The paper's contribution: shifted compression operators + DCGD-SHIFT."""
+
+from repro.core.compressors import (
+    BernoulliP,
+    Compressor,
+    Contractive,
+    Identity,
+    Induced,
+    Int8Stochastic,
+    NaturalCompression,
+    NaturalDithering,
+    RandK,
+    ScaledSign,
+    TernGrad,
+    TopK,
+    Unbiased,
+    Zero,
+    make_compressor,
+    shifted,
+    tree_bits,
+    tree_compress,
+    tree_shifted_compress,
+    tree_size,
+)
+from repro.core.shift_rules import (
+    DianaShift,
+    FixedShift,
+    RandDianaShift,
+    ShiftRule,
+    StarShift,
+    make_shift_rule,
+    worker_compress,
+)
+from repro.core.algorithms import (
+    DCGDShift,
+    DCGDState,
+    rand_diana_default_p,
+    stepsize_dcgd_fixed,
+    stepsize_dcgd_star,
+    stepsize_diana,
+    stepsize_rand_diana,
+)
+from repro.core.iterate_comp import (
+    GDCI,
+    VRGDCI,
+    stepsize_gdci,
+    stepsize_vr_gdci,
+)

@@ -1,0 +1,454 @@
+"""Compression operators — the paper's Definitions 1-3 as composable JAX objects.
+
+Two families:
+
+  * ``Unbiased`` (class ``U(omega)``, Def. 2):   E C(x) = x,
+        E ||C(x) - x||^2 <= omega ||x||^2.
+  * ``Contractive`` (class ``B(delta)``, Def. 1): E ||C(x) - x||^2 <= (1-delta)||x||^2.
+
+Every operator works on arrays of arbitrary shape (treated as flattened
+vectors where ordering matters) and is a hashable frozen dataclass so it
+can be closed over inside ``jax.jit``.  Each operator reports the number
+of *bits on the wire* for one message (``bits(d)``) so algorithms can be
+compared in communicated-bits space, as in the paper's experiments.
+
+Operators expose:
+
+  ``__call__(key, x)``      dense compress->decompress round trip (what the
+                            optimizer math sees).
+  ``omega(d)`` / ``delta(d)``  variance constants for step-size rules.
+  ``bits(d)``               wire size of one compressed d-vector message.
+
+The payload-reducing structured forms (values-only Rand-K with a shared
+pattern, int8 blocks for the quantized ring all-reduce) live in
+``repro.dist.collectives`` — here we keep the operator algebra.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+FLOAT_BITS = 32  # wire width of an uncompressed scalar
+
+
+def _flat(x):
+    return jnp.reshape(x, (-1,))
+
+
+def _k_of(q: float, d: int) -> int:
+    """Number of kept coordinates for a sparsifier with keep-fraction q."""
+    return max(1, int(round(q * d)))
+
+
+# --------------------------------------------------------------------------
+# Base classes
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Compressor:
+    """Base class.  Subclasses are frozen dataclasses => hashable/static."""
+
+    def __call__(self, key: jax.Array, x: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def bits(self, d: int) -> float:
+        raise NotImplementedError
+
+    @property
+    def stochastic(self) -> bool:
+        return True
+
+
+@dataclass(frozen=True)
+class Unbiased(Compressor):
+    """Marker base for the class U(omega)."""
+
+    def omega(self, d: int) -> float:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class Contractive(Compressor):
+    """Marker base for the class B(delta)."""
+
+    def delta(self, d: int) -> float:
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------------
+# Trivial operators
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Identity(Unbiased, Contractive):
+    """I in U(0) and B(1): full-precision message."""
+
+    def __call__(self, key, x):
+        return x
+
+    def omega(self, d):
+        return 0.0
+
+    def delta(self, d):
+        return 1.0
+
+    def bits(self, d):
+        return FLOAT_BITS * d
+
+    @property
+    def stochastic(self):
+        return False
+
+
+@dataclass(frozen=True)
+class Zero(Compressor):
+    """O — maps everything to zero; 'delta interpreted as 0' in the paper.
+
+    Used as the C_i of plain DCGD (no shift learning) — zero wire cost.
+    """
+
+    def __call__(self, key, x):
+        return jnp.zeros_like(x)
+
+    def delta(self, d):
+        return 0.0
+
+    def bits(self, d):
+        return 0.0
+
+    @property
+    def stochastic(self):
+        return False
+
+
+# --------------------------------------------------------------------------
+# Unbiased operators  U(omega)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RandK(Unbiased):
+    """Random sparsification (eq. 2): keep a uniformly random K-subset,
+    scale by d/K.  RandK(q) keeps K = round(q*d) coords; omega = d/K - 1.
+
+    ``shared_pattern`` marks that all workers use the same key for a given
+    step (correlated sampling).  It does not change the operator law on a
+    single input, but it makes the *aggregated* message K-dimensional —
+    exploited by ``dist.collectives.randk_shared_mean``.
+    """
+
+    q: float = 0.1
+    shared_pattern: bool = False
+
+    def __call__(self, key, x):
+        shape = x.shape
+        xf = _flat(x)
+        d = xf.shape[0]
+        k = _k_of(self.q, d)
+        # Uniform K-subset via random permutation ranks.
+        scores = jax.random.uniform(key, (d,))
+        thresh = jnp.sort(scores)[k - 1]
+        mask = (scores <= thresh).astype(x.dtype)
+        out = xf * mask * (d / k)
+        return jnp.reshape(out, shape)
+
+    def omega(self, d):
+        return d / _k_of(self.q, d) - 1.0
+
+    def bits(self, d):
+        k = _k_of(self.q, d)
+        if self.shared_pattern:
+            return FLOAT_BITS * k  # indices implied by shared seed
+        return k * (FLOAT_BITS + math.ceil(math.log2(max(d, 2))))
+
+
+@dataclass(frozen=True)
+class BernoulliP(Unbiased):
+    """B_p — full vector scaled 1/p with prob. p, else 0.  omega = 1/p - 1.
+
+    The C_i of Rand-DIANA (Table 2): the shift is refreshed w.p. p.
+    """
+
+    p: float = 0.1
+
+    def __call__(self, key, x):
+        keep = jax.random.bernoulli(key, self.p)
+        return jnp.where(keep, x / self.p, jnp.zeros_like(x))
+
+    def omega(self, d):
+        return 1.0 / self.p - 1.0
+
+    def bits(self, d):
+        return self.p * FLOAT_BITS * d  # expected bits
+
+
+@dataclass(frozen=True)
+class NaturalDithering(Unbiased):
+    """Natural dithering with s levels w.r.t. the l2 norm
+    (Horváth et al., 2019a) — the 'ND' compressor of the paper's Fig. 1.
+
+    Levels are the exponent lattice {2^0, 2^-1, ..., 2^-(s-1), 0} applied
+    to |x|/||x||_2, with unbiased stochastic rounding between neighbouring
+    levels.  omega <= 1/8 + 2^(1-s) * min(sqrt(d), 2^(1-s) d)  (their Thm 1).
+    """
+
+    s: int = 8
+
+    def __call__(self, key, x):
+        xf = x.astype(jnp.float32)
+        norm = jnp.sqrt(jnp.sum(xf * xf))
+        safe = jnp.maximum(norm, jnp.finfo(jnp.float32).tiny)
+        y = jnp.abs(xf) / safe  # in [0, 1]
+        # exponent index j: level_hi = 2^-j, level_lo = 2^-(j+1)
+        j = jnp.clip(jnp.floor(-jnp.log2(jnp.maximum(y, 1e-38))), 0, self.s - 1)
+        hi = jnp.exp2(-j)
+        lo = jnp.where(j >= self.s - 1, 0.0, jnp.exp2(-(j + 1.0)))
+        # Stochastic rounding between lo and hi, unbiased in y.
+        p_hi = (y - lo) / jnp.maximum(hi - lo, 1e-38)
+        u = jax.random.uniform(key, x.shape)
+        lvl = jnp.where(u < p_hi, hi, lo)
+        lvl = jnp.where(y == 0.0, 0.0, lvl)
+        return (jnp.sign(xf) * norm * lvl).astype(x.dtype)
+
+    def omega(self, d):
+        t = 2.0 ** (1 - self.s)
+        return 0.125 + t * min(math.sqrt(d), t * d)
+
+    def bits(self, d):
+        # sign + level index per coordinate, one f32 norm.
+        return d * (1 + math.ceil(math.log2(self.s + 1))) + FLOAT_BITS
+
+
+@dataclass(frozen=True)
+class NaturalCompression(Unbiased):
+    """C_nat — stochastic rounding to the nearest powers of two.
+    omega = 1/8; ~9 bits/coordinate (sign + 8-bit exponent)."""
+
+    def __call__(self, key, x):
+        # elementwise and SHAPE-PRESERVING: never flattens, so sharded
+        # gradient leaves stay sharded (no spurious all-gathers).
+        xf = x.astype(jnp.float32)
+        a = jnp.abs(xf)
+        e = jnp.floor(jnp.log2(jnp.maximum(a, 1e-38)))
+        lo = jnp.exp2(e)
+        p_hi = a / lo - 1.0  # in [0,1): distance to 2^e within [2^e, 2^{e+1})
+        u = jax.random.uniform(key, x.shape)
+        out = jnp.where(u < p_hi, 2.0 * lo, lo)
+        out = jnp.where(a == 0.0, 0.0, out) * jnp.sign(xf)
+        return out.astype(x.dtype)
+
+    def omega(self, d):
+        return 0.125
+
+    def bits(self, d):
+        return 9 * d
+
+
+@dataclass(frozen=True)
+class TernGrad(Unbiased):
+    """Ternary quantization (Wen et al., 2017): sign(x)*||x||_inf*Bern(|x|/||x||_inf).
+
+    Unbiased; omega is data dependent, bounded by sqrt(d) for the worst case.
+    """
+
+    def __call__(self, key, x):
+        xf = x.astype(jnp.float32)
+        m = jnp.maximum(jnp.max(jnp.abs(xf)), jnp.finfo(jnp.float32).tiny)
+        p = jnp.abs(xf) / m
+        b = jax.random.bernoulli(key, p).astype(jnp.float32)
+        return (jnp.sign(xf) * m * b).astype(x.dtype)
+
+    def omega(self, d):
+        return math.sqrt(d)  # worst-case bound
+
+    def bits(self, d):
+        return 2 * d + FLOAT_BITS  # {-1,0,1} per coord + scale
+
+
+@dataclass(frozen=True)
+class Int8Stochastic(Unbiased):
+    """Linear int8 quantization with per-tensor max-scale and stochastic
+    rounding (unbiased).  The operator of the q8 ring all-reduce."""
+
+    levels: int = 127
+
+    def __call__(self, key, x):
+        xf = x.astype(jnp.float32)
+        # floor well above subnormal: tiny/levels would flush to zero -> NaN
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-30) / self.levels
+        y = xf / scale
+        lo = jnp.floor(y)
+        u = jax.random.uniform(key, x.shape)
+        q = lo + (u < (y - lo)).astype(jnp.float32)
+        return (q * scale).astype(x.dtype)
+
+    def omega(self, d):
+        # ||C(x)-x||^2 <= d*scale^2/4 <= d * ||x||^2/(4*levels^2) elementwise bound
+        return d / (4.0 * self.levels**2)
+
+    def bits(self, d):
+        return 8 * d + FLOAT_BITS
+
+
+# --------------------------------------------------------------------------
+# Contractive (biased) operators  B(delta)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TopK(Contractive):
+    """Greedy sparsification: keep the K = round(q*d) largest-magnitude
+    coordinates.  TopK in B(K/d)."""
+
+    q: float = 0.1
+
+    def __call__(self, key, x):
+        shape = x.shape
+        xf = _flat(x)
+        d = xf.shape[0]
+        k = _k_of(self.q, d)
+        a = jnp.abs(xf)
+        thresh = jax.lax.top_k(a, k)[0][-1]
+        mask = (a >= thresh).astype(x.dtype)
+        # Tie-break: top_k keeps exactly k, the mask may keep more on ties.
+        # Acceptable for a contractive operator (keeps >= k coords).
+        return jnp.reshape(xf * mask, shape)
+
+    def delta(self, d):
+        return _k_of(self.q, d) / d
+
+    def bits(self, d):
+        k = _k_of(self.q, d)
+        return k * (FLOAT_BITS + math.ceil(math.log2(max(d, 2))))
+
+    @property
+    def stochastic(self):
+        return False
+
+
+@dataclass(frozen=True)
+class ScaledSign(Contractive):
+    """(||x||_1 / d) * sign(x)  (Karimireddy et al.) in B(||x||_1^2/(d||x||_2^2)),
+    worst-case delta = 1/d."""
+
+    def __call__(self, key, x):
+        s = jnp.mean(jnp.abs(x.astype(jnp.float32)))
+        return (s * jnp.sign(x.astype(jnp.float32))).astype(x.dtype)
+
+    def delta(self, d):
+        return 1.0 / d
+
+    def bits(self, d):
+        return d + FLOAT_BITS
+
+    @property
+    def stochastic(self):
+        return False
+
+
+# --------------------------------------------------------------------------
+# Induced compressor (Def. 4 / Lemma 3)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Induced(Unbiased):
+    """C_ind(x) = C(x) + Q(x - C(x)) in U(omega*(1-delta)) for C in B(delta),
+    Q in U(omega).  Turns a biased operator into an unbiased one with
+    strictly smaller variance than Q alone (Horváth & Richtárik, 2021)."""
+
+    c: Contractive = dataclasses.field(default_factory=lambda: TopK(0.1))
+    q: Unbiased = dataclasses.field(default_factory=lambda: RandK(0.1))
+
+    def __call__(self, key, x):
+        kc, kq = jax.random.split(key)
+        cx = self.c(kc, x)
+        return cx + self.q(kq, x - cx)
+
+    def omega(self, d):
+        return self.q.omega(d) * (1.0 - self.c.delta(d))
+
+    def bits(self, d):
+        return self.c.bits(d) + self.q.bits(d)
+
+
+# --------------------------------------------------------------------------
+# Shifted compression (Def. 3 / Lemma 1)
+# --------------------------------------------------------------------------
+
+
+def shifted(q: Compressor, h: jax.Array, key: jax.Array, x: jax.Array) -> jax.Array:
+    """Q_h(x) = h + Q(x - h): the shifted compressor of Definition 3.
+
+    If Q in U(omega; 0) then the returned operator is in U(omega; h)
+    (Lemma 1 with v = h).  This one-liner is the paper's core object.
+    """
+    return h + q(key, x - h)
+
+
+def leaf_keys(key: jax.Array, tree) -> list:
+    """Deterministic per-leaf keys: fold the leaf index into ``key``."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return [jax.random.fold_in(key, i) for i in range(len(leaves))]
+
+
+def tree_compress(q: Compressor, key: jax.Array, tree):
+    """Apply a compressor leaf-wise to a pytree with decorrelated keys."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = [jax.random.fold_in(key, i) for i in range(len(leaves))]
+    out = [q(k, leaf) for k, leaf in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_shifted_compress(q: Compressor, key: jax.Array, tree, shift_tree):
+    """Leaf-wise  h + Q(x - h)  over matching pytrees."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    hleaves = jax.tree_util.tree_leaves(shift_tree)
+    keys = [jax.random.fold_in(key, i) for i in range(len(leaves))]
+    out = [shifted(q, h, k, x) for k, x, h in zip(keys, leaves, hleaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_bits(q: Compressor, tree) -> float:
+    """Total wire bits for one compressed message of this pytree."""
+    return float(
+        sum(q.bits(int(leaf.size)) for leaf in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def tree_size(tree) -> int:
+    return int(sum(leaf.size for leaf in jax.tree_util.tree_leaves(tree)))
+
+
+# Registry used by configs / CLI flags.
+def make_compressor(name: str, **kw) -> Compressor:
+    table = {
+        "identity": Identity,
+        "zero": Zero,
+        "randk": RandK,
+        "bernoulli": BernoulliP,
+        "natural_dithering": NaturalDithering,
+        "natural": NaturalCompression,
+        "terngrad": TernGrad,
+        "int8": Int8Stochastic,
+        "topk": TopK,
+        "sign": ScaledSign,
+        "induced": Induced,
+        # convenience instances of the induced compressor (Lemma 3):
+        # biased TopK wrapped unbiased by RandK / natural compression
+        "induced_topk_randk": lambda q=0.1, **k2: Induced(
+            c=TopK(q), q=RandK(q)),
+        "induced_topk_natural": lambda q=0.1, **k2: Induced(
+            c=TopK(q), q=NaturalCompression()),
+    }
+    if name not in table:
+        raise ValueError(f"unknown compressor {name!r}; have {sorted(table)}")
+    return table[name](**kw)

@@ -1,0 +1,227 @@
+"""Shift update rules — Section 3 of the paper.
+
+A *shift rule* owns everything the meta-algorithm DCGD-SHIFT leaves open
+(the coloured line of Alg. 1): how the per-worker shifts ``h_i`` start,
+how the worker messages are formed from the shifted gradients, and how
+``h_i^{k+1}`` is produced.  Rules are frozen dataclasses (static under
+jit); their mutable state is the stacked shift pytree ``h`` with leading
+worker axis ``W`` plus a bits counter.
+
+All rules implement::
+
+    init(wgrads_like)                  -> h0            (W-stacked pytree)
+    step(q, key, wgrads, h)            -> (g_bar, h_new, bits)
+
+where ``wgrads`` is the stacked per-worker gradient pytree (leaves shaped
+``(W, *param.shape)``), ``g_bar`` is the master's unbiased gradient
+estimator (no worker axis), and ``bits`` is the total uplink wire cost of
+the step (a traced scalar — Rand-DIANA's cost is a random variable).
+
+DIANA-like rules couple the estimator and the shift update (they reuse
+the same compressed message), which is why the rule computes both.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import (
+    Compressor,
+    Contractive,
+    Unbiased,
+    Zero,
+    tree_bits,
+)
+
+
+def _tree_mean_w(tree):
+    """Mean over the leading worker axis, leaf-wise."""
+    return jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0), tree)
+
+
+def worker_compress(q: Compressor, key: jax.Array, wtree):
+    """Compress each worker's slice of a W-stacked pytree independently.
+
+    Workers get decorrelated keys unless the operator declares a shared
+    pattern (correlated Rand-K), in which case every worker samples the
+    same sparsity mask — the property the payload-shrinking collective
+    relies on.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(wtree)
+    shared = bool(getattr(q, "shared_pattern", False))
+    out = []
+    for i, leaf in enumerate(leaves):
+        lk = jax.random.fold_in(key, i)
+        w = leaf.shape[0]
+        if shared or not q.stochastic:
+            keys = jnp.broadcast_to(lk, (w, *lk.shape))
+        else:
+            keys = jax.random.split(lk, w)
+        out.append(jax.vmap(q)(keys, leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def stack_like(tree, w: int):
+    """Zeros with a leading worker axis mirroring ``tree``."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros((w, *a.shape), a.dtype), tree
+    )
+
+
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShiftRule:
+    def init(self, wgrads_like):
+        raise NotImplementedError
+
+    def step(self, q: Unbiased, key, wgrads, h):
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class FixedShift(ShiftRule):
+    """DCGD-SHIFT with constant shifts (eq. 6).  ``h0 = 0`` gives plain
+    DCGD (Khirirat et al., 2018).  Theorem 1: linear to a neighborhood
+    proportional to mean_i ||grad_i(x*) - h_i||^2."""
+
+    def init(self, wgrads_like):
+        return jax.tree_util.tree_map(jnp.zeros_like, wgrads_like)
+
+    def step(self, q, key, wgrads, h):
+        diff = jax.tree_util.tree_map(lambda g, s: g - s, wgrads, h)
+        m = worker_compress(q, key, diff)
+        g_bar = _tree_mean_w(
+            jax.tree_util.tree_map(lambda s, mm: s + mm, h, m)
+        )
+        w = jax.tree_util.tree_leaves(wgrads)[0].shape[0]
+        bits = w * tree_bits(q, jax.tree_util.tree_map(lambda a: a[0], wgrads))
+        return g_bar, h, jnp.asarray(bits, jnp.float32)
+
+
+@dataclass(frozen=True)
+class StarShift(ShiftRule):
+    """DCGD-STAR (eq. 8): oracle shifts around grad_i(x*), optionally
+    compressed by a contractive C.  Theorem 2: exact linear convergence.
+
+    Impractical by construction (needs the optimum) — included as the
+    theoretical reference point, exactly as in the paper.
+    """
+
+    c: Compressor = field(default_factory=Zero)
+
+    def init_with_star(self, wgrads_star):
+        """State carries the oracle gradients; h starts there too."""
+        return {"h": wgrads_star, "star": wgrads_star}
+
+    def init(self, wgrads_like):  # pragma: no cover - guarded
+        raise ValueError("StarShift requires init_with_star(grads_at_optimum)")
+
+    def step(self, q, key, wgrads, state):
+        h, star = state["h"], state["star"]
+        kq, kc = jax.random.split(key)
+        diff = jax.tree_util.tree_map(lambda g, s: g - s, wgrads, h)
+        m = worker_compress(q, kq, diff)
+        g_bar = _tree_mean_w(
+            jax.tree_util.tree_map(lambda s, mm: s + mm, h, m)
+        )
+        # h_i^{k+1} = g*_i + C(grad_i - g*_i)
+        dstar = jax.tree_util.tree_map(lambda g, s: g - s, wgrads, star)
+        ch = worker_compress(self.c, kc, dstar)
+        h_new = jax.tree_util.tree_map(lambda s, cc: s + cc, star, ch)
+        one = jax.tree_util.tree_map(lambda a: a[0], wgrads)
+        w = jax.tree_util.tree_leaves(wgrads)[0].shape[0]
+        bits = w * (tree_bits(q, one) + tree_bits(self.c, one))
+        return g_bar, {"h": h_new, "star": star}, jnp.asarray(bits, jnp.float32)
+
+
+@dataclass(frozen=True)
+class DianaShift(ShiftRule):
+    """Generalized DIANA (eq. 10): h_i += alpha * Q_ind(grad_i - h_i) with
+    Q_ind(x) = C(x) + Q(x - C(x)) the induced compressor; C = Zero recovers
+    classic DIANA (eq. 11, Mishchenko et al. 2019).
+
+    The *same* message is used for the gradient estimator and the shift
+    update (Section 3.2.1), so with C = Zero nothing extra is ever sent.
+    Theorem 3 rate: max{kappa(1 + omega(1-delta)/n), omega(1-delta)}.
+    """
+
+    alpha: float = 0.1
+    c: Compressor = field(default_factory=Zero)
+
+    def init(self, wgrads_like):
+        return jax.tree_util.tree_map(jnp.zeros_like, wgrads_like)
+
+    def step(self, q, key, wgrads, h):
+        kc, kq = jax.random.split(key)
+        diff = jax.tree_util.tree_map(lambda g, s: g - s, wgrads, h)
+        cmsg = worker_compress(self.c, kc, diff)
+        resid = jax.tree_util.tree_map(lambda d, cc: d - cc, diff, cmsg)
+        qmsg = worker_compress(q, kq, resid)
+        # m_full = Q_ind(grad - h) = c + Q(grad - h - c)
+        m_full = jax.tree_util.tree_map(lambda cc, mm: cc + mm, cmsg, qmsg)
+        g_bar = _tree_mean_w(
+            jax.tree_util.tree_map(lambda s, mf: s + mf, h, m_full)
+        )
+        h_new = jax.tree_util.tree_map(
+            lambda s, mf: s + self.alpha * mf, h, m_full
+        )
+        one = jax.tree_util.tree_map(lambda a: a[0], wgrads)
+        w = jax.tree_util.tree_leaves(wgrads)[0].shape[0]
+        bits = w * (tree_bits(q, one) + tree_bits(self.c, one))
+        return g_bar, h_new, jnp.asarray(bits, jnp.float32)
+
+
+@dataclass(frozen=True)
+class RandDianaShift(ShiftRule):
+    """Rand-DIANA (eq. 12, *new in the paper*): the shift is the gradient
+    at a lazily-refreshed reference point, h_i = grad_i(w_i), where w_i is
+    reset to x^k with probability p_i (Loopless-SVRG style).
+
+    Because the refresh happens at the current point, h_i^{k+1} is exactly
+    the gradient the worker just computed — no extra gradient evaluation —
+    but the refresh message is a *full* d-vector, sent rarely (expected
+    p*32d bits/step).  Theorem 4: max{kappa(1 + omega/n), 1/p} with a
+    dramatically simpler analysis than DIANA.
+    """
+
+    p: float = 0.1
+
+    def init(self, wgrads_like):
+        return jax.tree_util.tree_map(jnp.zeros_like, wgrads_like)
+
+    def step(self, q, key, wgrads, h):
+        kq, kb = jax.random.split(key)
+        diff = jax.tree_util.tree_map(lambda g, s: g - s, wgrads, h)
+        m = worker_compress(q, kq, diff)
+        g_bar = _tree_mean_w(
+            jax.tree_util.tree_map(lambda s, mm: s + mm, h, m)
+        )
+        w = jax.tree_util.tree_leaves(wgrads)[0].shape[0]
+        refresh = jax.random.bernoulli(kb, self.p, (w,))
+        def upd(s, g):
+            mask = refresh.reshape((w,) + (1,) * (g.ndim - 1))
+            return jnp.where(mask, g, s)
+        h_new = jax.tree_util.tree_map(upd, h, wgrads)
+        one = jax.tree_util.tree_map(lambda a: a[0], wgrads)
+        d = sum(int(l.size) for l in jax.tree_util.tree_leaves(one))
+        bits = w * tree_bits(q, one) + jnp.sum(refresh) * 32.0 * d
+        return g_bar, h_new, jnp.asarray(bits, jnp.float32)
+
+
+def make_shift_rule(name: str, **kw) -> ShiftRule:
+    table = {
+        "fixed": FixedShift,
+        "dcgd": FixedShift,
+        "star": StarShift,
+        "diana": DianaShift,
+        "rand_diana": RandDianaShift,
+    }
+    if name not in table:
+        raise ValueError(f"unknown shift rule {name!r}; have {sorted(table)}")
+    return table[name](**kw)

@@ -1,0 +1,5 @@
+"""Data pipeline: convex problems (paper fidelity) + synthetic token
+streams (LM substrate)."""
+
+from repro.data.problems import Problem, make_logreg, make_ridge
+from repro.data.tokens import TokenStream, make_batch_specs

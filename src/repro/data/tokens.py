@@ -1,0 +1,93 @@
+"""Deterministic synthetic token streams for LM training/serving.
+
+A ``TokenStream`` yields batches derived purely from (seed, step) so every
+host in a multi-host launch can materialize ITS shard of the global batch
+without any coordination — the standard trick for data-parallel input
+pipelines without a distributed filesystem.
+
+The stream is a Zipf-ish unigram mixture with short-range structure
+(Markov-flavoured: token_{t+1} depends on token_t) so the ~100M example
+model has something learnable; purely uniform tokens would give a flat
+loss.  Modality extras (VLM patch / audio frame embeddings) are Gaussian
+stubs per the brief.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+@dataclass(frozen=True)
+class TokenStream:
+    cfg: ModelConfig
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_index: int = 0
+    host_count: int = 1
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.host_count == 0
+        return self.global_batch // self.host_count
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(self.seed), step * self.host_count + self.host_index
+        )
+        return synth_batch(key, self.cfg, self.seq_len, self.local_batch)
+
+
+def synth_batch(key, cfg: ModelConfig, seq_len: int, batch: int):
+    """One batch of learnable synthetic tokens (+ modality stubs)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    v = cfg.vocab_size
+    text_len = seq_len
+    if cfg.modality == "vision_prefix":
+        text_len = max(2, seq_len - cfg.num_prefix_tokens)
+
+    # Markov-ish stream: x_{t+1} = (a * x_t + b_t) mod V with sparse resets.
+    a = 6364136223846793005 % v or 1
+    x0 = jax.random.randint(k1, (batch,), 0, v, jnp.int32)
+    noise = jax.random.randint(k2, (batch, text_len), 0, 97, jnp.int32)
+
+    def step(x, n):
+        nxt = (x * 31 + n) % v
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(step, x0, noise.T)
+    out = {"tokens": toks.T.astype(jnp.int32)}
+
+    if cfg.modality == "vision_prefix":
+        out["prefix"] = jax.random.normal(
+            k3, (batch, cfg.num_prefix_tokens, cfg.d_model), jnp.float32
+        ) * 0.02
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.random.normal(
+            k3, (batch, seq_len, cfg.d_model), jnp.float32
+        ) * 0.02
+    return out
+
+
+def make_batch_specs(cfg: ModelConfig, shape: InputShape,
+                     dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a TRAIN batch —
+    the dry-run path (no allocation).  Decode specs live in launch.serve."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.modality == "vision_prefix":
+        specs["tokens"] = jax.ShapeDtypeStruct(
+            (b, max(2, s - cfg.num_prefix_tokens)), jnp.int32
+        )
+        specs["prefix"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_prefix_tokens, cfg.d_model), jnp.float32
+        )
+    if cfg.is_encoder_decoder:
+        specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.float32)
+    return specs

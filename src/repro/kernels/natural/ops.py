@@ -1,0 +1,32 @@
+"""jit'd public wrapper: fused shifted natural compression on arbitrary
+arrays (flatten -> pad to (rows,128) -> kernel -> unpad)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.natural.kernel import (
+    DEFAULT_BLOCK_ROWS,
+    LANE,
+    shifted_natural_2d,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def shifted_natural(key, g, h, *, interpret: bool = True):
+    """h + C_nat(g - h) for any-shape g/h (same shape & dtype)."""
+    shape, dtype = g.shape, g.dtype
+    n = g.size
+    rows = -(-n // LANE)
+    block = min(DEFAULT_BLOCK_ROWS, rows)
+    rows_pad = -(-rows // block) * block
+    pad = rows_pad * LANE - n
+
+    gf = jnp.pad(jnp.ravel(g), (0, pad)).reshape(rows_pad, LANE)
+    hf = jnp.pad(jnp.ravel(h), (0, pad)).reshape(rows_pad, LANE)
+    u = jax.random.uniform(key, (rows_pad, LANE), jnp.float32)
+    out = shifted_natural_2d(gf, hf, u, block_rows=block, interpret=interpret)
+    return jnp.ravel(out)[:n].reshape(shape).astype(dtype)

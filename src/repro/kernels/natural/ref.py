@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused shifted natural-compression estimator."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def shifted_natural_ref(g, h, u):
+    """out = h + C_nat(g - h) with the SAME uniforms as the kernel."""
+    x = g.astype(jnp.float32) - h.astype(jnp.float32)
+    a = jnp.abs(x)
+    e = jnp.floor(jnp.log2(jnp.maximum(a, 1e-38)))
+    lo = jnp.exp2(e)
+    p_hi = a / lo - 1.0
+    q = jnp.where(u.astype(jnp.float32) < p_hi, 2.0 * lo, lo)
+    q = jnp.where(a == 0.0, 0.0, q) * jnp.sign(x)
+    return (h.astype(jnp.float32) + q).astype(g.dtype)

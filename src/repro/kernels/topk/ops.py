@@ -1,0 +1,31 @@
+"""jit'd public wrapper: block Top-K sparsification with keep-fraction q
+on arbitrary arrays."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk.kernel import (
+    DEFAULT_BLOCK_ROWS,
+    LANE,
+    block_topk_2d,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "block_rows", "interpret"))
+def block_topk(x, *, q: float = 0.1, block_rows: int = DEFAULT_BLOCK_ROWS,
+               interpret: bool = True):
+    """Keep ~q of each 8192-element block by magnitude (B(q) operator)."""
+    shape, dtype = x.shape, x.dtype
+    n = x.size
+    rows = -(-n // LANE)
+    block = min(block_rows, rows)
+    rows_pad = -(-rows // block) * block
+    pad = rows_pad * LANE - n
+    xf = jnp.pad(jnp.ravel(x), (0, pad)).reshape(rows_pad, LANE)
+    k = max(1, int(round(q * block * LANE)))
+    out = block_topk_2d(xf, k=k, block_rows=block, interpret=interpret)
+    return jnp.ravel(out)[:n].reshape(shape).astype(dtype)

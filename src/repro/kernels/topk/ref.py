@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for block Top-K: exact per-block threshold via
+lax.top_k, keeping ties like the kernel (|x| >= kth magnitude)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_topk_ref(x, *, k: int, block: int):
+    """x: (R, 128) viewed as consecutive blocks of ``block`` rows."""
+    r, lane = x.shape
+    assert r % block == 0
+    nb = r // block
+    xb = x.reshape(nb, block * lane)
+    a = jnp.abs(xb.astype(jnp.float32))
+    kth = jax.lax.top_k(a, k)[0][:, -1]          # (nb,) kth magnitude
+    mask = a >= kth[:, None]
+    out = jnp.where(mask, xb, 0)
+    return out.reshape(r, lane).astype(x.dtype)

@@ -1,0 +1,29 @@
+"""jit'd public wrapper: WKV6 on model-layout tensors (B, T, H, K)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import DEFAULT_CHUNK, wkv6_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, *, chunk: int = DEFAULT_CHUNK,
+         interpret: bool = True):
+    """Model-layout WKV6.  r,k,w: (B,T,H,K); v: (B,T,H,V); u: (H,K).
+    Returns (y (B,T,H,V) f32, s_final (B,H,K,V) f32) — drop-in for
+    ``repro.models.rwkv6.wkv_scan`` with zero initial state."""
+    b, t, h, dk = r.shape
+    dv = v.shape[-1]
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, t, x.shape[-1])
+
+    rb, kb, vb, wb = map(to_bh, (r, k, v, w))
+    ub = jnp.broadcast_to(u[None], (b, h, dk)).reshape(b * h, dk)
+    y, s = wkv6_pallas(rb, kb, vb, wb, ub, chunk=chunk, interpret=interpret)
+    y = y.reshape(b, h, t, dv).transpose(0, 2, 1, 3)
+    return y, s.reshape(b, h, dk, dv)

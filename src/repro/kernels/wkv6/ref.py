@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the WKV6 kernel: the exact sequential recurrence
+(independent re-implementation; the model's ``rwkv6.wkv_scan`` is tested
+against this too)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u):
+    """r,k,w: (BH, T, K); v: (BH, T, V); u: (BH, K).
+    Returns (y (BH,T,V) f32, s_final (BH,K,V) f32)."""
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    s0 = jnp.zeros((bh, dk, dv), jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                       # (BH,K),(BH,K),(BH,V),(BH,K)
+        kv = kt[:, :, None] * vt[:, None, :]      # (BH,K,V)
+        y = jnp.einsum("bk,bkv->bv", rt, s + uf[:, :, None] * kv)
+        return wt[:, :, None] * s + kv, y
+
+    xs = (rf.transpose(1, 0, 2), kf.transpose(1, 0, 2),
+          vf.transpose(1, 0, 2), wf.transpose(1, 0, 2))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2), s_fin

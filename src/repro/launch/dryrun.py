@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod AOT dry-run: lower + compile every (architecture x input
+shape x mesh) combination against 512 placeholder devices; record
+memory_analysis, cost_analysis and the collective-bytes HLO parse for
+the roofline table (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+Outputs one JSON per combination under experiments/dryrun/.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.configs.base import CompressionConfig, InputShape, ModelConfig, TrainConfig
+from repro.data.tokens import make_batch_specs
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh, n_workers
+from repro.launch.serve import decode_specs, decode_state_pspecs, serving_config
+from repro.launch.train import batch_pspecs, build_train_step, init_state, state_pspecs
+from repro.models import model as M
+
+tmap = jax.tree_util.tree_map
+
+
+def _named(mesh, specs):
+    return tmap(
+        lambda sp: NamedSharding(mesh, sp),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def skip_reason(arch: str, shape: InputShape) -> str | None:
+    cfg = get_config(arch)
+    if shape.name == "long_500k" and cfg.arch_type == "audio":
+        return "long_500k skipped for audio enc-dec (DESIGN.md §Arch-applicability)"
+    return None
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6*N*D for training, 2*N*D forward-only; N = active params."""
+    n = M.count_params_analytic(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens
+
+
+def lower_train(cfg: ModelConfig, shape: InputShape, mesh,
+                tcfg: TrainConfig):
+    w = n_workers(mesh)
+    step = build_train_step(cfg, tcfg, mesh, w)
+    state_shapes = jax.eval_shape(
+        lambda k: init_state(k, cfg, tcfg, w), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    st_specs = state_pspecs(state_shapes, mesh, tcfg)
+    batch_shapes = make_batch_specs(cfg, shape)
+    b_specs = batch_pspecs(batch_shapes, mesh)
+    with jax.sharding.set_mesh(mesh):
+        jfn = jax.jit(
+            step,
+            in_shardings=(_named(mesh, st_specs), _named(mesh, b_specs)),
+            out_shardings=(_named(mesh, st_specs), None),
+            donate_argnums=(0,),
+        )
+        return jfn.lower(state_shapes, batch_shapes)
+
+
+def lower_eval(cfg: ModelConfig, shape: InputShape, mesh):
+    """Prefill = forward pass over the full sequence (logits only)."""
+    from repro.dist import params_pspecs, validate_pspecs
+
+    def eval_step(params, batch):
+        logits, _ = M.forward_train(params, cfg, batch)
+        return logits[:, -1]
+
+    params_shapes = jax.eval_shape(
+        lambda k: M.init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    p_specs = validate_pspecs(
+        params_shapes, params_pspecs(params_shapes), mesh
+    )
+    batch_shapes = make_batch_specs(cfg, shape)
+    b_specs = batch_pspecs(batch_shapes, mesh)
+    with jax.sharding.set_mesh(mesh):
+        jfn = jax.jit(
+            eval_step,
+            in_shardings=(_named(mesh, p_specs), _named(mesh, b_specs)),
+            out_shardings=None,
+        )
+        return jfn.lower(params_shapes, batch_shapes)
+
+
+def lower_decode(cfg: ModelConfig, shape: InputShape, mesh):
+    from repro.dist import params_pspecs, validate_pspecs
+    from repro.launch.serve import build_serve_step
+
+    scfg = serving_config(cfg, shape.name)
+    params_shapes, state_shapes, tok, pos = decode_specs(
+        scfg, shape.seq_len, shape.global_batch
+    )
+    p_specs = validate_pspecs(params_shapes, params_pspecs(params_shapes), mesh)
+    s_specs = decode_state_pspecs(state_shapes, mesh)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tok_spec = P(data_axes)
+    # downgrade tok batch spec if indivisible (long_500k B=1)
+    nshards = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in data_axes:
+        nshards *= sizes[a]
+    if tok.shape[0] % nshards:
+        tok_spec = P()
+    step = build_serve_step(scfg)
+    with jax.sharding.set_mesh(mesh):
+        jfn = jax.jit(
+            step,
+            in_shardings=(
+                _named(mesh, p_specs),
+                _named(mesh, s_specs),
+                NamedSharding(mesh, tok_spec),
+                NamedSharding(mesh, P()),
+            ),
+            out_shardings=(None, _named(mesh, s_specs)),
+        )
+        return jfn.lower(params_shapes, state_shapes, tok, pos)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            tcfg: TrainConfig, out_dir: str, save_hlo: bool = False) -> Dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    mesh_tag = "pod512" if multi_pod else "pod256"
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "kind": shape.kind,
+    }
+    reason = skip_reason(arch, shape)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            lowered = lower_train(cfg, shape, mesh, tcfg)
+        elif shape.kind == "prefill":
+            lowered = lower_eval(cfg, shape, mesh)
+        else:
+            lowered = lower_decode(cfg, shape, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        from repro.launch import hlo_cost
+        corrected = hlo_cost.analyze(hlo)
+        coll = hlo_stats.collective_bytes(hlo)  # static instruction counts
+        mf = model_flops(
+            serving_config(cfg, shape_name) if shape.kind == "decode" else cfg,
+            shape,
+        )
+        n_chips = 512 if multi_pod else 256
+        roof = hlo_stats.roofline(corrected, cost, mf, n_chips)
+
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            "roofline": roof,
+            "collective_counts": coll.get("_counts"),
+        })
+        if save_hlo:
+            with open(os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_tag}.hlo"), "w") as f:
+                f.write(hlo)
+    except Exception as e:  # record failures — they are bugs to fix
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--comm-mode", default="dense",
+                    choices=["dense", "randk_shared", "q8_ring"])
+    ap.add_argument("--compressor", default="natural")
+    ap.add_argument("--shift-rule", default="diana")
+    ap.add_argument("--no-compression", action="store_true")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    tcfg = TrainConfig(
+        compression=CompressionConfig(
+            enabled=not args.no_compression,
+            compressor=args.compressor,
+            shift_rule=args.shift_rule,
+            comm_mode=args.comm_mode,
+        )
+    )
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'512' if mp else '256'}"
+                print(f"=== {tag} ...", flush=True)
+                rec = run_one(arch, shape, mp, tcfg, args.out,
+                              save_hlo=args.save_hlo)
+                results.append(rec)
+                fname = os.path.join(
+                    args.out,
+                    f"{arch}_{shape}_{'pod512' if mp else 'pod256'}"
+                    f"_{tcfg.compression.comm_mode}.json",
+                )
+                with open(fname, "w") as f:
+                    json.dump(rec, f, indent=2)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']} "
+                             f"c={r['compute_s']:.3f}s m={r['memory_s']:.3f}s "
+                             f"coll={r['collective_s']:.3f}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"=== {tag}: {status}{extra}", flush=True)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\nDRY-RUN SUMMARY: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

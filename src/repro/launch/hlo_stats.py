@@ -1,0 +1,113 @@
+"""Roofline accounting from compiled (AOT) artifacts.
+
+``collective_bytes`` parses StableHLO/HLO text and sums the result-shape
+bytes of every collective op, bucketed by kind.  The result shape is the
+per-device tensor the op produces — a consistent proxy for wire bytes
+(exact for all-reduce/all-to-all/collective-permute; the gathered size
+for all-gather, i.e. an upper bound on what one device receives).
+
+``roofline`` combines cost_analysis with the TPU v5e constants from the
+brief: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link (conservative 1-link model)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# result shape right after '=' e.g.:  %x = f32[8,128]{1,0} all-reduce(
+_INSTR_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^=]*?\b("
+    + "|".join(_COLLECTIVES)
+    + r")(?:-start|-done)?\(",
+)
+# tuple-result form: %x = (f32[4,8], f32[4,8]) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-kind result-shape bytes of collectives in an HLO module text."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "-done(" in stripped:
+            continue  # started ops already counted at -start
+        m = _INSTR_RE.search(stripped)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            counts[kind] += 1
+            continue
+        m = _TUPLE_RE.search(stripped)
+        if m:
+            shapes, kind = m.groups()
+            for dt, dm in _SHAPE_RE.findall(shapes):
+                out[kind] += _shape_bytes(dt, dm)
+            counts[kind] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+def roofline(corrected: Dict[str, Any], raw_cost: Dict[str, Any],
+             model_flops_global: float, n_chips: int) -> Dict[str, Any]:
+    """Three roofline terms (seconds, per chip).
+
+    ``corrected`` is the loop-aware HLO cost model output
+    (``repro.launch.hlo_cost.analyze``); ``raw_cost`` is XLA's own
+    ``cost_analysis()`` (kept for reference — it counts while bodies
+    once, so scanned-layer programs under-report there).
+    """
+    flops = float(corrected["flops"])
+    bytes_hbm = float(corrected["bytes"])
+    cbytes = float(corrected["collective_bytes"])
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_hbm / HBM_BW
+    t_coll = cbytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    model_flops_chip = model_flops_global / n_chips
+    return {
+        **terms,
+        "dominant": dom,
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_hbm,
+        "collective_bytes": cbytes,
+        "collective_by_kind": corrected["collective_bytes_by_kind"],
+        "raw_cost_analysis_flops": float(raw_cost.get("flops", 0.0) or 0.0),
+        "raw_cost_analysis_bytes": float(
+            raw_cost.get("bytes accessed", 0.0)
+            or raw_cost.get("bytes_accessed", 0.0) or 0.0
+        ),
+        "model_flops_global": model_flops_global,
+        "model_flops_per_chip": model_flops_chip,
+        "useful_flops_frac": (model_flops_chip / flops) if flops else 0.0,
+        "unresolved_whiles": corrected["unresolved_whiles"],
+    }

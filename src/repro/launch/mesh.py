@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Functions, not module-level constants — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod ("data","model"); multi_pod prepends a
+    2-way "pod" axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has — used by CPU smoke tests and examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def n_workers(mesh) -> int:
+    """DCGD worker count = product of data-like axes (pod x data)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)

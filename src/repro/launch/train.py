@@ -1,0 +1,302 @@
+"""Distributed training step with first-class shifted compression.
+
+This is Algorithm 1 (DCGD-SHIFT) mapped onto the TPU mesh:
+
+  * "worker i" = one (pod, data) slice; per-worker gradients come from a
+    vmap over the worker axis (``dist.worker_grads``), sharded
+    P(("pod","data"), ...).
+  * "send m_i to master + average" = a compressed tree-mean
+    (``dist.collectives``): dense psum / shared-pattern Rand-K /
+    int8 ring.
+  * The master's aggregated shift h^k is tracked INCREMENTALLY
+    (Alg. 1 line 14 as the paper notes: h^{k+1} = h^k + alpha*m^k for
+    DIANA) so no uncompressed collective ever materializes for it.
+
+Shift-rule updates implemented here (production path; the reference
+parameter-server algebra lives in ``repro.core``):
+
+  fixed       h_i^k = h_i^0 (=0)  — plain DCGD
+  diana       h_i += alpha * m_i ;  h_bar += alpha * m_bar
+  rand_diana  h_i = grad_i w.p. p (worker-local refresh); the h_bar
+              correction is a dense mean of the sparse refresh deltas
+              (expected p * full message — noted in EXPERIMENTS.md).
+  vr_gdci     Algorithm 2 — compressed ITERATES (the model-broadcast
+              direction): delta_i = Q(x - gamma*SGD_dir_i - h_i);
+              h_i += alpha*delta_i; x = (1-eta)x + eta(delta_bar+h_bar).
+              Uses the plain SGD direction per worker (the paper's
+              gradient mapping); the AdamW/momentum path does not apply
+              to iterate compression.
+
+CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b ...
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config, INPUT_SHAPES
+from repro.configs.base import CompressionConfig, ModelConfig, TrainConfig
+from repro.core.compressors import make_compressor
+from repro.core.shift_rules import worker_compress
+from repro.dist import (
+    compressed_tree_mean,
+    params_pspecs,
+    per_worker_grads,
+    split_batch,
+    validate_pspecs,
+    worker_stacked_pspec,
+)
+from repro.data.tokens import TokenStream
+from repro.launch.mesh import make_host_mesh, n_workers
+from repro.models import model as M
+from repro.optim import make_optimizer
+
+tmap = jax.tree_util.tree_map
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    h: Any            # worker-stacked shifts (or None when disabled/fixed-0)
+    h_bar: Any        # master aggregated shift (params-like; None if zero)
+    key: jax.Array
+    step: jax.Array
+    bits: jax.Array   # cumulative uplink bits (model-size units, f32)
+
+
+def init_state(key, cfg: ModelConfig, tcfg: TrainConfig, w: int) -> TrainState:
+    kp, kk = jax.random.split(key)
+    params = M.init_params(kp, cfg)
+    opt = make_optimizer(tcfg).init(params)
+    comp = tcfg.compression
+    if comp.enabled and comp.shift_rule in ("diana", "rand_diana", "vr_gdci"):
+        # shift state in the gradient dtype (bf16 at scale) — a full f32
+        # copy per worker would dominate HBM for the 32B archs
+        h = tmap(lambda p: jnp.zeros((w, *p.shape), p.dtype), params)
+        h_bar = tmap(lambda p: jnp.zeros(p.shape, p.dtype), params)
+    else:
+        h = None
+        h_bar = None
+    return TrainState(params, opt, h, h_bar, kk,
+                      jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+
+
+def _message_bits(q, grads_one) -> float:
+    from repro.core.compressors import tree_bits
+    return tree_bits(q, grads_one)
+
+
+def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int):
+    """Returns train_step(state, batch) -> (state, metrics) — pure, jittable."""
+    if getattr(tcfg, "train_attn_chunk", 0) and tcfg.train_attn_chunk > 0:
+        cfg = cfg.with_(attn_q_chunk=tcfg.train_attn_chunk)
+    comp = tcfg.compression
+    optimizer = make_optimizer(tcfg)
+    q = make_compressor(comp.compressor, **dict(comp.compressor_kwargs)) if comp.enabled else None
+
+    wspecs = None
+    if comp.enabled and comp.comm_mode in ("q8_ring", "randk_shared") and mesh is not None:
+        # worker-stacked grad specs so the ring's shard_map keeps the
+        # model-axis sharding of inner dims (no whole-leaf gathers)
+        from jax.sharding import PartitionSpec as _P
+        params_shapes = jax.eval_shape(
+            lambda k: M.init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+        )
+        inner = validate_pspecs(params_shapes, params_pspecs(params_shapes), mesh)
+        wspecs = tmap(lambda sp: worker_stacked_pspec(mesh, sp), inner,
+                      is_leaf=lambda x: isinstance(x, _P))
+        wshapes = tmap(lambda p: jax.ShapeDtypeStruct((w, *p.shape), p.dtype),
+                       params_shapes)
+        wspecs = validate_pspecs(wshapes, wspecs, mesh)
+
+    def loss_fn(params, batch):
+        return M.train_loss(params, cfg, batch)
+
+    def vr_gdci_step(state: TrainState, batch):
+        """Algorithm 2 (VR-GDCI) on the LM: compressed-iterate exchange.
+        x' = (1-eta) x + eta * mean_i [h_i + Q(T_i(x) - h_i)] with
+        T_i(x) = x - gamma * grad_i, h_i += alpha * Q(...)."""
+        wbatch = split_batch(batch, w)
+        grads, loss, metrics = per_worker_grads(loss_fn, state.params, wbatch)
+        key, k1, k2 = jax.random.split(state.key, 3)
+        gamma = tcfg.learning_rate
+        eta, alpha = comp.gdci_eta, comp.shift_alpha
+        target = tmap(
+            lambda x, g, s: (x[None] - gamma * g.astype(x.dtype)) - s,
+            state.params, grads, state.h,
+        )
+        delta = worker_compress(q, k1, target)
+        h = tmap(lambda s, d: s + alpha * d, state.h, delta)
+        delta_bar = compressed_tree_mean(
+            delta, comp.comm_mode, k2, mesh, randk_q=comp.randk_q,
+            wspecs=wspecs,
+        )
+        new_params = tmap(
+            lambda x, db, hb: ((1.0 - eta) * x.astype(jnp.float32)
+                               + eta * (db + hb).astype(jnp.float32)
+                               ).astype(x.dtype),
+            state.params, delta_bar, state.h_bar,
+        )
+        h_bar = tmap(lambda hb, db: hb + alpha * db, state.h_bar, delta_bar)
+        one = tmap(lambda g: g[0], grads)
+        bits = state.bits + w * jnp.asarray(_message_bits(q, one), jnp.float32)
+        new_state = TrainState(new_params, state.opt, h, h_bar, key,
+                               state.step + 1, bits)
+        return new_state, {**metrics, "loss": loss, "bits": bits}
+
+    def train_step(state: TrainState, batch):
+        if comp.enabled and comp.shift_rule == "vr_gdci":
+            return vr_gdci_step(state, batch)
+        wbatch = split_batch(batch, w)
+        grads, loss, metrics = per_worker_grads(loss_fn, params := state.params, wbatch)
+        key, k1, k2, k3 = jax.random.split(state.key, 4)
+        bits = state.bits
+
+        if not comp.enabled:
+            g_bar = compressed_tree_mean(grads, "dense", k1, mesh)
+            h, h_bar = state.h, state.h_bar
+        else:
+            if state.h is not None:
+                diff = tmap(lambda g, s: g - s, grads, state.h)
+            else:
+                diff = grads
+            m = worker_compress(q, k1, diff)
+            m_bar = compressed_tree_mean(
+                m, comp.comm_mode, k2, mesh, randk_q=comp.randk_q,
+                wspecs=wspecs,
+            )
+            h, h_bar = state.h, state.h_bar
+            if comp.shift_rule in ("fixed", "dcgd"):
+                g_bar = m_bar                     # h == 0
+            elif comp.shift_rule == "diana":
+                g_bar = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
+                a = comp.shift_alpha
+                h = tmap(lambda s, mm: s + a * mm, h, m)
+                h_bar = tmap(lambda hb, mb: hb + a * mb, h_bar, m_bar)
+            elif comp.shift_rule == "rand_diana":
+                g_bar = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
+                refresh = jax.random.bernoulli(k3, comp.shift_p, (w,))
+                def upd(s, g):
+                    mask = refresh.reshape((w,) + (1,) * (g.ndim - 1))
+                    return jnp.where(mask, g, s)
+                delta = tmap(lambda s, g: upd(s, g) - s, h, grads)
+                h = tmap(lambda s, d: s + d, h, delta)
+                h_bar = tmap(
+                    lambda hb, d: hb + jnp.mean(d, axis=0), h_bar, delta
+                )
+            else:
+                raise ValueError(comp.shift_rule)
+            one = tmap(lambda g: g[0], grads)
+            bits = bits + w * jnp.asarray(_message_bits(q, one), jnp.float32)
+
+        new_params, opt = optimizer.update(g_bar, state.opt, state.params)
+        new_state = TrainState(new_params, opt, h, h_bar, key,
+                               state.step + 1, bits)
+        metrics = {**metrics, "loss": loss, "bits": bits}
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly for the production mesh
+# ---------------------------------------------------------------------------
+
+
+def state_pspecs(state_shapes, mesh, tcfg: TrainConfig):
+    """PartitionSpecs for a TrainState, validated against the mesh."""
+    fsdp = tcfg.fsdp_params
+    p_specs = params_pspecs(state_shapes.params, fsdp=fsdp)
+    p_specs = validate_pspecs(state_shapes.params, p_specs, mesh)
+    opt_data = tcfg.zero_opt_state
+    m_specs = params_pspecs(state_shapes.opt.m, fsdp=opt_data)
+    m_specs = validate_pspecs(state_shapes.opt.m, m_specs, mesh)
+    v_specs = params_pspecs(state_shapes.opt.v, fsdp=opt_data)
+    v_specs = validate_pspecs(state_shapes.opt.v, v_specs, mesh)
+
+    if state_shapes.h is not None:
+        inner = params_pspecs(state_shapes.params, fsdp=False)
+        h_specs = tmap(lambda sp: worker_stacked_pspec(mesh, sp), inner,
+                       is_leaf=lambda x: isinstance(x, P))
+        h_specs = validate_pspecs(state_shapes.h, h_specs, mesh)
+        hb_specs = params_pspecs(state_shapes.h_bar, fsdp=True)
+        hb_specs = validate_pspecs(state_shapes.h_bar, hb_specs, mesh)
+    else:
+        h_specs = None
+        hb_specs = None
+
+    return TrainState(
+        params=p_specs,
+        opt=type(state_shapes.opt)(step=P(), m=m_specs, v=v_specs),
+        h=h_specs,
+        h_bar=hb_specs,
+        key=P(),
+        step=P(),
+        bits=P(),
+    )
+
+
+def batch_pspecs(batch_shapes, mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return tmap(lambda _: P(axes), batch_shapes)
+
+
+# ---------------------------------------------------------------------------
+# CLI driver (host-scale): trains a reduced/smoke or small full config
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke variant of the arch")
+    ap.add_argument("--compressor", default="natural")
+    ap.add_argument("--shift-rule", default="diana")
+    ap.add_argument("--no-compression", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args(argv)
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    cfg = cfg.with_(dtype="float32")
+    comp = CompressionConfig(
+        enabled=not args.no_compression,
+        compressor=args.compressor,
+        shift_rule=args.shift_rule,
+    )
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(1, args.steps // 10),
+                       compression=comp)
+    mesh = make_host_mesh()
+    w = n_workers(mesh)
+    if args.batch % w:
+        raise SystemExit(f"--batch must be divisible by {w} workers")
+
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg, w)
+    step_fn = jax.jit(build_train_step(cfg, tcfg, mesh, w))
+    stream = TokenStream(cfg, args.seq, args.batch)
+
+    print(f"arch={args.arch} params={M.count_params_analytic(cfg):,} "
+          f"workers={w} compression={comp.enabled}")
+    t0 = time.time()
+    for i in range(args.steps):
+        state, metrics = step_fn(state, stream.batch(i))
+        if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"bits {float(metrics['bits']):.3e}  "
+                  f"({time.time()-t0:.1f}s)")
+    return state
+
+
+if __name__ == "__main__":
+    main()

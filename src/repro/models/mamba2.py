@@ -1,0 +1,200 @@
+"""Mamba-2 (SSD) block — the state-space backbone of Zamba2
+(arXiv:2411.15242 uses Mamba2 blocks; SSD per arXiv:2405.21060).
+
+Per head with state S in R^{N x P} (N = ssm_state, P = head dim):
+
+    a_t = exp(-exp(A_log) * dt_t)            # scalar decay per head
+    S_t = a_t S_{t-1} + B_t (dt_t x_t)^T     # B_t in R^N, x_t in R^P
+    y_t = C_t^T S_t + D * x_t
+
+dt is a softplus of a data-dependent projection (+ bias); B/C are shared
+across heads within a group (here: one group).  Short causal conv1d over
+the (x, B, C) streams precedes the SSM, as in the reference Mamba2.
+
+The recurrence is an exact ``lax.scan``; O(1) decode state = (conv tail,
+S).  Shapes follow the config: d_inner = 2 * d_model, P = rwkv_head_dim.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _normal, pdtype, rmsnorm, init_rmsnorm
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    p = cfg.rwkv_head_dim            # head dim
+    h = d_inner // p                 # heads
+    n = cfg.ssm_state
+    return d_inner, h, p, n
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_inner, h, p, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    ks = jax.random.split(key, 6)
+    dt = pdtype(cfg)
+    return {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "w_in": _normal(ks[0], (d, 2 * d_inner + 2 * n + h), dt, 0.02),
+        "conv_w": _normal(ks[1], (cfg.conv_kernel, conv_dim), dt, 0.02),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.full((h,), -4.6, jnp.float32),   # softplus^-1(0.01)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": init_rmsnorm(d_inner, cfg),
+        "w_out": _normal(ks[2], (d_inner, d), dt, 0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _ssd_scan(x, b_t, c_t, dt_t, a_log, d_skip, s0):
+    """x (B,T,H,P); b_t,c_t (B,T,N); dt_t (B,T,H); s0 (B,H,N,P)."""
+    a = -jnp.exp(a_log)                                   # (H,)
+
+    def step(s, inp):
+        xt, bt, ct, dtt = inp                             # (B,H,P),(B,N),(B,N),(B,H)
+        decay = jnp.exp(a[None] * dtt)                    # (B,H)
+        upd = jnp.einsum("bn,bhp->bhnp", bt, xt * dtt[..., None])
+        s = decay[..., None, None] * s + upd
+        yt = jnp.einsum("bn,bhnp->bhp", ct, s) + d_skip[None, :, None] * xt
+        return s, yt
+
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        b_t.transpose(1, 0, 2),
+        c_t.transpose(1, 0, 2),
+        dt_t.transpose(1, 0, 2),
+    )
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s_fin
+
+
+def _ssd_chunked(x, b_t, c_t, dt_t, a_log, d_skip, s0, chunk: int = 128):
+    """SSD chunked (matmul) form of the same recurrence — the Mamba-2
+    insight mapped to the MXU.  The sequential scan round-trips the
+    (B,H,N,P) state through HBM EVERY time step; the chunked form
+    materializes it once per chunk and turns intra-chunk work into
+    batched matmuls:
+
+      y_t = C_t P_t S_prev + sum_{s<=t} (C_t.B_s) exp(c_t - c_s) dt_s x_s
+      S  <- exp(c_L) S_prev + sum_s exp(c_L - c_s) dt_s B_s x_s^T
+
+    with c_t the intra-chunk cumulative log-decay.  All pairwise decay
+    factors are exp(non-positive) — no overflow for any decay rate
+    (unlike the factored q/k-scaling form).  f32 throughout.
+
+    x (B,T,H,P); b_t,c_t (B,T,N); dt_t (B,T,H); s0 (B,H,N,P).
+    """
+    bsz, t, h, pdim = x.shape
+    n = b_t.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    a = -jnp.exp(a_log)                                    # (H,) negative
+
+    xr = (x * dt_t[..., None]).reshape(bsz, nc, chunk, h, pdim)
+    br = b_t.reshape(bsz, nc, chunk, n)
+    cr = c_t.reshape(bsz, nc, chunk, n)
+    # intra-chunk cumulative log decays (B, nc, L, H), non-positive steps
+    la = (a[None, None] * dt_t).reshape(bsz, nc, chunk, h)
+    cum = jnp.cumsum(la, axis=2)                           # c_t
+
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_body(s, inp):
+        """One chunk: exact pairwise decay (L,L,H) built INSIDE the scan
+        body (a 67 MB transient at the zamba2 train shape) — computing it
+        for all chunks at once would be O(T*L) = 134 GB.  exp(c_t - c_s)
+        with s <= t is exp(<=0): exact for arbitrarily strong
+        data-dependent decay (no factored u*w cancellation — see
+        tests/test_ssm_chunked.py::test_ssd_chunked_extreme_decay)."""
+        xr_c, br_c, cr_c, cum_c = inp                      # (B,L,H,P) etc.
+        dmat = cum_c[:, :, None, :] - cum_c[:, None, :, :]  # (B,L,L,H)
+        dmat = jnp.where(tril[None, :, :, None], jnp.exp(dmat), 0.0)
+        g = jnp.einsum("btn,bsn->bts", cr_c, br_c)          # (B,L,L)
+        y_intra = jnp.einsum("bts,btsh,bshp->bthp", g, dmat, xr_c)
+        # contribution of the incoming state
+        u = jnp.exp(cum_c)                                  # (B,L,H) <= 1
+        y_inter = jnp.einsum("btn,bth,bhnp->bthp", cr_c, u, s)
+        # state update: S <- exp(c_L) S + sum_s exp(c_L - c_s) B_s xr_s
+        fac = jnp.exp(cum_c[:, -1:, :] - cum_c)             # (B,L,H) <= 1
+        s_in = jnp.einsum("bsn,bsh,bshp->bhnp", br_c, fac, xr_c)
+        s = u[:, -1, :, None, None] * s + s_in
+        return s, y_intra + y_inter
+
+    xs = (
+        xr.transpose(1, 0, 2, 3, 4),
+        br.transpose(1, 0, 2, 3),
+        cr.transpose(1, 0, 2, 3),
+        cum.transpose(1, 0, 2, 3),
+    )
+    s_fin, ys = jax.lax.scan(chunk_body, s0, xs)            # ys (nc,B,L,H,P)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, t, h, pdim)
+    return y + d_skip[None, None, :, None] * x, s_fin
+
+
+def _causal_conv(u, w, b, tail=None):
+    """Depthwise causal conv1d. u (B,T,C); w (K,C); tail (B,K-1,C)."""
+    kk = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], kk - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([tail, u], axis=1)
+    out = sum(up[:, i : i + u.shape[1]] * w[i][None, None] for i in range(kk))
+    return jax.nn.silu(out + b), up[:, -(kk - 1) :]
+
+
+def mamba2_apply(p: Params, x, cfg: ModelConfig, state=None):
+    """x (B,T,D).  state = {'conv': (B,K-1,conv_dim), 'ssm': (B,H,N,P)} or
+    None.  Returns (out, new_state)."""
+    bsz, t, d = x.shape
+    d_inner, h, pdim, n = _dims(cfg)
+    proj = x @ p["w_in"]
+    z, xs, bs, cs, dts = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xs, bs, cs], axis=-1)
+    tail = None if state is None else state["conv"]
+    conv_out, new_tail = _causal_conv(conv_in, p["conv_w"], p["conv_b"], tail)
+    xs, bs, cs = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt_t = jax.nn.softplus(dts.astype(jnp.float32) + p["dt_bias"])    # (B,T,H)
+    xh = xs.reshape(bsz, t, h, pdim).astype(jnp.float32)
+    s0 = (
+        jnp.zeros((bsz, h, n, pdim), jnp.float32)
+        if state is None
+        else state["ssm"]
+    )
+    # SSD chunked (matmul) path for training/prefill; exact sequential
+    # step for decode / ragged tails.  See §Perf-1 in EXPERIMENTS.md.
+    chunk = 128
+    if t >= chunk and t % chunk == 0 and state is None:
+        y, s_fin = _ssd_chunked(
+            xh, bs.astype(jnp.float32), cs.astype(jnp.float32), dt_t,
+            p["a_log"], p["d_skip"], s0, chunk=chunk,
+        )
+    else:
+        y, s_fin = _ssd_scan(
+            xh, bs.astype(jnp.float32), cs.astype(jnp.float32), dt_t,
+            p["a_log"], p["d_skip"], s0,
+        )
+    y = y.reshape(bsz, t, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["w_out"]
+    return out, {"conv": new_tail, "ssm": s_fin}
+
+
+def make_mamba2_state(cfg: ModelConfig, b: int, dtype=jnp.float32):
+    d_inner, h, p, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((b, cfg.conv_kernel - 1, conv_dim), jnp.dtype(cfg.dtype)),
+        "ssm": jnp.zeros((b, h, n, p), jnp.float32),
+    }

@@ -1,0 +1,146 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV activations are compressed into a rank-``kv_lora_rank`` latent c_kv
+plus a single shared RoPE key head.  The decode path uses the *absorbed*
+formulation: W_uk folds into the query and W_uv into the attention
+output, so the KV cache stores only (c_kv, k_rope) — the MLA memory win
+— and per-token decode attends directly in latent space.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    _normal,
+    apply_rope,
+    chunked_attention,
+    init_rmsnorm,
+    pdtype,
+    rmsnorm,
+)
+
+
+def init_mla(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    sc = 0.02
+    return {
+        "wq": _normal(ks[0], (d, h, dn + dr), pdtype(cfg), sc),
+        "w_dkv": _normal(ks[1], (d, r), pdtype(cfg), sc),        # down: latent
+        "kv_norm": init_rmsnorm(r, cfg),
+        "w_ukv": _normal(ks[2], (r, h, dn + dv), pdtype(cfg), sc),  # up: k_nope|v
+        "w_kr": _normal(ks[3], (d, dr), pdtype(cfg), sc),        # shared rope key
+        "wo": _normal(ks[4], (h, dv, d), pdtype(cfg), sc / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _q_proj(p, x, cfg, positions):
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    return qn, qr
+
+
+def _latent(p, x, cfg, positions):
+    ckv = rmsnorm(p["kv_norm"], x @ p["w_dkv"], cfg.norm_eps)   # (B,S,r)
+    kr = apply_rope(
+        (x @ p["w_kr"])[:, :, None, :], positions, cfg.rope_theta
+    )  # (B,S,1,dr)
+    return ckv, kr[:, :, 0, :]
+
+
+def mla_apply(p, x, cfg: ModelConfig):
+    """Full-sequence causal MLA (train/prefill math, expanded form)."""
+    b, s, _ = x.shape
+    dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    qn, qr = _q_proj(p, x, cfg, positions)
+    ckv, kr = _latent(p, x, cfg, positions)
+    kv = jnp.einsum("bsr,rhe->bshe", ckv, p["w_ukv"])
+    kn, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [kn, jnp.broadcast_to(kr[:, :, None, :], (*kn.shape[:3], kr.shape[-1]))],
+        axis=-1,
+    )
+    q = jnp.concatenate([qn, qr], axis=-1)
+    from repro.models.layers import shard_hint
+    q = shard_hint(q, None, "model", None, None)
+    k = shard_hint(k, None, "rep", None, None)
+    v = shard_hint(v, None, "rep", None, None)
+    out = chunked_attention(
+        q, k, v,
+        causal=True,
+        q_offset=jnp.int32(0),
+        k_positions=jnp.arange(s, dtype=jnp.int32),
+        q_chunk=cfg.attn_q_chunk,
+    )
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+
+
+def mla_prefill(p, x, cfg: ModelConfig, cache_len: int):
+    b, s, _ = x.shape
+    out = mla_apply(p, x, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    ckv, kr = _latent(p, x, cfg, positions)
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckv_c = jnp.zeros((b, cache_len, r), ckv.dtype).at[:, :s].set(ckv)
+    kr_c = jnp.zeros((b, cache_len, dr), kr.dtype).at[:, :s].set(kr)
+    kpos = jnp.full((b, cache_len), -1, jnp.int32).at[:, :s].set(
+        jnp.arange(s, dtype=jnp.int32)[None]
+    )
+    return out, {"ckv": ckv_c, "kr": kr_c, "kpos": kpos}
+
+
+def mla_decode(p, x, cfg: ModelConfig, cache, pos, window: int = 0):
+    """Absorbed one-token decode: attends in the latent space.  ``window``
+    > 0 adds sliding-window masking (rolling latent cache)."""
+    b = x.shape[0]
+    dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    qn, qr = _q_proj(p, x, cfg, positions)          # (B,1,H,dn),(B,1,H,dr)
+    ckv_t, kr_t = _latent(p, x, cfg, positions)     # (B,1,r),(B,1,dr)
+
+    c = cache["ckv"].shape[1]
+    slot = (pos % c).astype(jnp.int32)
+    ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_t, slot, axis=1)
+    kr_c = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_t, slot, axis=1)
+    kpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["kpos"],
+        jnp.broadcast_to(pos.astype(jnp.int32), (b, 1)), slot, axis=1,
+    )
+    valid = kpos >= 0                                # (B, C)
+
+    w_uk = p["w_ukv"][..., :dn]                     # (r,H,dn)
+    w_uv = p["w_ukv"][..., dn:]                     # (r,H,dv)
+    q_abs = jnp.einsum("bshe,rhe->bshr", qn, w_uk)  # (B,1,H,r)
+    scores = (
+        jnp.einsum("bshr,bcr->bhsc", q_abs.astype(jnp.float32),
+                   ckv_c.astype(jnp.float32))
+        + jnp.einsum("bshe,bce->bhsc", qr.astype(jnp.float32),
+                     kr_c.astype(jnp.float32))
+    ) / math.sqrt(dn + cfg.qk_rope_dim)
+    mask = valid & (kpos <= pos)                     # (B, C)
+    if window and window > 0:
+        mask &= kpos > (pos - window)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhsc,bcr->bshr", probs.astype(ckv_c.dtype), ckv_c)
+    v = jnp.einsum("bshr,rhe->bshe", ctx, w_uv)     # (B,1,H,dv)
+    y = jnp.einsum("bshe,hed->bsd", v, p["wo"])
+    return y, {"ckv": ckv_c, "kr": kr_c, "kpos": kpos}
+
+
+def make_mla_cache(cfg: ModelConfig, b: int, cache_len: int, dtype):
+    return {
+        "ckv": jnp.zeros((b, cache_len, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((b, cache_len, cfg.qk_rope_dim), dtype),
+        "kpos": jnp.full((b, cache_len), -1, jnp.int32),
+    }

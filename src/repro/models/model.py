@@ -1,0 +1,503 @@
+"""Unified LM assembly: every assigned architecture behind one API.
+
+    init_params(key, cfg)                  -> params pytree
+    train_loss(params, cfg, batch)         -> (loss, metrics)
+    forward_train(params, cfg, batch)      -> (logits, aux) [= prefill math]
+    decode_step(params, cfg, tok, state, pos) -> (logits, new_state)
+    make_decode_state(cfg, b, cache_len)   -> zero-initialized state
+
+Prefill is served as forward_train (logits) or token-by-token through
+decode_step (the serving engine's prefill-as-decode); a fused
+batch-prefill-into-cache path is a possible future addition (the
+per-layer attention_prefill/mla_prefill primitives exist in
+layers.py/mla.py).
+
+Homogeneous layer stacks are scanned (``lax.scan`` over a leading layer
+axis) so the HLO is O(1) in depth — essential for 512-device AOT
+compiles of 60-layer models.  Heterogeneous pieces (DeepSeek's leading
+dense layer, Zamba2's shared attention block) are separate stacks /
+shared params applied at statically-known positions.
+
+``batch`` dict:  tokens (B,S) int32 always; ``prefix`` (B,P,D) for VLM
+patch embeddings; ``frames`` (B,S_src,D) for the audio encoder.  The
+modality frontends are stubs per the brief — the specs provide embeddings
+of the right shape.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import mamba2 as M2
+from repro.models import rwkv6 as R6
+
+Params = Dict[str, Any]
+tmap = jax.tree_util.tree_map
+
+
+def _stack_init(fn, key, n: int):
+    """vmap an init over n layer keys -> params stacked on axis 0."""
+    if n == 0:
+        return None
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------------
+# Per-family block definitions (init + train-forward + decode)
+# --------------------------------------------------------------------------
+
+
+def _init_dense_block(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    attn = MLA.init_mla(k1, cfg) if cfg.use_mla else L.init_attention(k1, cfg)
+    return {
+        "attn_norm": L.init_rmsnorm(cfg.d_model, cfg),
+        "attn": attn,
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, cfg),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def _init_moe_block(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    attn = MLA.init_mla(k1, cfg) if cfg.use_mla else L.init_attention(k1, cfg)
+    return {
+        "attn_norm": L.init_rmsnorm(cfg.d_model, cfg),
+        "attn": attn,
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, cfg),
+        "moe": MOE.init_moe(k2, cfg),
+    }
+
+
+def _attn_apply(p, x, cfg):
+    if cfg.use_mla:
+        return MLA.mla_apply(p, x, cfg)
+    return L.attention_apply(p, x, cfg)
+
+
+def _seqshard(x):
+    """Sequence parallelism: the (B,S,D) residual stream lives sharded
+    over "model" on S — so the remat'd layer-scan carry is S/16 per
+    device, not the full sequence."""
+    return L.shard_hint(x, None, "model", None)
+
+
+def _dense_block_fwd(p, x, cfg):
+    x = x + _attn_apply(p["attn"], L.rmsnorm(p["attn_norm"], x, cfg.norm_eps), cfg)
+    x = x + L.mlp_apply(p["mlp"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+    return _seqshard(x), jnp.zeros((), jnp.float32)
+
+
+def _moe_block_fwd(p, x, cfg):
+    x = x + _attn_apply(p["attn"], L.rmsnorm(p["attn_norm"], x, cfg.norm_eps), cfg)
+    y, aux = MOE.moe_apply(p["moe"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps), cfg)
+    return _seqshard(x + y), aux
+
+
+def _init_rwkv_block(key, cfg):
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg),
+        **R6.init_rwkv_block(key, cfg),
+    }
+
+
+def _rwkv_block_fwd(p, x, cfg, state=None):
+    tm_state = None if state is None else (state["tm_last"], state["wkv"])
+    y, (tm_last, wkv) = R6.time_mix_apply(
+        p["time"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg, tm_state
+    )
+    x = x + y
+    cm_state = None if state is None else state["cm_last"]
+    y, cm_last = R6.channel_mix_apply(
+        p["channel"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cm_state
+    )
+    return x + y, {"tm_last": tm_last, "wkv": wkv, "cm_last": cm_last}
+
+
+def _init_mamba_block(key, cfg):
+    return {"norm": L.init_rmsnorm(cfg.d_model, cfg), "m2": M2.init_mamba2(key, cfg)}
+
+
+def _mamba_block_fwd(p, x, cfg, state=None):
+    y, s = M2.mamba2_apply(p["m2"], L.rmsnorm(p["norm"], x, cfg.norm_eps), cfg, state)
+    return x + y, s
+
+
+# --------------------------------------------------------------------------
+# Segmenting (hybrid / leading-dense layouts), statically derived from cfg
+# --------------------------------------------------------------------------
+
+
+def _zamba_segments(cfg: ModelConfig):
+    """[(n_mamba_layers, attn_after: bool), ...] covering cfg.n_layers."""
+    segs = []
+    rest = cfg.n_layers
+    period = cfg.attn_every
+    while rest > 0:
+        n = min(period, rest)
+        segs.append((n, n == period))
+        rest -= n
+    return segs
+
+
+# --------------------------------------------------------------------------
+# Top-level init
+# --------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    p: Params = {"embed": L.init_embedding(keys[0], cfg)}
+
+    at = cfg.arch_type
+    if at in ("dense", "vlm"):
+        p["blocks"] = _stack_init(
+            lambda k: _init_dense_block(k, cfg), keys[1], cfg.n_layers
+        )
+    elif at == "moe":
+        nd = cfg.first_dense_layers
+        p["dense_blocks"] = _stack_init(
+            lambda k: _init_dense_block(k, cfg), keys[1], nd
+        )
+        p["moe_blocks"] = _stack_init(
+            lambda k: _init_moe_block(k, cfg), keys[2], cfg.n_layers - nd
+        )
+    elif at == "ssm":
+        p["blocks"] = _stack_init(
+            lambda k: _init_rwkv_block(k, cfg), keys[1], cfg.n_layers
+        )
+    elif at == "hybrid":
+        p["blocks"] = _stack_init(
+            lambda k: _init_mamba_block(k, cfg), keys[1], cfg.n_layers
+        )
+        p["shared_attn"] = _init_dense_block(keys[2], cfg)
+    elif at == "audio":
+        p["enc_blocks"] = _stack_init(
+            lambda k: _init_dense_block(k, cfg), keys[1], cfg.n_enc_layers
+        )
+        p["blocks"] = _stack_init(
+            lambda k: {
+                **_init_dense_block(k, cfg),
+                "xattn_norm": L.init_rmsnorm(cfg.d_model, cfg),
+                "xattn": L.init_cross_attention(
+                    jax.random.fold_in(k, 7), cfg
+                ),
+            },
+            keys[2],
+            cfg.n_layers,
+        )
+    else:
+        raise ValueError(f"unknown arch_type {at!r}")
+
+    p["final_norm"] = L.init_rmsnorm(cfg.d_model, cfg)
+    p["head"] = L.init_lm_head(keys[3], cfg)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Training forward
+# --------------------------------------------------------------------------
+
+
+def _scan_blocks(fwd, stacked, x, cfg, remat: bool = True):
+    """Scan x through a stacked homogeneous block pytree; sums aux."""
+    def body(carry, lp):
+        y, aux = fwd(lp, carry, cfg)
+        return y, aux
+    if remat:
+        body = jax.checkpoint(body)
+    x, auxs = jax.lax.scan(body, x, stacked)
+    return x, jnp.sum(auxs)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch) -> jax.Array:
+    x = L.embed(params["embed"], batch["tokens"])
+    if cfg.modality == "vision_prefix":
+        x = jnp.concatenate([batch["prefix"].astype(x.dtype), x], axis=1)
+    if cfg.arch_type in ("dense", "vlm", "moe"):
+        x = _seqshard(x)
+    return x
+
+
+def _encoder(params, cfg: ModelConfig, frames) -> jax.Array:
+    """Bidirectional encoder over (precomputed) frame embeddings."""
+    x = frames.astype(L.pdtype(cfg))
+
+    def fwd(p, h, c):
+        h = h + _bidir_attn(p["attn"], L.rmsnorm(p["attn_norm"], h, c.norm_eps), c)
+        h = h + L.mlp_apply(p["mlp"], L.rmsnorm(p["mlp_norm"], h, c.norm_eps))
+        return h, jnp.zeros((), jnp.float32)
+
+    x, _ = _scan_blocks(fwd, params["enc_blocks"], x, cfg)
+    return x
+
+
+def _bidir_attn(p, x, cfg: ModelConfig):
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q, k, v = L._qkv(p, x, cfg, positions)
+    out = L.chunked_attention(
+        q, k, v, causal=False, q_offset=jnp.int32(0),
+        k_positions=jnp.arange(s, dtype=jnp.int32),
+        q_chunk=cfg.attn_q_chunk,
+    )
+    return L._out_proj(out, p["wo"])
+
+
+def forward_train(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits over text positions, aux_loss)."""
+    at = cfg.arch_type
+    aux = jnp.zeros((), jnp.float32)
+
+    if at == "audio":
+        enc_out = _encoder(params, cfg, batch["frames"])
+        x = L.embed(params["embed"], batch["tokens"])
+
+        def fwd(p, h, c):
+            h = h + _attn_apply(p["attn"], L.rmsnorm(p["attn_norm"], h, c.norm_eps), c)
+            kv = L.cross_attention_kv(p["xattn"], enc_out, c)
+            h = h + L.cross_attention_apply(
+                p["xattn"], L.rmsnorm(p["xattn_norm"], h, c.norm_eps), kv, c
+            )
+            h = h + L.mlp_apply(p["mlp"], L.rmsnorm(p["mlp_norm"], h, c.norm_eps))
+            return h, jnp.zeros((), jnp.float32)
+
+        x, _ = _scan_blocks(fwd, params["blocks"], x, cfg)
+
+    elif at in ("dense", "vlm"):
+        x = _embed_inputs(params, cfg, batch)
+        x, _ = _scan_blocks(_dense_block_fwd, params["blocks"], x, cfg)
+        if at == "vlm":
+            x = x[:, batch["prefix"].shape[1]:]
+
+    elif at == "moe":
+        x = _embed_inputs(params, cfg, batch)
+        if params.get("dense_blocks") is not None:
+            x, _ = _scan_blocks(_dense_block_fwd, params["dense_blocks"], x, cfg)
+        x, aux = _scan_blocks(_moe_block_fwd, params["moe_blocks"], x, cfg)
+
+    elif at == "ssm":
+        x = _embed_inputs(params, cfg, batch)
+        def fwd(p, h, c):
+            return _rwkv_block_fwd(p, h, c, None)[0], jnp.zeros((), jnp.float32)
+        x, _ = _scan_blocks(fwd, params["blocks"], x, cfg)
+
+    elif at == "hybrid":
+        x = _embed_inputs(params, cfg, batch)
+        def fwd(p, h, c):
+            return _mamba_block_fwd(p, h, c, None)[0], jnp.zeros((), jnp.float32)
+        off = 0
+        for n, attn_after in _zamba_segments(cfg):
+            seg = tmap(lambda a: jax.lax.slice_in_dim(a, off, off + n, axis=0),
+                       params["blocks"])
+            x, _ = _scan_blocks(fwd, seg, x, cfg)
+            if attn_after:
+                x, _ = _dense_block_fwd(params["shared_attn"], x, cfg)
+            off += n
+    else:
+        raise ValueError(at)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_head(params["head"], x, cfg, params["embed"])
+    return logits, aux
+
+
+def train_loss(params, cfg: ModelConfig, batch):
+    logits, aux = forward_train(params, cfg, batch)
+    loss = L.softmax_xent(logits[:, :-1], batch["tokens"][:, 1:])
+    metrics = {"xent": loss, "aux": aux}
+    return loss + aux, metrics
+
+
+# --------------------------------------------------------------------------
+# Decode path
+# --------------------------------------------------------------------------
+
+
+def _attn_cache_zero(cfg, b, cache_len, dtype):
+    if cfg.use_mla:
+        return MLA.make_mla_cache(cfg, b, cache_len, dtype)
+    return L.make_attention_cache(cfg, b, cache_len, dtype)
+
+
+def make_decode_state(cfg: ModelConfig, b: int, cache_len: int,
+                      enc_len: int = 0) -> Params:
+    """Zero decode state; per-layer leaves stacked on axis 0 for scanning."""
+    dt = L.pdtype(cfg)
+    at = cfg.arch_type
+
+    def rep(make_one, n):
+        one = make_one()
+        return tmap(lambda a: jnp.broadcast_to(a, (n, *a.shape)).copy(), one)
+
+    if at in ("dense", "vlm"):
+        return {"kv": rep(lambda: _attn_cache_zero(cfg, b, cache_len, dt), cfg.n_layers)}
+    if at == "moe":
+        nd = cfg.first_dense_layers
+        return {
+            "kv_dense": rep(lambda: _attn_cache_zero(cfg, b, cache_len, dt), nd),
+            "kv_moe": rep(lambda: _attn_cache_zero(cfg, b, cache_len, dt),
+                          cfg.n_layers - nd),
+        }
+    if at == "ssm":
+        return {"blocks": rep(lambda: R6.make_rwkv_state(cfg, b, dt), cfg.n_layers)}
+    if at == "hybrid":
+        return {
+            "blocks": rep(lambda: M2.make_mamba2_state(cfg, b, dt), cfg.n_layers),
+            "shared_kv": rep(
+                lambda: _attn_cache_zero(cfg, b, cache_len, dt),
+                sum(1 for _, a in _zamba_segments(cfg) if a),
+            ),
+        }
+    if at == "audio":
+        kv_heads = cfg.n_kv_heads
+        return {
+            "kv": rep(lambda: _attn_cache_zero(cfg, b, cache_len, dt), cfg.n_layers),
+            "xkv": {
+                "k": jnp.zeros((cfg.n_layers, b, enc_len, kv_heads, cfg.head_dim), dt),
+                "v": jnp.zeros((cfg.n_layers, b, enc_len, kv_heads, cfg.head_dim), dt),
+            },
+        }
+    raise ValueError(at)
+
+
+def _attn_decode(p, x, cfg, cache, pos):
+    if cfg.use_mla:
+        return MLA.mla_decode(p, x, cfg, cache, pos, window=cfg.sliding_window)
+    return L.attention_decode(p, x, cfg, cache, pos)
+
+
+def _dense_block_decode(p, x, cfg, cache, pos):
+    h = L.rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    y, cache = _attn_decode(p["attn"], h, cfg, cache, pos)
+    x = x + y
+    x = x + L.mlp_apply(p["mlp"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+    return x, cache
+
+
+def _moe_block_decode(p, x, cfg, cache, pos):
+    h = L.rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    y, cache = _attn_decode(p["attn"], h, cfg, cache, pos)
+    x = x + y
+    y, _ = MOE.moe_apply(p["moe"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps), cfg)
+    return x + y, cache
+
+
+def _scan_decode(block_decode, stacked_p, stacked_cache, x, cfg, pos):
+    def body(carry, pc):
+        lp, lc = pc
+        y, nc = block_decode(lp, carry, cfg, lc, pos)
+        return y, nc
+    x, new_cache = jax.lax.scan(body, x, (stacked_p, stacked_cache))
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tok, state, pos):
+    """One token for the whole batch.  tok (B,1) int32; pos () int32 —
+    the absolute position being written.  Returns (logits (B,1,V), state)."""
+    at = cfg.arch_type
+    x = L.embed(params["embed"], tok)
+
+    if at in ("dense", "vlm"):
+        x, kv = _scan_decode(_dense_block_decode, params["blocks"],
+                             state["kv"], x, cfg, pos)
+        state = {**state, "kv": kv}
+
+    elif at == "moe":
+        if params.get("dense_blocks") is not None:
+            x, kvd = _scan_decode(_dense_block_decode, params["dense_blocks"],
+                                  state["kv_dense"], x, cfg, pos)
+            state = {**state, "kv_dense": kvd}
+        x, kvm = _scan_decode(_moe_block_decode, params["moe_blocks"],
+                              state["kv_moe"], x, cfg, pos)
+        state = {**state, "kv_moe": kvm}
+
+    elif at == "ssm":
+        def body(carry, pc):
+            lp, lc = pc
+            y, nc = _rwkv_block_fwd(lp, carry, cfg, lc)
+            return y, nc
+        x, blocks = jax.lax.scan(body, x, (params["blocks"], state["blocks"]))
+        state = {**state, "blocks": blocks}
+
+    elif at == "hybrid":
+        def body(carry, pc):
+            lp, lc = pc
+            y, nc = _mamba_block_fwd(lp, carry, cfg, lc)
+            return y, nc
+        off = 0
+        ai = 0
+        blocks = state["blocks"]
+        shared_kv = state["shared_kv"]
+        new_blocks, new_shared = [], []
+        for n, attn_after in _zamba_segments(cfg):
+            seg_p = tmap(lambda a: jax.lax.slice_in_dim(a, off, off + n, axis=0),
+                         params["blocks"])
+            seg_c = tmap(lambda a: jax.lax.slice_in_dim(a, off, off + n, axis=0), blocks)
+            x, nc = jax.lax.scan(body, x, (seg_p, seg_c))
+            new_blocks.append(nc)
+            if attn_after:
+                kv_i = tmap(lambda a: a[ai], shared_kv)
+                x, kv_i = _dense_block_decode(params["shared_attn"], x, cfg, kv_i, pos)
+                new_shared.append(kv_i)
+                ai += 1
+            off += n
+        state = {
+            **state,
+            "blocks": tmap(lambda *xs: jnp.concatenate(xs, 0), *new_blocks),
+            "shared_kv": tmap(lambda *xs: jnp.stack(xs, 0), *new_shared),
+        }
+
+    elif at == "audio":
+        def body(carry, pc):
+            lp, lc, lx = pc
+            h = L.rmsnorm(lp["attn_norm"], carry, cfg.norm_eps)
+            y, lc = _attn_decode(lp["attn"], h, cfg, lc, pos)
+            h2 = carry + y
+            y2 = L.cross_attention_apply(
+                lp["xattn"], L.rmsnorm(lp["xattn_norm"], h2, cfg.norm_eps),
+                (lx["k"], lx["v"]), cfg,
+            )
+            h2 = h2 + y2
+            h2 = h2 + L.mlp_apply(lp["mlp"], L.rmsnorm(lp["mlp_norm"], h2, cfg.norm_eps))
+            return h2, lc
+        x, kv = jax.lax.scan(body, x, (params["blocks"], state["kv"], state["xkv"]))
+        state = {**state, "kv": kv}
+    else:
+        raise ValueError(at)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_head(params["head"], x, cfg, params["embed"])
+    return logits, state
+
+
+# --------------------------------------------------------------------------
+# Parameter counting (for 6ND roofline math)
+# --------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = 0
+    frac = (
+        cfg.experts_per_token / cfg.n_experts if (active_only and cfg.is_moe) else 1.0
+    )
+    for path, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+        names = [getattr(k, "key", "") for k in path]
+        routed = any(n in ("w_gate", "w_up", "w_down") for n in names) and (
+            "moe" in names
+        ) and "shared" not in names
+        total += int(leaf.size * (frac if routed else 1.0))
+    return total

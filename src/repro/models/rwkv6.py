@@ -1,0 +1,207 @@
+"""RWKV-6 "Finch" block — attention-free RNN with data-dependent decay
+(arXiv:2404.05892).
+
+Time-mixing: token-shift lerps feed r/k/v/g projections; the per-channel
+decay w_t = exp(-exp(wb + lora(x))) is *data dependent* (the headline
+Finch feature).  The WKV recurrence per head (state S in R^{K x V}):
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Channel-mixing: squared-ReLU MLP gated by a receptance sigmoid.
+
+The recurrence here is an exact ``lax.scan`` (compact HLO; O(1) state —
+this is the arch that runs long_500k natively).  The Pallas TPU kernel in
+``repro.kernels.wkv6`` implements the same math blocked for VMEM and is
+validated against ``wkv_scan`` below.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _normal, pdtype
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# WKV recurrence (exact reference used by the model forward pass)
+# --------------------------------------------------------------------------
+
+
+def wkv_scan(r, k, v, w, u, s0=None):
+    """Sequential WKV over time.
+
+    r,k,w: (B, T, H, K);  v: (B, T, H, V);  u: (H, K);  s0: (B, H, K, V).
+    Returns (y (B,T,H,V), s_final).  All math in f32.
+    """
+    b, t, h, dk = r.shape
+    dv = v.shape[-1]
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw                     # (B,H,K) / (B,H,V)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,K,V)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, s + uf[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, yt
+
+    xs = (
+        rf.transpose(1, 0, 2, 3),
+        kf.transpose(1, 0, 2, 3),
+        vf.transpose(1, 0, 2, 3),
+        wf.transpose(1, 0, 2, 3),
+    )
+    # unroll: the (B,H,K,V) state round-trips HBM once per UNROLL steps
+    # instead of every step (fused register/VMEM chain inside the body) —
+    # §Perf-1b.  Exactness unchanged (same op order).
+    unroll = 64 if t % 64 == 0 else (16 if t % 16 == 0 else 1)
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs,
+                             unroll=unroll)
+    return ys.transpose(1, 0, 2, 3), s_fin
+
+
+def wkv_step(r1, k1, v1, w1, u, s):
+    """One decode step: r1,k1,w1 (B,H,K); v1 (B,H,V); s (B,H,K,V)."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r1, k1, v1, w1))
+    kv = kf[..., :, None] * vf[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", rf, s + u.astype(jnp.float32)[None, :, :, None] * kv)
+    s = wf[..., None] * s + kv
+    return y, s
+
+
+# --------------------------------------------------------------------------
+# Layer params
+# --------------------------------------------------------------------------
+
+_LORA_RANK = 32
+
+
+def init_time_mix(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    ks = jax.random.split(key, 10)
+    sc = 0.02
+    dt = pdtype(cfg)
+    return {
+        # static token-shift mixes per stream
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt),
+        "mu_w": jnp.full((d,), 0.5, dt),
+        "mu_g": jnp.full((d,), 0.5, dt),
+        "wr": _normal(ks[0], (d, d), dt, sc),
+        "wk": _normal(ks[1], (d, d), dt, sc),
+        "wv": _normal(ks[2], (d, d), dt, sc),
+        "wg": _normal(ks[3], (d, d), dt, sc),
+        "wo": _normal(ks[4], (d, d), dt, sc / math.sqrt(2 * cfg.n_layers)),
+        # data-dependent decay: w = exp(-exp(w_base + B A x))
+        "w_base": jnp.full((d,), -1.0, dt),
+        "w_lora_a": _normal(ks[5], (d, _LORA_RANK), dt, sc),
+        "w_lora_b": jnp.zeros((_LORA_RANK, d), dt),
+        "u": _normal(ks[6], (h, hd), dt, sc),        # per-head bonus
+        "ln_scale": jnp.ones((d,), dt),              # post-WKV group norm
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    dt = pdtype(cfg)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "wk": _normal(ks[0], (d, f), dt, 0.02),
+        "wv": _normal(ks[1], (f, d), dt, 0.02 / math.sqrt(2 * cfg.n_layers)),
+        "wr": _normal(ks[0], (d, d), dt, 0.02),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / carried last token at t=0)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _decay(p, xw):
+    ww = xw @ p["w_lora_a"] @ p["w_lora_b"]
+    log_w = -jnp.exp(
+        jnp.clip((p["w_base"] + ww).astype(jnp.float32), -20.0, 8.0)
+    )
+    return jnp.exp(log_w)  # in (0, 1)
+
+
+def _group_norm(x, scale, h, eps=1e-5):
+    """Per-head layer norm on (B, T, D) viewed as (B,T,H,hd)."""
+    b, t, d = x.shape
+    xh = x.reshape(b, t, h, d // h).astype(jnp.float32)
+    m = jnp.mean(xh, axis=-1, keepdims=True)
+    v = jnp.mean((xh - m) ** 2, axis=-1, keepdims=True)
+    y = (xh - m) * jax.lax.rsqrt(v + eps)
+    return (y.reshape(b, t, d) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def time_mix_apply(p: Params, x, cfg: ModelConfig, state=None):
+    """state = (last_token (B,1,D), wkv_state (B,H,K,V)) or None (training
+    from zeros).  Returns (out, new_state)."""
+    b, t, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    last = None if state is None else state[0]
+    s0 = None if state is None else state[1]
+    xs = _shift(x, last)
+    xr, xk, xv, xw, xg = (
+        _lerp(x, xs, p[m]) for m in ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g")
+    )
+    r = (xr @ p["wr"]).reshape(b, t, h, hd)
+    k = (xk @ p["wk"]).reshape(b, t, h, hd)
+    v = (xv @ p["wv"]).reshape(b, t, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = _decay(p, xw).reshape(b, t, h, hd)
+
+    y, s_fin = wkv_scan(r, k, v, w, p["u"], s0)
+    y = y.reshape(b, t, d).astype(x.dtype)
+    y = _group_norm(y, p["ln_scale"], h, cfg.norm_eps)
+    out = (y * g) @ p["wo"]
+    return out, (x[:, -1:], s_fin)
+
+
+def channel_mix_apply(p: Params, x, state=None):
+    last = None if state is None else state
+    xs = _shift(x, last)
+    xk = _lerp(x, xs, p["mu_k"])
+    xr = _lerp(x, xs, p["mu_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, -1:]
+
+
+def init_rwkv_block(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"time": init_time_mix(k1, cfg), "channel": init_channel_mix(k2, cfg)}
+
+
+def make_rwkv_state(cfg: ModelConfig, b: int, dtype=jnp.float32):
+    """Decode state for one block."""
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    return {
+        "tm_last": jnp.zeros((b, 1, d), dtype),
+        "wkv": jnp.zeros((b, h, hd, hd), jnp.float32),
+        "cm_last": jnp.zeros((b, 1, d), dtype),
+    }

@@ -1,0 +1,9 @@
+"""Optimizers (pure-pytree, no optax dependency)."""
+
+from repro.optim.optimizers import (
+    OptState,
+    adamw,
+    cosine_schedule,
+    make_optimizer,
+    sgd,
+)

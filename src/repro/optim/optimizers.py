@@ -1,0 +1,104 @@
+"""SGD / AdamW with cosine schedule — pure pytree transformations.
+
+State is a NamedTuple of pytrees; moments are kept in f32 regardless of
+the (possibly bf16) parameter dtype.  ``update(grads, state, params)``
+returns (new_params, new_state) so the training step stays one-liner.
+Optimizer-state sharding (ZeRO-1) is applied by the launcher via
+``params_pspecs`` on the moment trees.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+tmap = jax.tree_util.tree_map
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any          # first moment (or None-like zeros for sgd w/o momentum)
+    v: Any          # second moment (adamw only; zeros for sgd)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+@dataclass(frozen=True)
+class adamw:
+    lr: Callable | float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params) -> OptState:
+        zeros = tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), zeros, zeros)
+
+    def update(self, grads, state: OptState, params):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.beta1, self.beta2
+        m = tmap(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+                 state.m, grads)
+        v = tmap(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                 state.v, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, mm, vv):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = tmap(upd, params, m, v)
+        return new_params, OptState(step, m, v)
+
+
+@dataclass(frozen=True)
+class sgd:
+    lr: Callable | float = 1e-2
+    momentum: float = 0.0
+
+    def init(self, params) -> OptState:
+        zeros = tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), zeros, tmap(lambda p: jnp.zeros((), jnp.float32), params))
+
+    def update(self, grads, state: OptState, params):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        if self.momentum > 0:
+            m = tmap(lambda mm, g: self.momentum * mm + g.astype(jnp.float32),
+                     state.m, grads)
+        else:
+            m = tmap(lambda g: g.astype(jnp.float32), grads)
+        new_params = tmap(
+            lambda p, mm: (p.astype(jnp.float32) - lr * mm).astype(p.dtype),
+            params, m,
+        )
+        return new_params, OptState(step, m, state.v)
+
+
+def make_optimizer(train_cfg) -> adamw | sgd:
+    lr = cosine_schedule(train_cfg.learning_rate, train_cfg.warmup_steps,
+                         train_cfg.total_steps)
+    if train_cfg.optimizer == "adamw":
+        return adamw(lr=lr, beta1=train_cfg.beta1, beta2=train_cfg.beta2,
+                     eps=train_cfg.eps, weight_decay=train_cfg.weight_decay)
+    if train_cfg.optimizer == "sgd":
+        return sgd(lr=lr)
+    raise ValueError(train_cfg.optimizer)

@@ -1,0 +1,4 @@
+"""Serving engine: slot-based continuous batching over the unified
+decode API."""
+
+from repro.serving.engine import Engine, Request

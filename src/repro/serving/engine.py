@@ -1,0 +1,156 @@
+"""Continuous-batching serving engine.
+
+Slot-based scheduling over the unified ``decode_step`` API: a fixed
+batch of B cache slots advances on a SHARED decode clock; requests are
+admitted into free slots as others finish, their prompts fed token-by-
+token (prefill-as-decode), then generated greedily until EOS/limit.
+
+The shared clock is what keeps the whole engine jit-friendly — one
+``decode_step`` per tick for all slots, a single scalar position.
+Per-slot correctness comes from two mechanisms:
+
+  * attention caches carry PER-SLOT validity (``kpos`` is (B, C)):
+    admitting a request invalidates its slot's stale cache entries, so
+    the previous occupant's KV can never leak into the new request;
+  * a request admitted at clock t simply lives at absolute positions
+    t, t+1, ... — RoPE is relative, so generation is position-coherent
+    within the request (verified against offline decode in
+    tests/test_serving.py).
+
+Recurrent state (RWKV/Mamba) slots are zeroed on admit.  Slot admission
+is host-side pytree surgery between jitted ticks — the tick itself is
+one compiled call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    fed: int = 0          # prompt tokens already fed
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 cache_len: int = 256):
+        if cfg.is_encoder_decoder:
+            raise ValueError("enc-dec serving needs per-request encoder "
+                             "outputs; use launch.serve directly")
+        self.cfg = cfg
+        self.params = params
+        self.b = max_batch
+        self.cache_len = cache_len
+        self.state = M.make_decode_state(cfg, max_batch, cache_len)
+        self.slots = [_Slot() for _ in range(max_batch)]
+        self.queue: deque[Request] = deque()
+        self.clock = 0
+        self._step = jax.jit(
+            lambda p, s, t, pos: M.decode_step(p, cfg, t, s, pos)
+        )
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        """Drive until queue and slots drain; returns finished requests."""
+        finished: List[Request] = []
+        for _ in range(max_ticks):
+            self._admit()
+            if all(s.free for s in self.slots) and not self.queue:
+                break
+            finished.extend(self._tick())
+        return finished
+
+    # -- internals -----------------------------------------------------------
+
+    def _reset_slot_state(self, b: int) -> None:
+        """Invalidate slot b's cache/state (host-side tree surgery)."""
+        def fix(path, leaf):
+            names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path]
+            arr = np.asarray(leaf)
+            if names and names[-1] == "kpos":        # (L, B, C)
+                arr = arr.copy()
+                arr[:, b, :] = -1
+                return jnp.asarray(arr)
+            # recurrent states / conv tails / k / v: zero the slot's row
+            if arr.ndim >= 2 and arr.shape[1] == self.b:
+                arr = arr.copy()
+                arr[:, b] = 0
+                return jnp.asarray(arr)
+            return leaf
+        self.state = jax.tree_util.tree_map_with_path(fix, self.state)
+
+    def _admit(self) -> None:
+        for b, slot in enumerate(self.slots):
+            if slot.free and self.queue:
+                slot.request = self.queue.popleft()
+                slot.fed = 0
+                self._reset_slot_state(b)
+
+    def _tick(self) -> List[Request]:
+        """One shared-clock decode step for all slots."""
+        toks = np.zeros((self.b, 1), np.int32)
+        for b, slot in enumerate(self.slots):
+            r = slot.request
+            if r is None:
+                continue
+            if slot.fed < len(r.prompt):
+                toks[b, 0] = r.prompt[slot.fed]
+            else:
+                toks[b, 0] = r.output[-1]
+        logits, self.state = self._step(
+            self.params, self.state, jnp.asarray(toks),
+            jnp.int32(self.clock),
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        self.clock += 1
+
+        finished = []
+        for b, slot in enumerate(self.slots):
+            r = slot.request
+            if r is None:
+                continue
+            if slot.fed < len(r.prompt):
+                slot.fed += 1
+                if slot.fed < len(r.prompt):
+                    continue
+                # prompt complete: this tick's logits give the first token
+            r.output.append(int(nxt[b]))
+            if (len(r.output) >= r.max_new_tokens
+                    or (r.eos_id is not None and r.output[-1] == r.eos_id)):
+                r.done = True
+                finished.append(r)
+                slot.request = None
+        return finished

@@ -1,0 +1,196 @@
+"""Unit + property tests for the compression operator algebra (Defs 1-4)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.compressors import (
+    BernoulliP,
+    Identity,
+    Induced,
+    Int8Stochastic,
+    NaturalCompression,
+    NaturalDithering,
+    RandK,
+    ScaledSign,
+    TernGrad,
+    TopK,
+    Zero,
+    make_compressor,
+    shifted,
+    tree_bits,
+)
+
+UNBIASED = [
+    RandK(0.25),
+    RandK(0.5),
+    BernoulliP(0.3),
+    NaturalDithering(s=4),
+    NaturalDithering(s=8),
+    NaturalCompression(),
+    TernGrad(),
+    Int8Stochastic(),
+    Induced(TopK(0.25), RandK(0.25)),
+]
+
+CONTRACTIVE = [TopK(0.1), TopK(0.5), ScaledSign(), Identity()]
+
+N_SAMPLES = 4000
+D = 32
+
+
+def _samples(q, x, n=N_SAMPLES, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), n)
+    return jax.vmap(lambda k: q(k, x))(keys)
+
+
+@pytest.fixture(scope="module")
+def xvec():
+    return jax.random.normal(jax.random.PRNGKey(42), (D,)) * 3.0 + 1.0
+
+
+@pytest.mark.parametrize("q", UNBIASED, ids=lambda q: type(q).__name__ + repr(getattr(q, 'q', getattr(q, 'p', getattr(q, 's', '')))))
+def test_unbiasedness(q, xvec):
+    s = _samples(q, xvec)
+    mean = jnp.mean(s, axis=0)
+    # CLT tolerance: std of the mean ~ sqrt(omega/n_samples)*|x|
+    omega = q.omega(D)
+    tol = 4.0 * math.sqrt(max(omega, 0.05) / N_SAMPLES) * float(
+        jnp.linalg.norm(xvec)
+    )
+    assert float(jnp.linalg.norm(mean - xvec)) < tol
+
+
+@pytest.mark.parametrize("q", UNBIASED, ids=lambda q: type(q).__name__ + repr(getattr(q, 'q', getattr(q, 'p', getattr(q, 's', '')))))
+def test_variance_bound(q, xvec):
+    s = _samples(q, xvec)
+    var = float(jnp.mean(jnp.sum((s - xvec) ** 2, axis=1)))
+    bound = q.omega(D) * float(jnp.sum(xvec**2))
+    assert var <= bound * 1.05 + 1e-6, f"emp var {var} > omega bound {bound}"
+
+
+@pytest.mark.parametrize("c", CONTRACTIVE, ids=lambda c: type(c).__name__)
+def test_contractive_bound(c, xvec):
+    out = c(jax.random.PRNGKey(0), xvec)
+    lhs = float(jnp.sum((out - xvec) ** 2))
+    rhs = (1.0 - c.delta(D)) * float(jnp.sum(xvec**2))
+    assert lhs <= rhs * (1.0 + 1e-5) + 1e-6
+
+
+def test_zero_maps_to_zero(xvec):
+    assert jnp.all(Zero()(jax.random.PRNGKey(0), xvec) == 0)
+
+
+def test_randk_keeps_exactly_k():
+    x = jnp.ones(40)
+    q = RandK(0.25)
+    out = q(jax.random.PRNGKey(3), x)
+    assert int(jnp.sum(out != 0)) == 10
+    np.testing.assert_allclose(out[out != 0], 4.0)  # d/k scaling
+
+
+def test_topk_keeps_largest():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 1.0])
+    out = TopK(0.5)(None, x)
+    np.testing.assert_allclose(np.asarray(out), [0, -5.0, 0, 3.0, 0, 1.0])
+
+
+def test_shifted_variance_vanishes_at_shift(xvec):
+    """Def. 3: the compressed message has zero variance at x == h."""
+    q = RandK(0.25)
+    out = jax.vmap(lambda k: shifted(q, xvec, k, xvec))(
+        jax.random.split(jax.random.PRNGKey(0), 64)
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.broadcast_to(np.asarray(xvec), out.shape), rtol=1e-6
+    )
+
+
+def test_shifted_variance_bound(xvec):
+    """E||Q_h(x) - x||^2 <= omega ||x - h||^2 (Lemma 1)."""
+    q = RandK(0.25)
+    h = xvec * 0.5 + 1.0
+    s = jax.vmap(lambda k: shifted(q, h, k, xvec))(
+        jax.random.split(jax.random.PRNGKey(1), N_SAMPLES)
+    )
+    var = float(jnp.mean(jnp.sum((s - xvec) ** 2, axis=1)))
+    bound = q.omega(D) * float(jnp.sum((xvec - h) ** 2))
+    assert var <= bound * 1.05
+
+
+def test_induced_variance_improves(xvec):
+    """Lemma 3: omega_ind = omega (1 - delta) < omega."""
+    q = RandK(0.25)
+    ind = Induced(TopK(0.25), q)
+    s_q = _samples(q, xvec)
+    s_i = _samples(ind, xvec)
+    var_q = float(jnp.mean(jnp.sum((s_q - xvec) ** 2, axis=1)))
+    var_i = float(jnp.mean(jnp.sum((s_i - xvec) ** 2, axis=1)))
+    assert var_i < var_q
+    assert var_i <= ind.omega(D) * float(jnp.sum(xvec**2)) * 1.05
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    hnp.arrays(
+        np.float32,
+        st.integers(4, 64),
+        elements=st.floats(-100, 100, width=32, allow_nan=False),
+    )
+)
+def test_topk_contractive_property(x):
+    """Property: Top-K satisfies Def. 1 for every input."""
+    xj = jnp.asarray(x)
+    c = TopK(0.25)
+    out = c(None, xj)
+    lhs = float(jnp.sum((out - xj) ** 2))
+    rhs = (1 - c.delta(x.size)) * float(jnp.sum(xj**2))
+    assert lhs <= rhs * (1 + 1e-4) + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    hnp.arrays(
+        np.float32,
+        st.integers(4, 64),
+        elements=st.one_of(
+            st.just(0.0),
+            st.floats(9.999999682655225e-21, 50, width=32),
+            st.floats(-50, -9.999999682655225e-21, width=32),
+        ),
+    ),
+    st.integers(0, 10),
+)
+def test_natural_compression_within_factor2(x, seed):
+    """C_nat rounds to an adjacent power of two: |out| in {0} U [|x|/2, 2|x|]."""
+    xj = jnp.asarray(x)
+    out = np.asarray(NaturalCompression()(jax.random.PRNGKey(seed), xj))
+    a = np.abs(x)
+    oa = np.abs(out)
+    nz = a > 0
+    assert np.all(oa[nz] >= a[nz] / 2 - 1e-6)
+    assert np.all(oa[nz] <= a[nz] * 2 + 1e-6)
+    assert np.all(np.sign(out[nz]) == np.sign(x[nz]))
+
+
+def test_bits_accounting():
+    d = 1000
+    assert RandK(0.1).bits(d) == 100 * (32 + 10)
+    assert RandK(0.1, shared_pattern=True).bits(d) == 100 * 32
+    assert TopK(0.1).bits(d) == 100 * (32 + 10)
+    assert Identity().bits(d) == 32 * d
+    assert Zero().bits(d) == 0
+    assert Int8Stochastic().bits(d) == 8 * d + 32
+    tree = {"a": jnp.zeros(10), "b": jnp.zeros((5, 2))}
+    assert tree_bits(Identity(), tree) == 32 * 20
+
+
+def test_registry():
+    assert isinstance(make_compressor("randk", q=0.5), RandK)
+    with pytest.raises(ValueError):
+        make_compressor("nope")

@@ -1,0 +1,176 @@
+"""Pallas kernel validation (interpret=True on CPU): shape/dtype sweeps
+with assert_allclose against the pure-jnp oracles (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.natural.kernel import shifted_natural_2d
+from repro.kernels.natural.ops import shifted_natural
+from repro.kernels.natural.ref import shifted_natural_ref
+from repro.kernels.topk.kernel import block_topk_2d
+from repro.kernels.topk.ops import block_topk
+from repro.kernels.topk.ref import block_topk_ref
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+from repro.models.rwkv6 import wkv_scan
+
+
+# ---------------------------------------------------------------------------
+# shifted natural compression
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,block", [(256, 256), (512, 256), (64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_shifted_natural_matches_ref(rows, block, dtype):
+    key = jax.random.PRNGKey(0)
+    kg, kh, ku = jax.random.split(key, 3)
+    g = jax.random.normal(kg, (rows, 128), jnp.float32).astype(dtype)
+    h = jax.random.normal(kh, (rows, 128), jnp.float32).astype(dtype)
+    u = jax.random.uniform(ku, (rows, 128), jnp.float32)
+    out = shifted_natural_2d(g, h, u, block_rows=block)
+    ref = shifted_natural_ref(g, h, u)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("shape", [(100,), (33, 7), (5, 4, 3, 2), (8192,)])
+def test_shifted_natural_arbitrary_shapes(shape):
+    key = jax.random.PRNGKey(1)
+    g = jax.random.normal(key, shape, jnp.float32)
+    h = jnp.zeros(shape, jnp.float32)
+    out = shifted_natural(key, g, h)
+    assert out.shape == shape
+    # with h=0 the output is natural compression: |out| in {0, 2^e, 2^{e+1}}
+    nz = np.asarray(out).ravel()
+    nz = nz[nz != 0]
+    lg = np.log2(np.abs(nz))
+    np.testing.assert_allclose(lg, np.round(lg), atol=1e-6)
+
+
+def test_shifted_natural_unbiased():
+    """Monte-Carlo unbiasedness of the kernel as a U(1/8) member."""
+    g = jnp.asarray([0.3, -1.7, 5.0, 0.011] * 32, jnp.float32)
+    h = jnp.asarray([0.1, -1.0, 4.0, 0.0] * 32, jnp.float32)
+    outs = []
+    for i in range(512):
+        outs.append(shifted_natural(jax.random.PRNGKey(i), g, h))
+    mean = np.mean(np.stack(outs), axis=0)
+    np.testing.assert_allclose(mean, np.asarray(g), rtol=0.05, atol=0.01)
+
+
+# ---------------------------------------------------------------------------
+# block top-k
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,block,k", [(64, 64, 128), (128, 64, 64),
+                                          (256, 64, 819), (64, 64, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_topk_matches_ref(rows, block, k, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(2), (rows, 128), jnp.float32)
+    x = x.astype(dtype)
+    out = block_topk_2d(x, k=k, block_rows=block)
+    ref = block_topk_ref(x, k=k, block=block)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("q", [0.01, 0.1, 0.5])
+def test_block_topk_keep_fraction(q):
+    x = jax.random.normal(jax.random.PRNGKey(3), (100_000,), jnp.float32)
+    out = np.asarray(block_topk(x, q=q))
+    frac = (out != 0).mean()
+    assert abs(frac - q) < 0.02, (frac, q)
+    # kept values are exactly the input values (no scaling: biased operator)
+    kept = out != 0
+    np.testing.assert_array_equal(out[kept], np.asarray(x)[kept])
+
+
+def test_block_topk_contraction():
+    """E||C(x)-x||^2 <= (1-delta)||x||^2 with delta = q (per block)."""
+    for seed in range(5):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (8192,), jnp.float32)
+        out = np.asarray(block_topk(x, q=0.2))
+        xn = np.asarray(x)
+        err = np.sum((out - xn) ** 2)
+        assert err <= (1 - 0.2) * np.sum(xn**2) + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,t,h,dk,dv,chunk", [
+    (2, 64, 2, 64, 64, 32),
+    (1, 128, 4, 64, 64, 128),
+    (2, 96, 1, 32, 64, 32),      # rectangular K != V
+    (1, 32, 2, 16, 16, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_matches_ref(b, t, h, dk, dv, chunk, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(4), 5)
+    r = jax.random.normal(keys[0], (b, t, h, dk), jnp.float32).astype(dtype)
+    k = jax.random.normal(keys[1], (b, t, h, dk), jnp.float32).astype(dtype)
+    v = jax.random.normal(keys[2], (b, t, h, dv), jnp.float32).astype(dtype)
+    # realistic decay range: w = exp(-exp(x)) in (0,1)
+    w = jnp.exp(-jnp.exp(
+        jax.random.normal(keys[3], (b, t, h, dk), jnp.float32)
+    )).astype(dtype)
+    u = jax.random.normal(keys[4], (h, dk), jnp.float32)
+
+    y, s = wkv6(r, k, v, w, u, chunk=chunk)
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, t, x.shape[-1])
+    ub = jnp.broadcast_to(u[None], (b, h, dk)).reshape(b * h, dk)
+    y_ref, s_ref = wkv6_ref(to_bh(r), to_bh(k), to_bh(v), to_bh(w), ub)
+    y_ref = y_ref.reshape(b, h, t, dv).transpose(0, 2, 1, 3)
+    s_ref = s_ref.reshape(b, h, dk, dv)
+
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=tol, atol=tol)
+
+
+def test_wkv6_matches_model_scan():
+    """Kernel == the model's wkv_scan (same math, different code path)."""
+    b, t, h, d = 2, 64, 2, 64
+    keys = jax.random.split(jax.random.PRNGKey(5), 5)
+    r = jax.random.normal(keys[0], (b, t, h, d))
+    k = jax.random.normal(keys[1], (b, t, h, d))
+    v = jax.random.normal(keys[2], (b, t, h, d))
+    w = jnp.exp(-jnp.exp(jax.random.normal(keys[3], (b, t, h, d))))
+    u = jax.random.normal(keys[4], (h, d))
+    y_kernel, s_kernel = wkv6(r, k, v, w, u, chunk=32)
+    y_model, s_model = wkv_scan(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_kernel), np.asarray(s_model),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv6_chunk_invariance():
+    """Chunk size must not change the result (state carry across chunks)."""
+    b, t, h, d = 1, 128, 2, 32
+    keys = jax.random.split(jax.random.PRNGKey(6), 5)
+    r = jax.random.normal(keys[0], (b, t, h, d))
+    k = jax.random.normal(keys[1], (b, t, h, d))
+    v = jax.random.normal(keys[2], (b, t, h, d))
+    w = jnp.exp(-jnp.exp(jax.random.normal(keys[3], (b, t, h, d))))
+    u = jax.random.normal(keys[4], (h, d))
+    y1, s1 = wkv6(r, k, v, w, u, chunk=128)
+    y2, s2 = wkv6(r, k, v, w, u, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,132 @@
+"""Optimizer + checkpoint + data-pipeline tests."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+from repro.configs import get_smoke_config
+from repro.configs.base import TrainConfig
+from repro.data.tokens import TokenStream, synth_batch
+from repro.optim import adamw, cosine_schedule, make_optimizer, sgd
+
+
+def _quad_params():
+    return {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(5.0)}
+
+
+def _quad_grad(p):
+    return {"w": 2 * p["w"], "b": 2 * p["b"]}  # f = ||w||^2 + b^2
+
+
+def test_sgd_converges():
+    opt = sgd(lr=0.1)
+    p = _quad_params()
+    st = opt.init(p)
+    for _ in range(100):
+        p, st = opt.update(_quad_grad(p), st, p)
+    assert float(jnp.abs(p["w"]).max()) < 1e-6
+    assert abs(float(p["b"])) < 1e-6
+
+
+def test_adamw_converges():
+    opt = adamw(lr=0.05, weight_decay=0.0)
+    p = _quad_params()
+    st = opt.init(p)
+    for _ in range(400):
+        p, st = opt.update(_quad_grad(p), st, p)
+    assert float(jnp.abs(p["w"]).max()) < 1e-2
+
+
+def test_adamw_bf16_params_f32_moments():
+    opt = adamw(lr=1e-3)
+    p = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st = opt.init(p)
+    assert st.m["w"].dtype == jnp.float32
+    p2, st2 = opt.update({"w": jnp.ones((4,), jnp.bfloat16)}, st, p)
+    assert p2["w"].dtype == jnp.bfloat16
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1.0, warmup=10, total=110)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert abs(float(lr(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.asarray(110))) <= 0.11
+    # monotone decay after warmup
+    vals = [float(lr(jnp.asarray(s))) for s in range(10, 111, 10)]
+    assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:]))
+
+
+def test_checkpoint_roundtrip():
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                   "c": jnp.asarray(7, jnp.int32)},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck.npz")
+        save(path, tree, step=42)
+        like = jax.tree.map(lambda a: jnp.zeros_like(a), tree)
+        out = restore(path, like)
+    for k1, v in (("a", tree["a"]),):
+        np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(v))
+    np.testing.assert_array_equal(
+        np.asarray(out["nested"]["b"], np.float32),
+        np.asarray(tree["nested"]["b"], np.float32),
+    )
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"a": jnp.ones((2, 3))}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck.npz")
+        save(path, tree)
+        like = {"a": jnp.ones((3, 2))}
+        with pytest.raises(ValueError):
+            restore(path, like)
+
+
+def test_token_stream_deterministic_and_host_sharded():
+    cfg = get_smoke_config("qwen3-0.6b")
+    s1 = TokenStream(cfg, 32, 8, seed=1)
+    s2 = TokenStream(cfg, 32, 8, seed=1)
+    np.testing.assert_array_equal(
+        np.asarray(s1.batch(3)["tokens"]), np.asarray(s2.batch(3)["tokens"])
+    )
+    # different steps differ
+    assert not np.array_equal(
+        np.asarray(s1.batch(0)["tokens"]), np.asarray(s1.batch(1)["tokens"])
+    )
+    # host sharding: two hosts cover the batch without coordination
+    h0 = TokenStream(cfg, 32, 8, seed=1, host_index=0, host_count=2)
+    h1 = TokenStream(cfg, 32, 8, seed=1, host_index=1, host_count=2)
+    assert h0.local_batch == 4
+    assert not np.array_equal(
+        np.asarray(h0.batch(0)["tokens"]), np.asarray(h1.batch(0)["tokens"])
+    )
+
+
+def test_synth_batch_learnable_structure():
+    """Tokens follow the Markov rule so a model CAN learn them."""
+    cfg = get_smoke_config("qwen3-0.6b")
+    b = synth_batch(jax.random.PRNGKey(0), cfg, 64, 4)
+    toks = np.asarray(b["tokens"])
+    v = cfg.vocab_size
+    # next token is a deterministic-ish function of prev: verify the rule
+    # x_{t+1} = (31 x_t + n_t) % v with n_t < 97
+    diffs = (toks[:, 1:] - 31 * toks[:, :-1]) % v
+    assert (diffs < 97).all()
+
+
+def test_modality_stubs():
+    vlm = get_smoke_config("llava-next-34b")
+    b = synth_batch(jax.random.PRNGKey(0), vlm, 64, 2)
+    assert b["prefix"].shape == (2, vlm.num_prefix_tokens, vlm.d_model)
+    assert b["tokens"].shape[1] == 64 - vlm.num_prefix_tokens
+    audio = get_smoke_config("seamless-m4t-large-v2")
+    b = synth_batch(jax.random.PRNGKey(0), audio, 32, 2)
+    assert b["frames"].shape == (2, 32, audio.d_model)

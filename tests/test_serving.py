@@ -1,0 +1,101 @@
+"""Continuous-batching engine correctness.
+
+The load-bearing test: a request served THROUGH the engine (admitted at
+an arbitrary clock offset, sharing its batch with other requests) must
+produce exactly the tokens of an offline single-request greedy decode —
+per-slot cache invalidation + RoPE position-coherence working together.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serving import Engine, Request
+
+
+def _offline_greedy(cfg, params, prompt, n_new):
+    state = M.make_decode_state(cfg, 1, 256)
+    out = []
+    tok = None
+    for t in range(len(prompt) + n_new - 1):
+        cur = prompt[t] if t < len(prompt) else out[-1]
+        logits, state = M.decode_step(
+            params, cfg, jnp.asarray([[cur]], jnp.int32), state, jnp.int32(t)
+        )
+        if t >= len(prompt) - 1:
+            out.append(int(jnp.argmax(logits[0, -1])))
+    return out
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_smoke_config("qwen3-0.6b").with_(dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_engine_single_request_matches_offline(dense_setup):
+    cfg, params = dense_setup
+    prompt = [5, 17, 99, 3]
+    ref = _offline_greedy(cfg, params, prompt, 8)
+    eng = Engine(cfg, params, max_batch=2, cache_len=64)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=8))
+    done = eng.run()
+    assert len(done) == 1
+    assert done[0].output == ref, (done[0].output, ref)
+
+
+def test_engine_continuous_batching_isolation(dense_setup):
+    """Requests admitted at different clock offsets into recycled slots
+    must each match their own offline decode (no KV leakage)."""
+    cfg, params = dense_setup
+    prompts = [[5, 17, 99], [42, 7], [123, 9, 11, 2], [88], [3, 1, 4, 1, 5]]
+    refs = [_offline_greedy(cfg, params, p, 6) for p in prompts]
+    eng = Engine(cfg, params, max_batch=2, cache_len=64)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+    done = sorted(eng.run(), key=lambda r: r.uid)
+    assert len(done) == len(prompts)
+    for r, ref in zip(done, refs):
+        assert r.output == ref, (r.uid, r.output, ref)
+
+
+def test_engine_rwkv_state_isolation():
+    """Recurrent-state arch: slot reuse must zero the previous request's
+    state (the SSM analogue of KV invalidation)."""
+    cfg = get_smoke_config("rwkv6-3b").with_(dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    prompts = [[5, 17, 99], [42, 7, 13], [123, 9]]
+    refs = []
+    for p in prompts:
+        state = M.make_decode_state(cfg, 1, 64)
+        out, last = [], None
+        for t in range(len(p) + 4 - 1):
+            cur = p[t] if t < len(p) else out[-1]
+            lg, state = M.decode_step(
+                params, cfg, jnp.asarray([[cur]], jnp.int32), state,
+                jnp.int32(t),
+            )
+            if t >= len(p) - 1:
+                out.append(int(jnp.argmax(lg[0, -1])))
+        refs.append(out)
+    eng = Engine(cfg, params, max_batch=1, cache_len=64)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+    done = sorted(eng.run(), key=lambda r: r.uid)
+    for r, ref in zip(done, refs):
+        assert r.output == ref, (r.uid, r.output, ref)
+
+
+def test_engine_eos_stops_early(dense_setup):
+    cfg, params = dense_setup
+    # discover the greedy first token, then use it as "EOS"
+    ref = _offline_greedy(cfg, params, [5, 17], 1)
+    eng = Engine(cfg, params, max_batch=1, cache_len=64)
+    eng.submit(Request(uid=0, prompt=[5, 17], max_new_tokens=50,
+                       eos_id=ref[0]))
+    done = eng.run()
+    assert done[0].output == [ref[0]]

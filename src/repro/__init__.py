@@ -1,0 +1,9 @@
+"""repro — shifted-compression distributed training & serving system.
+
+Reproduction of "Shifted Compression Framework: Generalizations and
+Improvements" grown toward a production-scale jax system; see ROADMAP.md.
+"""
+
+from repro import compat as _compat
+
+_compat.install()

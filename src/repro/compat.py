@@ -1,0 +1,29 @@
+"""JAX version-compatibility polyfills.
+
+The launch layer (and the sharded subprocess tests) use the modern
+``jax.sharding.set_mesh`` context to establish the ambient mesh.  On
+older jaxlibs (< 0.5) that symbol does not exist; the legacy
+``with mesh:`` global-mesh context provides the equivalent scoping for
+everything this codebase needs (input shardings drive GSPMD; the
+best-effort ``shard_hint`` constraints already no-op gracefully).
+
+``install()`` is idempotent and called from ``repro.__init__`` so any
+``import repro.*`` makes the API available.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def install() -> None:
+    if not hasattr(jax.sharding, "set_mesh"):
+
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            with mesh:
+                yield mesh
+
+        jax.sharding.set_mesh = set_mesh

@@ -1,0 +1,49 @@
+"""Distribution substrate: worker gradients, compressed collectives,
+and mesh sharding for the shifted-compression training system.
+
+Mapping onto the paper's operators (Algorithm 1, DCGD-SHIFT):
+
+  ``worker_grads.per_worker_grads``   line 5, "worker i computes
+      g_i = grad f_i(x^k)" — one vmapped gradient per batch shard, the
+      worker axis sharded over (pod x data).
+  ``Q_i`` (the per-worker unbiased compressor, Def. 2) is applied by
+      ``repro.core.shift_rules.worker_compress`` to the SHIFTED
+      difference ``g_i - h_i`` (Def. 3: Q_{h_i}(g_i) = h_i + Q(g_i -
+      h_i)), so what travels on the wire is the compressed residual.
+  ``collectives.compressed_tree_mean``   lines 9-11, "master averages
+      the received m_i" — the uplink aggregation in one of three wire
+      formats: exact psum (``dense_mean``), correlated Rand-K with a
+      shared pattern (``randk_shared_mean``: the aggregated message is
+      K-dimensional), or the int8 ring/tree all-reduce
+      (``q8_ring_tree_mean``).  The master's aggregated shift h^k is
+      tracked incrementally in ``launch.train`` (h^{k+1} = h^k +
+      alpha * m^k), so no uncompressed collective ever materializes.
+  ``sharding``   not in the paper — the GSPMD layer that places
+      parameters, optimizer moments, and worker-stacked shift state on
+      the (pod, data, model) mesh.
+"""
+
+from repro.dist.collectives import (
+    compressed_tree_mean,
+    dense_mean,
+    q8_ring_tree_mean,
+    randk_shared_mean,
+)
+from repro.dist.sharding import (
+    params_pspecs,
+    validate_pspecs,
+    worker_stacked_pspec,
+)
+from repro.dist.worker_grads import per_worker_grads, split_batch
+
+__all__ = [
+    "compressed_tree_mean",
+    "dense_mean",
+    "q8_ring_tree_mean",
+    "randk_shared_mean",
+    "params_pspecs",
+    "validate_pspecs",
+    "worker_stacked_pspec",
+    "per_worker_grads",
+    "split_batch",
+]

@@ -1,0 +1,252 @@
+"""Compressed tree-mean collectives — the "send m_i to master, average"
+line of Algorithm 1, in the three wire formats the system supports.
+
+All collectives consume a *worker-stacked* pytree (leaves
+``(W, *param.shape)``) and return the mean over the worker axis:
+
+  ``dense_mean``         exact f32 mean (lowers to a plain psum under
+                         GSPMD) — the no-compression baseline.
+  ``randk_shared_mean``  correlated Rand-K (all workers share one
+                         sparsity pattern per step): the aggregated
+                         message is K-dimensional, unbiased, and exactly
+                         K coordinates survive.  Matches
+                         ``RandK(shared_pattern=True)`` applied per
+                         worker followed by an exact mean.
+  ``q8_ring_tree_mean``  int8-quantized ring all-reduce (reduce-scatter
+                         + all-gather with int8 payloads and per-chunk
+                         scales, stochastic rounding) over the mesh's
+                         worker axes, with an optional quantized tree
+                         (psum) stage across the ``pod`` axis.
+
+``compressed_tree_mean`` dispatches between them from a
+``CompressionConfig`` (or its ``comm_mode`` string).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+tmap = jax.tree_util.tree_map
+
+
+def dense_mean(wtree):
+    """Exact mean over the leading worker axis, leaf-wise."""
+    return tmap(lambda a: jnp.mean(a, axis=0), wtree)
+
+
+# ---------------------------------------------------------------------------
+# Shared-pattern Rand-K
+# ---------------------------------------------------------------------------
+
+
+def randk_shared_mean(key: jax.Array, wtree, ratio: float):
+    """Mean of shared-pattern Rand-K messages (correlated sampling).
+
+    Every worker keeps the SAME uniformly-random K-subset (K =
+    round(ratio * d) per leaf, at least 1) scaled by d/K, so the
+    aggregated message is supported on exactly K coordinates and the
+    masts cancel into one mask applied to the exact mean:
+
+        mean_i C_shared(g_i) = (d/K) * mask * mean_i g_i
+
+    Unbiased over the pattern draw: E[(d/K) * mask] = 1 coordinatewise.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(wtree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        lk = jax.random.fold_in(key, i)
+        w = leaf.shape[0]
+        inner = leaf.shape[1:]
+        d = int(math.prod(inner)) if inner else 1
+        k = max(1, int(round(ratio * d)))
+        idx = jax.random.permutation(lk, d)[:k]
+        mask = jnp.zeros((d,), leaf.dtype).at[idx].set(1)
+        mean = jnp.mean(leaf.reshape(w, d), axis=0)
+        out.append((mean * mask * (d / k)).reshape(inner))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# int8 ring / tree all-reduce
+# ---------------------------------------------------------------------------
+
+
+def _q8(key: jax.Array, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor max-scale int8 with unbiased stochastic rounding.
+
+    Returns ``(payload int8, scale f32)``; ``payload * scale``
+    reconstructs x up to quantization noise.  The scale floor keeps
+    tiny tensors off the subnormal path (would flush to 0 -> NaN).
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-30) / 127.0
+    y = xf / scale
+    lo = jnp.floor(y)
+    u = jax.random.uniform(key, x.shape)
+    q = (lo + (u < (y - lo)).astype(jnp.float32)).astype(jnp.int8)
+    return q, scale
+
+
+def _ring_allreduce_q8(key: jax.Array, x: jax.Array, axis: str, n: int):
+    """Ring all-reduce of ``x`` (sum) over mesh axis ``axis`` with int8
+    hops: reduce-scatter then all-gather, both with quantized payloads.
+
+    In the all-gather phase each finished chunk is quantized ONCE by its
+    owner and the (int8, scale) pair is forwarded verbatim, so every
+    device decodes bit-identical values — the output is truly
+    replicated over ``axis``.
+    """
+    if n == 1:
+        return x
+    shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    d = flat.shape[0]
+    c = -(-d // n)  # chunk length, ceil
+    flat = jnp.pad(flat, (0, n * c - d))
+    chunks = flat.reshape(n, c)
+    idx = jax.lax.axis_index(axis)
+    fwd = [(j, (j + 1) % n) for j in range(n)]
+
+    # Phase 1 — reduce-scatter: after n-1 hops, device i owns the fully
+    # reduced chunk (i + 1) % n.
+    for t in range(n - 1):
+        send_id = (idx - t) % n
+        payload = jax.lax.dynamic_slice_in_dim(chunks, send_id, 1, axis=0)
+        q, s = _q8(jax.random.fold_in(key, t), payload)
+        q = jax.lax.ppermute(q, axis, fwd)
+        s = jax.lax.ppermute(s, axis, fwd)
+        recv_id = (send_id - 1) % n
+        mine = jax.lax.dynamic_slice_in_dim(chunks, recv_id, 1, axis=0)
+        chunks = jax.lax.dynamic_update_slice_in_dim(
+            chunks, mine + q.astype(jnp.float32) * s, recv_id, axis=0
+        )
+
+    # Phase 2 — all-gather: circulate each owner's chunk, quantized once.
+    own_id = (idx + 1) % n
+    own = jax.lax.dynamic_slice_in_dim(chunks, own_id, 1, axis=0)
+    q, s = _q8(jax.random.fold_in(key, n + 1), own)
+    final = jnp.zeros_like(chunks)
+    final = jax.lax.dynamic_update_slice_in_dim(
+        final, q.astype(jnp.float32) * s, own_id, axis=0
+    )
+    for t in range(n - 1):
+        q = jax.lax.ppermute(q, axis, fwd)
+        s = jax.lax.ppermute(s, axis, fwd)
+        recv_id = (idx - t) % n  # sender (idx-1) owned (idx - t) at hop t
+        final = jax.lax.dynamic_update_slice_in_dim(
+            final, q.astype(jnp.float32) * s, recv_id, axis=0
+        )
+    return final.reshape(-1)[:d].reshape(shape)
+
+
+def q8_ring_tree_mean(
+    key: jax.Array,
+    tree,
+    mesh,
+    *,
+    worker_axes: Sequence[str] = ("data",),
+    pod_axis: Optional[str] = None,
+    wspecs=None,
+):
+    """int8 ring/tree mean over a worker-stacked tree on a sharded mesh.
+
+    Leaves are ``(W, ...)`` with the leading dim sharded over
+    ``worker_axes`` (plus ``pod_axis``); each device sums its local
+    worker rows in f32, ring-all-reduces the partial sums over each
+    worker axis with int8 hops, then (multi-pod) runs one quantized
+    tree (psum) stage across ``pod_axis``.  ``wspecs`` optionally gives
+    the worker-stacked PartitionSpecs so inner-dim ("model") sharding is
+    preserved through the shard_map — each model shard runs its own
+    independent ring.
+    """
+    waxes = tuple(worker_axes)
+    all_axes = ((pod_axis,) if pod_axis else ()) + waxes
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    w_glob = [leaf.shape[0] for leaf in leaves]
+
+    if wspecs is None:
+        spec_leaves = [P(all_axes) for _ in leaves]
+    else:
+        # pair each value leaf with its spec (specs are tuple subclasses,
+        # so flatten against the VALUE tree's structure), then force the
+        # leading entry to the worker axes: W always divides their
+        # product (n_workers == prod(worker axis sizes))
+        spec_leaves = jax.tree_util.tree_leaves(
+            tmap(lambda _, sp: sp, tree, wspecs),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        spec_leaves = [P(all_axes, *tuple(sp)[1:]) for sp in spec_leaves]
+
+    in_specs = tuple(spec_leaves)
+    out_specs = tuple(P(*tuple(sp)[1:]) for sp in in_specs)
+    pod_n = sizes.get(pod_axis, 1) if pod_axis else 1
+
+    def local_fn(k, *ls):
+        outs = []
+        for i, x in enumerate(ls):
+            lk = jax.random.fold_in(k, i)
+            acc = jnp.sum(x.astype(jnp.float32), axis=0)
+            for j, ax in enumerate(waxes):
+                acc = _ring_allreduce_q8(
+                    jax.random.fold_in(lk, j), acc, ax, sizes[ax]
+                )
+            if pod_axis and pod_n > 1:
+                q, s = _q8(jax.random.fold_in(lk, 101), acc)
+                acc = jax.lax.psum(q.astype(jnp.float32) * s, pod_axis)
+            outs.append((acc / w_glob[i]).astype(x.dtype))
+        return tuple(outs)
+
+    out_leaves = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(),) + in_specs,
+        out_specs=out_specs,
+        check_rep=False,
+    )(key, *leaves)
+    return jax.tree_util.tree_unflatten(treedef, list(out_leaves))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def compressed_tree_mean(
+    wtree,
+    mode,
+    key: jax.Array,
+    mesh=None,
+    *,
+    randk_q: float = 0.05,
+    wspecs=None,
+):
+    """Worker-mean of a stacked tree in the configured wire format.
+
+    ``mode`` is a comm-mode string (``dense | randk_shared | q8_ring``)
+    or a ``CompressionConfig``, in which case its ``comm_mode`` and
+    ``randk_q`` fields are used (a disabled config means dense).
+    """
+    if hasattr(mode, "comm_mode"):  # CompressionConfig
+        cfg = mode
+        randk_q = cfg.randk_q
+        mode = cfg.comm_mode if cfg.enabled else "dense"
+    if mode == "dense":
+        return dense_mean(wtree)
+    if mode == "randk_shared":
+        return randk_shared_mean(key, wtree, randk_q)
+    if mode == "q8_ring":
+        if mesh is None:
+            raise ValueError("q8_ring needs a mesh")
+        waxes = tuple(a for a in ("data",) if a in mesh.axis_names)
+        pod = "pod" if "pod" in mesh.axis_names else None
+        return q8_ring_tree_mean(
+            key, wtree, mesh, worker_axes=waxes, pod_axis=pod, wspecs=wspecs
+        )
+    raise ValueError(f"unknown comm mode {mode!r}")

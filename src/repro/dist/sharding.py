@@ -1,0 +1,166 @@
+"""Parameter PartitionSpec derivation for the production mesh.
+
+``params_pspecs`` pattern-matches the stable parameter NAMES produced by
+``repro.models.layers`` (and the moe / mla / mamba2 / rwkv6 modules) and
+assigns tensor-parallel specs over the "model" axis: column-parallel for
+input projections (d, fused_out), row-parallel for output projections
+(fused_in, d), expert-sharded for the 3-D MoE weights, vocab-sharded for
+the embedding table.  Anything unmatched (norm scales, biases, small
+LoRA factors, SSM scalars) stays replicated.
+
+Leaves under a layer-stacked top-level key ("blocks", "dense_blocks",
+"moe_blocks", "enc_blocks") carry a leading layer axis that is never
+sharded — rules are written against the TRAILING dims and left-padded
+with ``None``.
+
+``validate_pspecs`` downgrades any dim whose mesh-axis product does not
+divide the dim size (or whose axes are absent from the mesh) to
+replicated, so every returned spec is legal on the given mesh by
+construction.  ``worker_stacked_pspec`` prepends the worker axes
+(pod x data) to a parameter spec for the ``(W, *shape)`` stacked
+gradient / shift leaves.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Top-level keys whose subtrees are layer-stacked by vmapped init (the
+# leading axis is the layer axis — see models.model._stack_init).
+_STACKED_KEYS = {"blocks", "dense_blocks", "moe_blocks", "enc_blocks"}
+
+# Column-parallel 2-D weights (d_in, fused_out) -> shard the output dim.
+_COL_2D = {
+    "wq", "wk", "wv", "wg", "wr", "w_gate", "w_up", "w_in", "w", "w_kr",
+}
+# Row-parallel 2-D weights (fused_in, d_out) -> shard the input dim.
+_ROW_2D = {"wo", "w_down", "w_out"}
+# Replicated by name regardless of rank (small / latent / router).
+_REPLICATED = {"router", "w_lora_a", "w_lora_b", "w_dkv", "conv_w"}
+
+
+def _path_names(path) -> list:
+    return [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+
+
+def _tail_spec(names, tail_shape) -> Tuple:
+    """Spec for the unstacked (trailing) dims of one leaf."""
+    name = names[-1]
+    nd = len(tail_shape)
+    parent = names[-2] if len(names) > 1 else ""
+
+    if name in _REPLICATED or nd <= 1:
+        return (None,) * nd
+    if name == "table":  # embedding (V, D): vocab-sharded
+        return ("model",) + (None,) * (nd - 1)
+    if nd == 2:
+        # rwkv channel-mix stores its down-projection under "wv" (f, d)
+        if parent == "channel" and name == "wv":
+            return ("model", None)
+        if name in _ROW_2D:
+            return ("model", None)
+        if name in _COL_2D:
+            return (None, "model")
+        return (None,) * nd
+    if nd == 3:
+        if name in ("w_gate", "w_up", "w_down"):
+            # MoE expert weights (E, d, f) / (E, f, d): shard experts
+            return ("model", None, None)
+        if name == "wo":
+            # MLA output (H, dv, d): shard heads
+            return ("model", None, None)
+        if name in ("wq", "w_ukv"):
+            # MLA projections (d|r, H, dh'): shard heads
+            return (None, "model", None)
+        return (None,) * nd
+    return (None,) * nd
+
+
+def params_pspecs(params, *, fsdp: bool = False):
+    """PartitionSpecs for a params(-like) pytree, by parameter name.
+
+    With ``fsdp=True`` the first still-replicated trailing dim of every
+    >=2-D leaf is additionally sharded over "data" (ZeRO-3 / fully
+    sharded storage); ``validate_pspecs`` downgrades whatever does not
+    divide the mesh.
+    """
+
+    def one(path, leaf):
+        names = _path_names(path)
+        n_stack = 1 if (names and names[0] in _STACKED_KEYS) else 0
+        shape = tuple(leaf.shape)
+        tail = _tail_spec(names, shape[n_stack:])
+        dims = (None,) * n_stack + tail
+        if fsdp and len(shape) - n_stack >= 2:
+            dims = list(dims)
+            for i in range(n_stack, len(dims)):
+                if dims[i] is None:
+                    dims[i] = "data"
+                    break
+            dims = tuple(dims)
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def validate_pspecs(shapes, specs, mesh):
+    """Downgrade spec dims that are illegal on ``mesh``.
+
+    For every leaf dim: axes not present in the mesh are dropped; if the
+    remaining axis-size product does not divide the dim size, the dim
+    falls back to ``None`` (replicated).  The returned tree has the same
+    structure as ``shapes`` with one legal ``PartitionSpec`` per leaf.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(leaf, sp):
+        dims = list(tuple(sp)) + [None] * (len(leaf.shape) - len(tuple(sp)))
+        out = []
+        for size, ax in zip(leaf.shape, dims):
+            if ax is None:
+                out.append(None)
+                continue
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            axs = tuple(a for a in axs if a in sizes)
+            n = 1
+            for a in axs:
+                n *= sizes[a]
+            if not axs or size % n != 0:
+                out.append(None)
+            elif len(axs) == 1:
+                out.append(axs[0])
+            else:
+                out.append(axs)
+        return P(*out)
+
+    return jax.tree_util.tree_map(
+        one,
+        shapes,
+        specs,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, P),
+    )
+
+
+def worker_stacked_pspec(mesh, inner_spec) -> P:
+    """Spec for a worker-stacked leaf ``(W, *shape)``: the worker axes
+    (pod x data) on the leading dim, ``inner_spec`` on the rest.  Any
+    worker axis already appearing in ``inner_spec`` is stripped from it
+    (an axis may shard only one dim)."""
+    waxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def strip(ax):
+        if ax is None:
+            return None
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        axs = tuple(a for a in axs if a not in waxes)
+        if not axs:
+            return None
+        return axs if len(axs) > 1 else axs[0]
+
+    inner = tuple(strip(a) for a in tuple(inner_spec))
+    if not waxes:
+        return P(None, *inner)
+    return P(waxes if len(waxes) > 1 else waxes[0], *inner)

@@ -173,6 +173,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # jaxlib < 0.5 returns [dict]
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         from repro.launch import hlo_cost
         corrected = hlo_cost.analyze(hlo)

@@ -1,0 +1,167 @@
+"""Minimal, deterministic stand-in for the `hypothesis` API surface the
+test suite uses, for hermetic environments where the real package cannot
+be installed (CI installs the real one from requirements.txt; conftest
+registers this shim only when `import hypothesis` fails).
+
+Covers: ``given`` (positional + keyword strategies), ``settings``
+(max_examples / deadline / derandomize), ``strategies.lists / floats /
+integers / one_of / just`` with ``.filter``, and
+``hypothesis.extra.numpy.arrays``.  Example generation is uniform and
+seeded from the test name, so runs are reproducible (derandomize
+semantics always on).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def sample(self, rng):
+        return self._draw(rng)
+
+    def filter(self, pred):
+        base = self
+
+        def draw(rng):
+            for _ in range(10_000):
+                v = base.sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate rejected 10k samples")
+
+        return Strategy(draw)
+
+
+def floats(min_value=None, max_value=None, *, allow_nan=None,
+           allow_infinity=None, width=64, **_):
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+
+    def draw(rng):
+        v = rng.uniform(lo, hi)
+        if width == 32:
+            v = float(np.float32(v))
+            v = min(max(v, lo), hi)
+        return v
+
+    return Strategy(draw)
+
+
+def integers(min_value, max_value):
+    def draw(rng):
+        return int(rng.randint(int(min_value), int(max_value) + 1))
+
+    return Strategy(draw)
+
+
+def lists(elements, *, min_size=0, max_size=None, **_):
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng):
+        n = int(rng.randint(min_size, hi + 1))
+        return [elements.sample(rng) for _ in range(n)]
+
+    return Strategy(draw)
+
+
+def one_of(*strats):
+    def draw(rng):
+        return strats[int(rng.randint(len(strats)))].sample(rng)
+
+    return Strategy(draw)
+
+
+def just(value):
+    return Strategy(lambda rng: value)
+
+
+def _np_arrays(dtype, shape, *, elements=None, **_):
+    def draw(rng):
+        shp = shape.sample(rng) if isinstance(shape, Strategy) else shape
+        if isinstance(shp, int):
+            shp = (shp,)
+        size = int(np.prod(shp))
+        vals = [elements.sample(rng) for _ in range(size)]
+        return np.asarray(vals, dtype=dtype).reshape(shp)
+
+    return Strategy(draw)
+
+
+class settings:
+    """Decorator recording run parameters for the paired ``given``."""
+
+    def __init__(self, max_examples=100, deadline=None, derandomize=False,
+                 **_):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._mini_hyp_settings = self
+        return fn
+
+
+_DEFAULT_SETTINGS = settings()
+
+
+def given(*pos_strats, **kw_strats):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        remaining = [p for p in params if p.name not in kw_strats]
+        if pos_strats:
+            pos_names = [p.name for p in remaining[-len(pos_strats):]]
+            remaining = remaining[: -len(pos_strats)]
+        else:
+            pos_names = []
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_mini_hyp_settings", _DEFAULT_SETTINGS)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            for i in range(cfg.max_examples):
+                rng = np.random.RandomState((seed + 7919 * i) % (2**31 - 1))
+                drawn = {
+                    n: s.sample(rng) for n, s in zip(pos_names, pos_strats)
+                }
+                for n, s in kw_strats.items():
+                    drawn[n] = s.sample(rng)
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+
+    return deco
+
+
+def install():
+    """Register shim modules under the `hypothesis` names."""
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    extra = types.ModuleType("hypothesis.extra")
+    hnp = types.ModuleType("hypothesis.extra.numpy")
+
+    st.lists = lists
+    st.floats = floats
+    st.integers = integers
+    st.one_of = one_of
+    st.just = just
+    hnp.arrays = _np_arrays
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    extra.numpy = hnp
+    hyp.extra = extra
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+    sys.modules["hypothesis.extra"] = extra
+    sys.modules["hypothesis.extra.numpy"] = hnp

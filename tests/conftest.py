@@ -1,0 +1,15 @@
+"""Suite-wide setup: fall back to the deterministic mini-hypothesis shim
+when the real `hypothesis` is unavailable (hermetic containers).  CI
+installs the real package from requirements.txt, so the shim is only a
+no-network fallback — see tests/_mini_hypothesis.py."""
+
+import pathlib
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    import _mini_hypothesis
+
+    _mini_hypothesis.install()

@@ -31,7 +31,20 @@ from repro.data.problems import make_logreg, make_ridge
 
 @pytest.fixture(scope="module")
 def prob():
-    return make_ridge()
+    # Conditioned for decisive theorem measurements (the paper-exact
+    # instance lives in test_theorems):
+    #  * noise=10 — non-interpolating regime; with noise=0, grad_i(x*)
+    #    is lam-residual-only and the DCGD variance neighborhood that
+    #    Theorem 1 measures collapses to the 1e-7 float32 knife edge.
+    #  * lam=0.3 — at lam=1/m the self-noise coupling
+    #    gamma*omega*L_bar^2/(2*mu*n) is ~0.57 at Theorem 1's max
+    #    stepsize, so the neighborhood radius scales ~2x (not ~4x) when
+    #    gamma drops 4x; a modestly larger mu restores the
+    #    linear-in-gamma radius the gamma/4 assertion checks while
+    #    keeping kappa ~150 (much larger lam over-conditions the
+    #    problem and the exactness tests bottom out at the f32 floor
+    #    before their "still contracting" windows sample).
+    return make_ridge(lam=0.3, noise=10.0)
 
 
 @pytest.fixture(scope="module")

@@ -2,6 +2,7 @@
 in a SUBPROCESS with --xla_force_host_platform_device_count (the main
 pytest process must keep 1 device for the smoke tests)."""
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -13,6 +14,8 @@ import pytest
 
 from repro.dist.collectives import dense_mean, randk_shared_mean
 from repro.dist.worker_grads import per_worker_grads, split_batch
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def test_split_batch_roundtrip():
@@ -95,8 +98,8 @@ def test_q8_ring_allreduce_subprocess():
     r = subprocess.run(
         [sys.executable, "-c", _RING_TEST],
         capture_output=True, text=True, timeout=300,
-        env={**__import__("os").environ, "PYTHONPATH": "src"},
-        cwd="/root/repo",
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=_REPO_ROOT,
     )
     assert "RING_OK" in r.stdout, r.stdout + r.stderr
 
@@ -134,7 +137,72 @@ def test_param_specs_valid_on_mesh_subprocess():
     r = subprocess.run(
         [sys.executable, "-c", _SHARDING_TEST],
         capture_output=True, text=True, timeout=300,
-        env={**__import__("os").environ, "PYTHONPATH": "src"},
-        cwd="/root/repo",
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=_REPO_ROOT,
     )
     assert "SPECS_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_compressed_tree_mean_dense_matches_dense_mean():
+    """The identity/dense wire format is EXACTLY the plain mean — both
+    via the comm-mode string and via CompressionConfig dispatch."""
+    from repro.configs.base import CompressionConfig
+    from repro.dist.collectives import compressed_tree_mean
+
+    key = jax.random.PRNGKey(3)
+    wtree = {
+        "a": jax.random.normal(key, (4, 17)),
+        "b": {"c": jax.random.normal(jax.random.fold_in(key, 1), (4, 3, 5))},
+    }
+    ref = dense_mean(wtree)
+    outs = [
+        compressed_tree_mean(wtree, "dense", key),
+        compressed_tree_mean(
+            wtree,
+            CompressionConfig(enabled=True, compressor="identity",
+                              comm_mode="dense"),
+            key,
+        ),
+        # a disabled config is dense regardless of its comm_mode
+        compressed_tree_mean(
+            wtree, CompressionConfig(enabled=False, comm_mode="q8_ring"), key
+        ),
+    ]
+    for out in outs:
+        jax.tree_util.tree_map(
+            lambda x, y: np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y)
+            ),
+            out, ref,
+        )
+
+
+def test_worker_stacked_pspec_prepends_worker_axes():
+    """worker_stacked_pspec = P(worker_axes, *params_pspecs entry) for
+    EVERY parameter leaf, on both host and multi-pod meshes."""
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_smoke_config
+    from repro.dist.sharding import params_pspecs, worker_stacked_pspec
+    from repro.models import model as M
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    shapes = jax.eval_shape(
+        lambda k: M.init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    specs = params_pspecs(shapes)
+    is_p = lambda x: isinstance(x, P)
+
+    for mesh_shape, axes, lead in (
+        ((1, 1), ("data", "model"), "data"),
+        ((1, 1, 1), ("pod", "data", "model"), ("pod", "data")),
+    ):
+        mesh = jax.make_mesh(mesh_shape, axes)
+        wspecs = jax.tree_util.tree_map(
+            lambda sp: worker_stacked_pspec(mesh, sp), specs, is_leaf=is_p
+        )
+
+        def check(sp, wsp):
+            assert tuple(wsp)[0] == lead, (sp, wsp)
+            assert tuple(wsp)[1:] == tuple(sp), (sp, wsp)
+
+        jax.tree_util.tree_map(check, specs, wspecs, is_leaf=is_p)

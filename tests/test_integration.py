@@ -19,6 +19,8 @@ from repro.data.tokens import TokenStream
 from repro.launch.mesh import make_host_mesh, n_workers
 from repro.launch.train import TrainState, build_train_step, init_state
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 
 def test_checkpoint_resume_exact():
     """Train 6 steps; OR train 3, checkpoint the FULL TrainState (params,
@@ -100,6 +102,6 @@ def test_sharded_loss_matches_single_device():
         [sys.executable, "-c", _SHARDED_LOSS],
         capture_output=True, text=True, timeout=600,
         env={**os.environ, "PYTHONPATH": "src"},
-        cwd="/root/repo",
+        cwd=_REPO_ROOT,
     )
     assert "SHARDED_LOSS_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]

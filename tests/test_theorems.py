@@ -37,7 +37,13 @@ from repro.data.problems import make_ridge
 
 @pytest.fixture(scope="module")
 def ridge():
-    return make_ridge(m=100, d=80, n_workers=10, seed=0)
+    # noise > 0 puts the instance in the non-interpolating regime the
+    # theorems are about: with noise=0 the workers nearly share the
+    # optimum (mean_i ||grad_i(x*)||^2 ~ 1e3, only the lam-residual), so
+    # DCGD's Theorem-1 neighborhood collapses to ~1e-7 rel-err and the
+    # DCGD-vs-STAR separation is decided by float32 luck.  noise=10
+    # gives mean_i ||grad_i(x*)||^2 ~ 1e6 and a ~3e-4 DCGD floor.
+    return make_ridge(m=100, d=80, n_workers=10, seed=0, noise=10.0)
 
 
 def test_theorem1_dcgd_neighborhood(ridge):

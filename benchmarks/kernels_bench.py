@@ -32,11 +32,13 @@ def _time(fn, *args, n=5):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def main():
+def main(smoke: bool = False):
+    """``smoke=True`` shrinks every size to a CI-scale config — same
+    code paths (pallas interpret + jnp reference), seconds not minutes."""
     rows = []
     key = jax.random.PRNGKey(0)
 
-    for n in (32_768, 1_048_576):
+    for n in (4_096,) if smoke else (32_768, 1_048_576):
         g = jax.random.normal(key, (n,))
         h = jnp.zeros((n,))
         t_k = _time(lambda: shifted_natural(key, g, h))
@@ -44,15 +46,16 @@ def main():
         t_r = _time(jax.jit(shifted_natural_ref), g, h, u)
         rows.append((f"shifted_natural n={n}", f"{t_k:.0f}us", f"{t_r:.0f}us"))
 
-    for n in (65_536, 1_048_576):
+    for n in (8_192,) if smoke else (65_536, 1_048_576):
         x = jax.random.normal(key, (n,))
         t_k = _time(lambda: block_topk(x, q=0.1))
         x2 = x.reshape(-1, 128)
+        # k is PER 8192-element (64x128) block of the reference, not per n
         t_r = _time(jax.jit(
             lambda a: block_topk_ref(a, k=819, block=64)), x2)
         rows.append((f"block_topk n={n}", f"{t_k:.0f}us", f"{t_r:.0f}us"))
 
-    b, t, hh, d = 2, 256, 4, 64
+    b, t, hh, d = (1, 64, 2, 64) if smoke else (2, 256, 4, 64)
     ks = jax.random.split(key, 5)
     r = jax.random.normal(ks[0], (b, t, hh, d))
     k2 = jax.random.normal(ks[1], (b, t, hh, d))

@@ -1,8 +1,10 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast | --smoke] [--only ...]
 
---fast shrinks step counts ~4x for CI-style runs.
+--fast shrinks step counts ~4x for CI-style runs; --smoke shrinks them
+~50x AND runs the kernel microbench at tiny sizes — the CI job that
+keeps every bench entrypoint importable and runnable.
 """
 
 from __future__ import annotations
@@ -15,13 +17,16 @@ import time
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-config run of every suite (CI smoke)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig2,fig4,table1,"
-                         "gdci,kernels,roofline")
+                         "gdci,ef21,kernels,roofline")
     args = ap.parse_args(argv)
-    scale = 4 if args.fast else 1
+    scale = 50 if args.smoke else (4 if args.fast else 1)
 
     from benchmarks import (
+        ef21_bench,
         fig1_ridge,
         fig2_stability,
         fig4_logreg,
@@ -37,7 +42,8 @@ def main(argv=None):
         "fig4": lambda: fig4_logreg.main(steps=fig4_logreg.STEPS // scale),
         "table1": lambda: table1_rates.main(steps=table1_rates.STEPS // scale),
         "gdci": lambda: gdci_bench.main(steps=gdci_bench.STEPS // scale),
-        "kernels": kernels_bench.main,
+        "ef21": lambda: ef21_bench.main(steps=ef21_bench.STEPS // scale),
+        "kernels": lambda: kernels_bench.main(smoke=args.smoke),
         "roofline": roofline_report.main,
     }
     only = set(args.only.split(",")) if args.only else set(suites)

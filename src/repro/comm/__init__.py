@@ -1,0 +1,26 @@
+"""repro.comm — the unified Channel for compressed communication.
+
+See ``repro.comm.channel`` for the abstraction; ``SimChannel`` is the
+vmapped parameter server used by the reference algebra in ``repro.core``,
+``MeshChannel`` wraps the codec-driven collectives in ``repro.dist``.
+"""
+
+from repro.comm.channel import (
+    AGGREGATION_MODES,
+    Channel,
+    MeshChannel,
+    SimChannel,
+    aggregation_mode_of,
+    collective_payload_scale,
+    make_channel,
+)
+
+__all__ = [
+    "AGGREGATION_MODES",
+    "Channel",
+    "MeshChannel",
+    "SimChannel",
+    "aggregation_mode_of",
+    "collective_payload_scale",
+    "make_channel",
+]

@@ -1,0 +1,202 @@
+"""The Channel: one transport abstraction for compressed messages.
+
+Algorithm 1 has two communication directions, and the framework now
+routes BOTH through a single interface instead of ad-hoc call sites:
+
+  ``uplink(q, key, wtree)``
+        workers encode their (shifted) gradients with codec ``q`` and
+        send the payloads to the master.  Returns the decoded
+        worker-stacked messages plus the TOTAL wire bits, computed
+        structurally from the actual payloads (``q.wire_bits``) — no
+        analytic ``bits(d)`` formulas on any live path.
+  ``reduce_mean(key, wtree)``
+        master-side aggregation of (already decoded) worker messages in
+        the channel's aggregation wire format.
+  ``push_mean(q, key, wtree)``
+        the composed round: uplink then aggregate.
+  ``broadcast(q, key, tree)``
+        the downlink (model-broadcast) direction: one encoded message
+        from the master, decoded by every worker.
+
+Two interchangeable implementations:
+
+  ``SimChannel``   the vmapped parameter-server of ``core.simulate`` /
+        ``core.shift_rules``: the master receives every decoded message
+        exactly (aggregation = exact mean over the worker axis).
+  ``MeshChannel``  the production path: uplink is identical (messages
+        live on their worker's device slice), aggregation wraps
+        ``dist.collectives`` — dense psum, shared-pattern Rand-K, or the
+        int8 ring/tree all-reduce, all driven by the same codecs.
+
+``make_channel`` builds the right one from a ``CompressionConfig`` (or a
+comm-mode string), replacing the string dispatch that used to live in
+``launch/train.py``.  The ``ef21`` comm mode aggregates densely — the
+messages themselves are the contractive-compressed EF21 increments.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+if TYPE_CHECKING:  # import cycle: core.shift_rules routes through Channel
+    from repro.core.compressors import Compressor
+
+tmap = jax.tree_util.tree_map
+
+#: aggregation formats a MeshChannel supports (ef21/disabled map to dense)
+AGGREGATION_MODES = ("dense", "randk_shared", "q8_ring")
+
+
+class Channel:
+    """Transport for compressed messages between workers and master."""
+
+    def uplink(self, q: Compressor, key: jax.Array, wtree) -> Tuple[Any, jax.Array]:
+        """Encode+decode each worker's slice of a W-stacked pytree.
+
+        Workers get decorrelated keys unless the codec declares a shared
+        pattern (correlated Rand-K) or is deterministic, in which case
+        every worker samples the same key — the property the
+        payload-shrinking collective relies on.  Returns
+        ``(decoded W-stacked messages, total wire bits)``; bits are
+        structural (summed ``q.wire_bits`` over the actual payloads).
+        """
+        leaves, treedef = jax.tree_util.tree_flatten(wtree)
+        shared = bool(getattr(q, "shared_pattern", False))
+        out = []
+        bits = jnp.zeros((), jnp.float32)
+        for i, leaf in enumerate(leaves):
+            lk = jax.random.fold_in(key, i)
+            w = leaf.shape[0]
+            if shared or not q.stochastic:
+                keys = jnp.broadcast_to(lk, (w, *lk.shape))
+            else:
+                keys = jax.random.split(lk, w)
+            sds = jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype)
+
+            def enc_dec(k, row):
+                payload, meta = q.encode(k, row)
+                return payload, q.decode(payload, meta, sds)
+
+            payload, decoded = jax.vmap(enc_dec)(keys, leaf)
+            bits = bits + q.wire_bits(payload)
+            out.append(decoded)
+        return jax.tree_util.tree_unflatten(treedef, out), bits
+
+    def reduce_mean(self, key: jax.Array, wtree):
+        raise NotImplementedError
+
+    def push_mean(self, q: Compressor, key: jax.Array, wtree):
+        """One uplink round: ``(messages, mean over workers, wire bits)``."""
+        k1, k2 = jax.random.split(key)
+        m, bits = self.uplink(q, k1, wtree)
+        return m, self.reduce_mean(k2, m), bits
+
+    def broadcast(self, q: Compressor, key: jax.Array, tree) -> Tuple[Any, jax.Array]:
+        """Downlink (model-broadcast): one encoded message per leaf."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        out = []
+        bits = jnp.zeros((), jnp.float32)
+        for i, leaf in enumerate(leaves):
+            lk = jax.random.fold_in(key, i)
+            payload, meta = q.encode(lk, leaf)
+            bits = bits + q.wire_bits(payload)
+            out.append(
+                q.decode(payload, meta,
+                         jax.ShapeDtypeStruct(leaf.shape, leaf.dtype))
+            )
+        return jax.tree_util.tree_unflatten(treedef, out), bits
+
+
+@dataclass(frozen=True, eq=False)
+class SimChannel(Channel):
+    """Vmapped parameter server: the master sees every decoded message
+    exactly, so aggregation is the exact mean over the worker axis."""
+
+    def reduce_mean(self, key, wtree):
+        return tmap(lambda a: jnp.mean(a, axis=0), wtree)
+
+
+@dataclass(frozen=True, eq=False)
+class MeshChannel(Channel):
+    """Production channel on a device mesh.
+
+    ``mode`` picks the aggregation wire format (see ``AGGREGATION_MODES``);
+    ``wspecs`` optionally carries worker-stacked PartitionSpecs so the
+    q8 ring's shard_map preserves inner-dim sharding.
+    """
+
+    mode: str = "dense"
+    mesh: Any = None
+    randk_q: float = 0.05
+    wspecs: Any = None
+
+    def __post_init__(self):
+        if self.mode not in AGGREGATION_MODES:
+            raise ValueError(
+                f"unknown aggregation mode {self.mode!r}; "
+                f"have {AGGREGATION_MODES}"
+            )
+
+    def reduce_mean(self, key, wtree):
+        from repro.dist.collectives import compressed_tree_mean
+
+        return compressed_tree_mean(
+            wtree, self.mode, key, self.mesh,
+            randk_q=self.randk_q, wspecs=self.wspecs,
+        )
+
+
+def aggregation_mode_of(mode_or_cfg) -> str:
+    """Normalize a comm-mode string / CompressionConfig to an aggregation
+    format: disabled configs and the ``ef21`` mode aggregate densely
+    (EF21's wire savings are in the per-worker contractive messages)."""
+    if hasattr(mode_or_cfg, "aggregation_mode"):  # CompressionConfig
+        return mode_or_cfg.aggregation_mode
+    return "dense" if mode_or_cfg == "ef21" else mode_or_cfg
+
+
+def make_channel(mode_or_cfg="dense", mesh=None, *, randk_q: float = 0.05,
+                 wspecs=None) -> Channel:
+    """Build a Channel from a comm-mode string or a CompressionConfig.
+
+    ``"sim"`` gives the parameter-server SimChannel; everything else a
+    MeshChannel in the corresponding aggregation format.
+    """
+    if hasattr(mode_or_cfg, "comm_mode"):
+        randk_q = mode_or_cfg.randk_q
+    elif mode_or_cfg == "sim":
+        return SimChannel()
+    mode = aggregation_mode_of(mode_or_cfg)
+    return MeshChannel(mode=mode, mesh=mesh, randk_q=randk_q, wspecs=wspecs)
+
+
+def collective_payload_scale(cfg, d_nominal: int = 1_000_000) -> dict:
+    """Per-collective-kind wire fraction for the HLO payload cost model.
+
+    Only aggregation formats whose HLO lowering is DENSE while the
+    protocol payload is compressed need a scale.  The codec-driven
+    collectives are structurally honest on their own: the q8 ring's s8
+    payloads and the shared-pattern Rand-K's K-sized value mean both
+    appear at true wire size in the HLO text (scale 1 — the ROADMAP's
+    "wire randk_shared payload accounting into the HLO cost model" item
+    is satisfied by the lowering itself).  EF21 is the remaining dense
+    lowering: its aggregation is an exact mean of DECODED sparse
+    messages, so the all-reduce is full-width in HLO while the wire
+    carries the contractive codec's payload — scale by that codec's
+    wire fraction, derived structurally (``bits`` shim), not from an
+    analytic formula.  Apply it to the GRADIENT-MESSAGE share only
+    (``hlo_cost.apply_gradient_payload_model``): activation all-reduces
+    under model parallelism are genuine dense traffic.
+    """
+    if not getattr(cfg, "enabled", True):
+        return {}
+    if getattr(cfg, "comm_mode", "dense") == "ef21":
+        from repro.core.compressors import make_compressor
+
+        q = make_compressor(cfg.compressor, **dict(cfg.compressor_kwargs))
+        return {"all-reduce": q.bits(d_nominal) / (32.0 * d_nominal)}
+    return {}

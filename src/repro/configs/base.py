@@ -122,28 +122,54 @@ INPUT_SHAPES = {
 
 @dataclass(frozen=True)
 class CompressionConfig:
-    """How the DCGD-SHIFT layer is wired into the training step."""
+    """How the DCGD-SHIFT layer is wired into the training step.
+
+    ``comm_mode`` selects the Channel (see ``repro.comm``): ``dense`` /
+    ``randk_shared`` / ``q8_ring`` pick the uplink aggregation wire
+    format; ``ef21`` selects the error-feedback mode (contractive
+    messages integrated into the shifts, aggregated densely) and
+    overrides ``shift_rule``.
+    """
     enabled: bool = True
     compressor: str = "natural"    # see core.compressors.make_compressor
     compressor_kwargs: tuple = ()  # tuple of (key, value) pairs (hashable)
-    shift_rule: str = "diana"      # fixed | diana | rand_diana | vr_gdci
+    shift_rule: str = "diana"      # fixed | diana | rand_diana | vr_gdci | ef21
     shift_alpha: float = 0.125     # DIANA / VR-GDCI alpha
     shift_p: float = 0.05          # Rand-DIANA refresh probability
     gdci_eta: float = 0.5          # VR-GDCI model-mixing rate
-    comm_mode: str = "dense"       # dense | q8_ring | randk_shared
+    comm_mode: str = "dense"       # dense | q8_ring | randk_shared | ef21
     randk_q: float = 0.05          # keep-fraction for randk_shared
+
+    @property
+    def effective_shift_rule(self) -> str:
+        """The update rule actually run (``ef21`` comm mode implies it)."""
+        return "ef21" if self.comm_mode == "ef21" else self.shift_rule
+
+    @property
+    def aggregation_mode(self) -> str:
+        """Wire format of the master-side aggregation: disabled configs
+        and EF21 aggregate densely (EF21's savings are in the
+        per-worker contractive messages)."""
+        if not self.enabled:
+            return "dense"
+        from repro.comm.channel import aggregation_mode_of
+
+        return aggregation_mode_of(self.comm_mode)
 
     def make(self):
         from repro.core import make_compressor, make_shift_rule
         q = make_compressor(self.compressor, **dict(self.compressor_kwargs))
-        if self.shift_rule in ("fixed", "dcgd"):
+        rule_name = self.effective_shift_rule
+        if rule_name in ("fixed", "dcgd"):
             rule = make_shift_rule("fixed")
-        elif self.shift_rule == "diana":
+        elif rule_name == "diana":
             rule = make_shift_rule("diana", alpha=self.shift_alpha)
-        elif self.shift_rule == "rand_diana":
+        elif rule_name == "rand_diana":
             rule = make_shift_rule("rand_diana", p=self.shift_p)
+        elif rule_name == "ef21":
+            rule = make_shift_rule("ef21")
         else:
-            raise ValueError(self.shift_rule)
+            raise ValueError(rule_name)
         return q, rule
 
 

@@ -9,6 +9,7 @@ from repro.core.compressors import (
     Int8Stochastic,
     NaturalCompression,
     NaturalDithering,
+    PackedBits,
     RandK,
     ScaledSign,
     TernGrad,
@@ -21,9 +22,11 @@ from repro.core.compressors import (
     tree_compress,
     tree_shifted_compress,
     tree_size,
+    wire_bits,
 )
 from repro.core.shift_rules import (
     DianaShift,
+    EF21Shift,
     FixedShift,
     RandDianaShift,
     ShiftRule,
@@ -38,6 +41,7 @@ from repro.core.algorithms import (
     stepsize_dcgd_fixed,
     stepsize_dcgd_star,
     stepsize_diana,
+    stepsize_ef21,
     stepsize_rand_diana,
 )
 from repro.core.iterate_comp import (

@@ -14,13 +14,15 @@ can run exactly in the regime the theory covers.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import Compressor, Unbiased, Identity
+from repro.comm.channel import Channel
+from repro.core.compressors import Compressor, Identity
 from repro.core.shift_rules import FixedShift, ShiftRule, stack_like
 
 
@@ -35,12 +37,16 @@ class DCGDState(NamedTuple):
 class DCGDShift:
     """Distributed Compressed Gradient Descent with Shift (Alg. 1).
 
-    ``q``    — per-worker unbiased compressor Q_i in U(omega)
-    ``rule`` — the shift update mechanism (Section 3)
+    ``q``       — per-worker compressor Q_i (unbiased U(omega) for the
+                  DIANA family; contractive B(delta) for EF21)
+    ``rule``    — the shift update mechanism (Section 3)
+    ``channel`` — the message transport; ``None`` means the vmapped
+                  parameter-server ``SimChannel`` (the paper's setting)
     """
 
-    q: Unbiased = field(default_factory=Identity)
+    q: Compressor = field(default_factory=Identity)
     rule: ShiftRule = field(default_factory=FixedShift)
+    channel: Optional[Channel] = None
 
     def init(self, wgrads_like, *, seed: int = 0, star: Any = None) -> DCGDState:
         if star is not None:
@@ -61,7 +67,9 @@ class DCGDShift:
         unbiased estimator of the full gradient (no worker axis).
         """
         key, sub = jax.random.split(state.key)
-        g_bar, h_new, bits = self.rule.step(self.q, sub, wgrads, state.h)
+        g_bar, h_new, bits = self.rule.step(
+            self.q, sub, wgrads, state.h, channel=self.channel
+        )
         return g_bar, DCGDState(
             h=h_new, key=key, step=state.step + 1, bits=state.bits + bits
         )
@@ -104,3 +112,15 @@ def stepsize_rand_diana(L_max, omega, n, p, M_mult: float = 2.0):
 def rand_diana_default_p(omega: float) -> float:
     """p = 1/(omega+1) — matches DIANA's iteration complexity (Sec. 3.2.2)."""
     return 1.0 / (omega + 1.0)
+
+
+def stepsize_ef21(L, L_max, delta):
+    """EF21 (Richtárik, Sokolov & Fatkhullin, 2021, Thm 1): with a
+    delta-contractive C, theta = 1 - sqrt(1-delta), beta = (1-delta)/theta,
+    gamma <= 1 / (L + L_tilde sqrt(beta/theta)); we bound L_tilde =
+    sqrt(mean_i L_i^2) by L_max.  delta = 1 (Identity) recovers 1/L."""
+    theta = 1.0 - math.sqrt(max(1.0 - delta, 0.0))
+    if theta <= 0.0:
+        return 0.0  # delta == 0: the compressor makes no progress
+    beta = (1.0 - delta) / theta
+    return 1.0 / (L + L_max * math.sqrt(beta / theta))

@@ -1,4 +1,4 @@
-"""Compression operators — the paper's Definitions 1-3 as composable JAX objects.
+"""Compression operators — the paper's Definitions 1-3 as wire codecs.
 
 Two families:
 
@@ -6,22 +6,46 @@ Two families:
         E ||C(x) - x||^2 <= omega ||x||^2.
   * ``Contractive`` (class ``B(delta)``, Def. 1): E ||C(x) - x||^2 <= (1-delta)||x||^2.
 
+The paper's object of interest is the *compressed message* ``m_i =
+Q(grad_i - h_i)`` that actually travels on the wire, so every operator
+is an explicit codec:
+
+  ``encode(key, x) -> (payload, meta)``
+        ``payload`` is a pytree of arrays with honest wire dtypes (int8
+        quantized values, packed indices, f32 scales).  ``meta`` carries
+        side information the receiver derives from *shared* state (e.g.
+        the correlated Rand-K pattern implied by a shared seed) — it is
+        never charged to the wire.
+  ``decode(payload, meta, shape_dtype) -> x_hat``
+        reconstructs the dense message; ``shape_dtype`` is a
+        ``jax.ShapeDtypeStruct`` for the original tensor.
+  ``__call__(key, x)``
+        the dense compress->decompress round trip the optimizer math
+        sees — *derived* as ``decode(encode(key, x))``, never written by
+        hand.
+  ``wire_bits(payload)``
+        bits on the wire for one payload, computed structurally from
+        the payload's shapes/dtypes (``PackedBits`` leaves carry
+        sub-dtype widths, e.g. 10-bit indices stored in an int32
+        container).  Works on real arrays and on
+        ``jax.eval_shape`` outputs alike.
+  ``omega(d)`` / ``delta(d)``
+        variance constants for step-size rules.
+  ``bits(d)``
+        DEPRECATED shim: wire size of one compressed f32 d-vector,
+        now derived structurally (``wire_bits`` of the eval_shape'd
+        payload) instead of a hand-written formula.  Kept because the
+        step-size/benchmark layers still quote per-message costs by
+        dimension; tests pin it against ``wire_bits``.
+
 Every operator works on arrays of arbitrary shape (treated as flattened
 vectors where ordering matters) and is a hashable frozen dataclass so it
-can be closed over inside ``jax.jit``.  Each operator reports the number
-of *bits on the wire* for one message (``bits(d)``) so algorithms can be
-compared in communicated-bits space, as in the paper's experiments.
+can be closed over inside ``jax.jit``.
 
-Operators expose:
-
-  ``__call__(key, x)``      dense compress->decompress round trip (what the
-                            optimizer math sees).
-  ``omega(d)`` / ``delta(d)``  variance constants for step-size rules.
-  ``bits(d)``               wire size of one compressed d-vector message.
-
-The payload-reducing structured forms (values-only Rand-K with a shared
-pattern, int8 blocks for the quantized ring all-reduce) live in
-``repro.dist.collectives`` — here we keep the operator algebra.
+The transport of payloads (vmapped parameter server, shared-pattern
+Rand-K aggregation, int8 ring all-reduce) lives in ``repro.comm`` and
+``repro.dist.collectives`` — both are driven by these codecs; neither
+re-derives payload formats.
 """
 
 from __future__ import annotations
@@ -29,12 +53,16 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Optional
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 FLOAT_BITS = 32  # wire width of an uncompressed scalar
+
+# ShapeDtypeStruct stand-in for a PRNG key, used by the bits(d) shim.
+_KEY_SDS = jax.ShapeDtypeStruct((2,), jnp.uint32)
 
 
 def _flat(x):
@@ -46,6 +74,69 @@ def _k_of(q: float, d: int) -> int:
     return max(1, int(round(q * d)))
 
 
+def _index_bits(d: int) -> int:
+    """Bits to address one of d coordinates on the wire."""
+    return math.ceil(math.log2(max(d, 2)))
+
+
+def _numel(shape) -> int:
+    return int(math.prod(shape)) if shape else 1
+
+
+def _dtype_bits(dtype) -> int:
+    return int(np.dtype(dtype).itemsize) * 8
+
+
+@jax.tree_util.register_pytree_node_class
+class PackedBits:
+    """Payload leaf whose true wire width is ``width`` bits per element.
+
+    JAX has no sub-byte array dtypes for e.g. 10-bit Rand-K indices or
+    1-bit signs, so codecs store such fields in the smallest container
+    dtype and declare the packed width here; ``wire_bits`` charges
+    ``width * numel`` instead of the container width.  Registered as a
+    pytree node so payloads remain ordinary pytrees under vmap /
+    shard_map / ppermute.
+    """
+
+    __slots__ = ("data", "width")
+
+    def __init__(self, data, width: int):
+        self.data = data
+        self.width = int(width)
+
+    def tree_flatten(self):
+        return (self.data,), self.width
+
+    @classmethod
+    def tree_unflatten(cls, width, children):
+        return cls(children[0], width)
+
+    def __repr__(self):
+        return f"PackedBits({self.data!r}, width={self.width})"
+
+
+def _is_packed(x) -> bool:
+    return isinstance(x, PackedBits)
+
+
+def wire_bits(payload) -> float:
+    """Structural wire size of a payload pytree, in bits.
+
+    Counts ``numel * dtype_bits`` per array leaf and ``numel * width``
+    per ``PackedBits`` leaf.  Accepts concrete arrays or
+    ``ShapeDtypeStruct`` leaves (so costs can be computed AOT via
+    ``jax.eval_shape`` without running the codec).
+    """
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(payload, is_leaf=_is_packed):
+        if _is_packed(leaf):
+            total += _numel(leaf.data.shape) * leaf.width
+        else:
+            total += _numel(leaf.shape) * _dtype_bits(leaf.dtype)
+    return float(total)
+
+
 # --------------------------------------------------------------------------
 # Base classes
 # --------------------------------------------------------------------------
@@ -53,13 +144,45 @@ def _k_of(q: float, d: int) -> int:
 
 @dataclass(frozen=True)
 class Compressor:
-    """Base class.  Subclasses are frozen dataclasses => hashable/static."""
+    """Base codec.  Subclasses are frozen dataclasses => hashable/static.
+
+    Subclasses implement ``encode``/``decode`` (the wire protocol); the
+    dense round trip ``__call__`` and the accounting (``wire_bits``,
+    ``bits``) are derived here.
+    """
+
+    def encode(self, key: jax.Array, x: jax.Array) -> Tuple[Any, Any]:
+        raise NotImplementedError
+
+    def decode(self, payload, meta, shape_dtype) -> jax.Array:
+        raise NotImplementedError
 
     def __call__(self, key: jax.Array, x: jax.Array) -> jax.Array:
-        raise NotImplementedError
+        payload, meta = self.encode(key, x)
+        return self.decode(
+            payload, meta, jax.ShapeDtypeStruct(x.shape, x.dtype)
+        )
+
+    def wire_bits(self, payload) -> float:
+        """Wire bits of one (possibly worker-stacked) payload.
+
+        Default: the structural module-level ``wire_bits``.  Codecs
+        whose payload size is itself a random variable (``BernoulliP``)
+        override this with a traced, data-dependent count.
+        """
+        return wire_bits(payload)
 
     def bits(self, d: int) -> float:
-        raise NotImplementedError
+        """DEPRECATED: analytic-style wire size of one f32 d-vector.
+
+        Derived structurally from the encoded payload shapes via
+        ``jax.eval_shape`` — no hand-written formulas.  Prefer
+        ``wire_bits(payload)`` on actual payloads.
+        """
+        payload, _ = jax.eval_shape(
+            self.encode, _KEY_SDS, jax.ShapeDtypeStruct((d,), jnp.float32)
+        )
+        return self.wire_bits(payload)
 
     @property
     def stochastic(self) -> bool:
@@ -91,17 +214,19 @@ class Contractive(Compressor):
 class Identity(Unbiased, Contractive):
     """I in U(0) and B(1): full-precision message."""
 
-    def __call__(self, key, x):
-        return x
+    def encode(self, key, x):
+        return {"values": x}, {}
+
+    def decode(self, payload, meta, shape_dtype):
+        return jnp.reshape(payload["values"], shape_dtype.shape).astype(
+            shape_dtype.dtype
+        )
 
     def omega(self, d):
         return 0.0
 
     def delta(self, d):
         return 1.0
-
-    def bits(self, d):
-        return FLOAT_BITS * d
 
     @property
     def stochastic(self):
@@ -112,16 +237,17 @@ class Identity(Unbiased, Contractive):
 class Zero(Compressor):
     """O — maps everything to zero; 'delta interpreted as 0' in the paper.
 
-    Used as the C_i of plain DCGD (no shift learning) — zero wire cost.
+    Used as the C_i of plain DCGD (no shift learning) — the payload is
+    empty: zero wire cost by construction.
     """
 
-    def __call__(self, key, x):
-        return jnp.zeros_like(x)
+    def encode(self, key, x):
+        return {}, {}
+
+    def decode(self, payload, meta, shape_dtype):
+        return jnp.zeros(shape_dtype.shape, shape_dtype.dtype)
 
     def delta(self, d):
-        return 0.0
-
-    def bits(self, d):
         return 0.0
 
     @property
@@ -139,35 +265,50 @@ class RandK(Unbiased):
     """Random sparsification (eq. 2): keep a uniformly random K-subset,
     scale by d/K.  RandK(q) keeps K = round(q*d) coords; omega = d/K - 1.
 
-    ``shared_pattern`` marks that all workers use the same key for a given
-    step (correlated sampling).  It does not change the operator law on a
-    single input, but it makes the *aggregated* message K-dimensional —
-    exploited by ``dist.collectives.randk_shared_mean``.
+    The K-subset is the prefix of a random permutation, so EXACTLY K
+    coordinates survive for every draw (a threshold on uniform scores
+    keeps more than K when float32 scores tie, and the d/K rescale then
+    makes the operator biased — see the exact-K regression test).
+
+    Payload: K values (input dtype) + K packed ceil(log2 d)-bit indices.
+    ``shared_pattern`` marks that all workers use the same key for a
+    given step (correlated sampling): the indices are implied by the
+    shared seed, move to ``meta``, and are not charged to the wire —
+    exploited by ``dist.collectives.randk_shared_mean``, where the
+    aggregated message stays K-dimensional.
     """
 
     q: float = 0.1
     shared_pattern: bool = False
 
-    def __call__(self, key, x):
-        shape = x.shape
+    def encode(self, key, x):
         xf = _flat(x)
         d = xf.shape[0]
         k = _k_of(self.q, d)
-        # Uniform K-subset via random permutation ranks.
-        scores = jax.random.uniform(key, (d,))
-        thresh = jnp.sort(scores)[k - 1]
-        mask = (scores <= thresh).astype(x.dtype)
-        out = xf * mask * (d / k)
-        return jnp.reshape(out, shape)
+        idx = jax.random.permutation(key, d)[:k].astype(jnp.int32)
+        values = xf[idx] * (d / k)
+        if self.shared_pattern:
+            return {"values": values}, {"indices": idx}
+        return (
+            {"values": values, "indices": PackedBits(idx, _index_bits(d))},
+            {},
+        )
+
+    def decode(self, payload, meta, shape_dtype):
+        d = _numel(shape_dtype.shape)
+        idx = (
+            meta["indices"] if self.shared_pattern
+            else payload["indices"].data
+        )
+        out = (
+            jnp.zeros((d,), shape_dtype.dtype)
+            .at[idx]
+            .set(payload["values"].astype(shape_dtype.dtype))
+        )
+        return jnp.reshape(out, shape_dtype.shape)
 
     def omega(self, d):
         return d / _k_of(self.q, d) - 1.0
-
-    def bits(self, d):
-        k = _k_of(self.q, d)
-        if self.shared_pattern:
-            return FLOAT_BITS * k  # indices implied by shared seed
-        return k * (FLOAT_BITS + math.ceil(math.log2(max(d, 2))))
 
 
 @dataclass(frozen=True)
@@ -175,19 +316,44 @@ class BernoulliP(Unbiased):
     """B_p — full vector scaled 1/p with prob. p, else 0.  omega = 1/p - 1.
 
     The C_i of Rand-DIANA (Table 2): the shift is refreshed w.p. p.
+    The payload size is a random variable (one flag bit always; the full
+    vector only when it fires), so ``wire_bits`` is traced and ``bits``
+    reports the expectation.
     """
 
     p: float = 0.1
 
-    def __call__(self, key, x):
+    def encode(self, key, x):
         keep = jax.random.bernoulli(key, self.p)
-        return jnp.where(keep, x / self.p, jnp.zeros_like(x))
+        values = jnp.where(keep, x / self.p, jnp.zeros_like(x))
+        return {"sent": keep, "values": values}, {}
+
+    def decode(self, payload, meta, shape_dtype):
+        return jnp.reshape(payload["values"], shape_dtype.shape).astype(
+            shape_dtype.dtype
+        )
+
+    def wire_bits(self, payload):
+        """Actual (traced) bits: flag + full vector iff it fired.
+
+        Handles worker-stacked payloads (``sent`` shaped ``(W,)``) the
+        same way: each message is charged independently.  On
+        ``eval_shape`` payloads (AOT costing, the ``bits(d)`` shim) the
+        flag has no value, so the EXPECTATION p * full + flag is
+        returned instead.
+        """
+        sent = payload["sent"]
+        n_msg = _numel(sent.shape)
+        per_msg = (
+            _dtype_bits(payload["values"].dtype)
+            * (_numel(payload["values"].shape) // n_msg)
+        )
+        if isinstance(sent, jax.ShapeDtypeStruct):  # AOT: expectation
+            return self.p * per_msg * n_msg + float(n_msg)
+        return jnp.sum(sent.astype(jnp.float32)) * per_msg + float(n_msg)
 
     def omega(self, d):
         return 1.0 / self.p - 1.0
-
-    def bits(self, d):
-        return self.p * FLOAT_BITS * d  # expected bits
 
 
 @dataclass(frozen=True)
@@ -198,11 +364,15 @@ class NaturalDithering(Unbiased):
     Levels are the exponent lattice {2^0, 2^-1, ..., 2^-(s-1), 0} applied
     to |x|/||x||_2, with unbiased stochastic rounding between neighbouring
     levels.  omega <= 1/8 + 2^(1-s) * min(sqrt(d), 2^(1-s) d)  (their Thm 1).
+
+    Payload per coordinate: a packed ceil(log2(s+1))-bit level code
+    (0 = zero level, c >= 1 = 2^{-(c-1)}) + a 1-bit sign, plus one f32
+    norm per message.
     """
 
     s: int = 8
 
-    def __call__(self, key, x):
+    def encode(self, key, x):
         xf = x.astype(jnp.float32)
         norm = jnp.sqrt(jnp.sum(xf * xf))
         safe = jnp.maximum(norm, jnp.finfo(jnp.float32).tiny)
@@ -213,43 +383,65 @@ class NaturalDithering(Unbiased):
         lo = jnp.where(j >= self.s - 1, 0.0, jnp.exp2(-(j + 1.0)))
         # Stochastic rounding between lo and hi, unbiased in y.
         p_hi = (y - lo) / jnp.maximum(hi - lo, 1e-38)
-        u = jax.random.uniform(key, x.shape)
-        lvl = jnp.where(u < p_hi, hi, lo)
-        lvl = jnp.where(y == 0.0, 0.0, lvl)
-        return (jnp.sign(xf) * norm * lvl).astype(x.dtype)
+        take_hi = jax.random.uniform(key, x.shape) < p_hi
+        code_lo = jnp.where(j >= self.s - 1, 0.0, j + 2.0)
+        code = jnp.where(take_hi, j + 1.0, code_lo)
+        code = jnp.where(y == 0.0, 0.0, code).astype(jnp.int8)
+        sign = jnp.sign(xf).astype(jnp.int8)
+        return (
+            {
+                "code": PackedBits(code, _index_bits(self.s + 1)),
+                "sign": PackedBits(sign, 1),
+                "norm": norm,
+            },
+            {},
+        )
+
+    def decode(self, payload, meta, shape_dtype):
+        code = payload["code"].data.astype(jnp.float32)
+        lvl = jnp.where(code > 0, jnp.exp2(-(code - 1.0)), 0.0)
+        sign = payload["sign"].data.astype(jnp.float32)
+        out = sign * payload["norm"] * lvl
+        return jnp.reshape(out, shape_dtype.shape).astype(shape_dtype.dtype)
 
     def omega(self, d):
         t = 2.0 ** (1 - self.s)
         return 0.125 + t * min(math.sqrt(d), t * d)
 
-    def bits(self, d):
-        # sign + level index per coordinate, one f32 norm.
-        return d * (1 + math.ceil(math.log2(self.s + 1))) + FLOAT_BITS
-
 
 @dataclass(frozen=True)
 class NaturalCompression(Unbiased):
     """C_nat — stochastic rounding to the nearest powers of two.
-    omega = 1/8; ~9 bits/coordinate (sign + 8-bit exponent)."""
+    omega = 1/8; 9 bits/coordinate on the wire (1-bit sign + 8-bit
+    exponent; x = 0 is signalled by sign 0)."""
 
-    def __call__(self, key, x):
+    def encode(self, key, x):
         # elementwise and SHAPE-PRESERVING: never flattens, so sharded
         # gradient leaves stay sharded (no spurious all-gathers).
         xf = x.astype(jnp.float32)
         a = jnp.abs(xf)
-        e = jnp.floor(jnp.log2(jnp.maximum(a, 1e-38)))
-        lo = jnp.exp2(e)
-        p_hi = a / lo - 1.0  # in [0,1): distance to 2^e within [2^e, 2^{e+1})
-        u = jax.random.uniform(key, x.shape)
-        out = jnp.where(u < p_hi, 2.0 * lo, lo)
-        out = jnp.where(a == 0.0, 0.0, out) * jnp.sign(xf)
-        return out.astype(x.dtype)
+        # floor at the min NORMAL f32 (2^-126): a subnormal floor would
+        # flush to 0 under XLA's log2 and yield e = -inf -> int16 min,
+        # escaping the declared 8-bit code range for exact-zero coords
+        e = jnp.floor(jnp.log2(jnp.maximum(a, jnp.finfo(jnp.float32).tiny)))
+        p_hi = a / jnp.exp2(e) - 1.0  # in [0,1): position within [2^e, 2^{e+1})
+        up = jax.random.uniform(key, x.shape) < p_hi
+        e_out = (e + up.astype(jnp.float32)).astype(jnp.int16)
+        sign = jnp.sign(xf).astype(jnp.int8)
+        # e_out spans [-126, 128]: 255 codes -> 8 wire bits (zero is
+        # signalled by sign 0, not by an exponent code)
+        return (
+            {"exp": PackedBits(e_out, 8), "sign": PackedBits(sign, 1)},
+            {},
+        )
+
+    def decode(self, payload, meta, shape_dtype):
+        mag = jnp.exp2(payload["exp"].data.astype(jnp.float32))
+        out = payload["sign"].data.astype(jnp.float32) * mag
+        return jnp.reshape(out, shape_dtype.shape).astype(shape_dtype.dtype)
 
     def omega(self, d):
         return 0.125
-
-    def bits(self, d):
-        return 9 * d
 
 
 @dataclass(frozen=True)
@@ -257,45 +449,50 @@ class TernGrad(Unbiased):
     """Ternary quantization (Wen et al., 2017): sign(x)*||x||_inf*Bern(|x|/||x||_inf).
 
     Unbiased; omega is data dependent, bounded by sqrt(d) for the worst case.
+    Payload: one packed 2-bit ternary digit per coordinate + an f32 scale.
     """
 
-    def __call__(self, key, x):
+    def encode(self, key, x):
         xf = x.astype(jnp.float32)
         m = jnp.maximum(jnp.max(jnp.abs(xf)), jnp.finfo(jnp.float32).tiny)
-        p = jnp.abs(xf) / m
-        b = jax.random.bernoulli(key, p).astype(jnp.float32)
-        return (jnp.sign(xf) * m * b).astype(x.dtype)
+        b = jax.random.bernoulli(key, jnp.abs(xf) / m)
+        t = (jnp.sign(xf) * b.astype(jnp.float32)).astype(jnp.int8)
+        return {"tern": PackedBits(t, 2), "scale": m}, {}
+
+    def decode(self, payload, meta, shape_dtype):
+        out = payload["tern"].data.astype(jnp.float32) * payload["scale"]
+        return jnp.reshape(out, shape_dtype.shape).astype(shape_dtype.dtype)
 
     def omega(self, d):
         return math.sqrt(d)  # worst-case bound
-
-    def bits(self, d):
-        return 2 * d + FLOAT_BITS  # {-1,0,1} per coord + scale
 
 
 @dataclass(frozen=True)
 class Int8Stochastic(Unbiased):
     """Linear int8 quantization with per-tensor max-scale and stochastic
-    rounding (unbiased).  The operator of the q8 ring all-reduce."""
+    rounding (unbiased).  The codec of the q8 ring all-reduce: the ring
+    forwards exactly this payload (int8 block + f32 scale) hop by hop.
+    """
 
     levels: int = 127
 
-    def __call__(self, key, x):
+    def encode(self, key, x):
         xf = x.astype(jnp.float32)
         # floor well above subnormal: tiny/levels would flush to zero -> NaN
         scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-30) / self.levels
         y = xf / scale
         lo = jnp.floor(y)
         u = jax.random.uniform(key, x.shape)
-        q = lo + (u < (y - lo)).astype(jnp.float32)
-        return (q * scale).astype(x.dtype)
+        q = (lo + (u < (y - lo)).astype(jnp.float32)).astype(jnp.int8)
+        return {"q": q, "scale": scale}, {}
+
+    def decode(self, payload, meta, shape_dtype):
+        out = payload["q"].astype(jnp.float32) * payload["scale"]
+        return jnp.reshape(out, shape_dtype.shape).astype(shape_dtype.dtype)
 
     def omega(self, d):
         # ||C(x)-x||^2 <= d*scale^2/4 <= d * ||x||^2/(4*levels^2) elementwise bound
         return d / (4.0 * self.levels**2)
-
-    def bits(self, d):
-        return 8 * d + FLOAT_BITS
 
 
 # --------------------------------------------------------------------------
@@ -306,28 +503,38 @@ class Int8Stochastic(Unbiased):
 @dataclass(frozen=True)
 class TopK(Contractive):
     """Greedy sparsification: keep the K = round(q*d) largest-magnitude
-    coordinates.  TopK in B(K/d)."""
+    coordinates.  TopK in B(K/d).
+
+    Exactly K coordinates survive (``lax.top_k`` index order breaks
+    magnitude ties).  Payload: K values + K packed indices, same wire
+    format as Rand-K but the pattern is data dependent, so the indices
+    always travel.
+    """
 
     q: float = 0.1
 
-    def __call__(self, key, x):
-        shape = x.shape
+    def encode(self, key, x):
         xf = _flat(x)
         d = xf.shape[0]
         k = _k_of(self.q, d)
-        a = jnp.abs(xf)
-        thresh = jax.lax.top_k(a, k)[0][-1]
-        mask = (a >= thresh).astype(x.dtype)
-        # Tie-break: top_k keeps exactly k, the mask may keep more on ties.
-        # Acceptable for a contractive operator (keeps >= k coords).
-        return jnp.reshape(xf * mask, shape)
+        _, idx = jax.lax.top_k(jnp.abs(xf), k)
+        idx = idx.astype(jnp.int32)
+        return (
+            {"values": xf[idx], "indices": PackedBits(idx, _index_bits(d))},
+            {},
+        )
+
+    def decode(self, payload, meta, shape_dtype):
+        d = _numel(shape_dtype.shape)
+        out = (
+            jnp.zeros((d,), shape_dtype.dtype)
+            .at[payload["indices"].data]
+            .set(payload["values"].astype(shape_dtype.dtype))
+        )
+        return jnp.reshape(out, shape_dtype.shape)
 
     def delta(self, d):
         return _k_of(self.q, d) / d
-
-    def bits(self, d):
-        k = _k_of(self.q, d)
-        return k * (FLOAT_BITS + math.ceil(math.log2(max(d, 2))))
 
     @property
     def stochastic(self):
@@ -337,17 +544,25 @@ class TopK(Contractive):
 @dataclass(frozen=True)
 class ScaledSign(Contractive):
     """(||x||_1 / d) * sign(x)  (Karimireddy et al.) in B(||x||_1^2/(d||x||_2^2)),
-    worst-case delta = 1/d."""
+    worst-case delta = 1/d.
 
-    def __call__(self, key, x):
-        s = jnp.mean(jnp.abs(x.astype(jnp.float32)))
-        return (s * jnp.sign(x.astype(jnp.float32))).astype(x.dtype)
+    Payload: one sign bit per coordinate + an f32 scale.  (Exact zeros —
+    a measure-zero event — keep sign 0 so the round trip matches the
+    operator definition; the canonical wire format still charges 1 bit.)
+    """
+
+    def encode(self, key, x):
+        xf = x.astype(jnp.float32)
+        s = jnp.mean(jnp.abs(xf))
+        return {"sign": PackedBits(jnp.sign(xf).astype(jnp.int8), 1),
+                "scale": s}, {}
+
+    def decode(self, payload, meta, shape_dtype):
+        out = payload["sign"].data.astype(jnp.float32) * payload["scale"]
+        return jnp.reshape(out, shape_dtype.shape).astype(shape_dtype.dtype)
 
     def delta(self, d):
         return 1.0 / d
-
-    def bits(self, d):
-        return d + FLOAT_BITS
 
     @property
     def stochastic(self):
@@ -363,21 +578,33 @@ class ScaledSign(Contractive):
 class Induced(Unbiased):
     """C_ind(x) = C(x) + Q(x - C(x)) in U(omega*(1-delta)) for C in B(delta),
     Q in U(omega).  Turns a biased operator into an unbiased one with
-    strictly smaller variance than Q alone (Horváth & Richtárik, 2021)."""
+    strictly smaller variance than Q alone (Horváth & Richtárik, 2021).
+
+    The wire message is the CONCATENATION of both payloads; decode sums
+    the two decoded parts.
+    """
 
     c: Contractive = dataclasses.field(default_factory=lambda: TopK(0.1))
     q: Unbiased = dataclasses.field(default_factory=lambda: RandK(0.1))
 
-    def __call__(self, key, x):
+    def encode(self, key, x):
         kc, kq = jax.random.split(key)
-        cx = self.c(kc, x)
-        return cx + self.q(kq, x - cx)
+        cp, cm = self.c.encode(kc, x)
+        cx = self.c.decode(cp, cm, jax.ShapeDtypeStruct(x.shape, x.dtype))
+        qp, qm = self.q.encode(kq, x - cx)
+        return {"c": cp, "q": qp}, {"c": cm, "q": qm}
+
+    def decode(self, payload, meta, shape_dtype):
+        return self.c.decode(payload["c"], meta["c"], shape_dtype) + self.q.decode(
+            payload["q"], meta["q"], shape_dtype
+        )
+
+    def wire_bits(self, payload):
+        # delegate so nested overrides (e.g. BernoulliP) stay honest
+        return self.c.wire_bits(payload["c"]) + self.q.wire_bits(payload["q"])
 
     def omega(self, d):
         return self.q.omega(d) * (1.0 - self.c.delta(d))
-
-    def bits(self, d):
-        return self.c.bits(d) + self.q.bits(d)
 
 
 # --------------------------------------------------------------------------
@@ -411,14 +638,25 @@ def tree_compress(q: Compressor, key: jax.Array, tree):
 def tree_shifted_compress(q: Compressor, key: jax.Array, tree, shift_tree):
     """Leaf-wise  h + Q(x - h)  over matching pytrees."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    hleaves = jax.tree_util.tree_leaves(shift_tree)
+    hleaves, htreedef = jax.tree_util.tree_flatten(shift_tree)
+    if htreedef != treedef:
+        raise ValueError(
+            "tree_shifted_compress: shift_tree structure does not match "
+            f"tree (shifts would mis-pair with leaves): tree={treedef}, "
+            f"shift_tree={htreedef}"
+        )
     keys = [jax.random.fold_in(key, i) for i in range(len(leaves))]
     out = [shifted(q, h, k, x) for k, x, h in zip(keys, leaves, hleaves)]
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def tree_bits(q: Compressor, tree) -> float:
-    """Total wire bits for one compressed message of this pytree."""
+    """Total wire bits for one compressed message of this pytree.
+
+    DEPRECATED shim over the per-leaf ``bits(d)`` shim — accounting on
+    live paths is structural (``wire_bits`` of the actual payloads, see
+    ``repro.comm``); this remains for by-dimension cost quotes.
+    """
     return float(
         sum(q.bits(int(leaf.size)) for leaf in jax.tree_util.tree_leaves(tree))
     )
@@ -428,7 +666,19 @@ def tree_size(tree) -> int:
     return int(sum(leaf.size for leaf in jax.tree_util.tree_leaves(tree)))
 
 
+# --------------------------------------------------------------------------
 # Registry used by configs / CLI flags.
+# --------------------------------------------------------------------------
+
+
+def _induced_topk_randk(q: float = 0.1) -> "Induced":
+    return Induced(c=TopK(q), q=RandK(q))
+
+
+def _induced_topk_natural(q: float = 0.1) -> "Induced":
+    return Induced(c=TopK(q), q=NaturalCompression())
+
+
 def make_compressor(name: str, **kw) -> Compressor:
     table = {
         "identity": Identity,
@@ -443,11 +693,11 @@ def make_compressor(name: str, **kw) -> Compressor:
         "sign": ScaledSign,
         "induced": Induced,
         # convenience instances of the induced compressor (Lemma 3):
-        # biased TopK wrapped unbiased by RandK / natural compression
-        "induced_topk_randk": lambda q=0.1, **k2: Induced(
-            c=TopK(q), q=RandK(q)),
-        "induced_topk_natural": lambda q=0.1, **k2: Induced(
-            c=TopK(q), q=NaturalCompression()),
+        # biased TopK wrapped unbiased by RandK / natural compression.
+        # Plain signatures (no **kwargs sink) so unknown arguments raise
+        # just like the dataclass constructors do.
+        "induced_topk_randk": _induced_topk_randk,
+        "induced_topk_natural": _induced_topk_natural,
     }
     if name not in table:
         raise ValueError(f"unknown compressor {name!r}; have {sorted(table)}")

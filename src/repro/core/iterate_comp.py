@@ -13,13 +13,14 @@ distributed mapping is identical.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import Compressor, Identity, tree_bits
-from repro.core.shift_rules import worker_compress, _tree_mean_w
+from repro.comm.channel import Channel
+from repro.core.compressors import Compressor, Identity
+from repro.core.shift_rules import _chan, _tree_mean_w
 
 
 class GDCIState(NamedTuple):
@@ -41,6 +42,7 @@ class GDCI:
     q: Compressor = field(default_factory=Identity)
     gamma: float = 0.1
     eta: float = 0.5
+    channel: Optional[Channel] = None
 
     def init(self, params, *, seed: int = 0) -> GDCIState:
         return GDCIState(
@@ -50,18 +52,17 @@ class GDCI:
         )
 
     def update(self, params, state: GDCIState, wgrads):
-        key, sub = jax.random.split(state.key)
+        ch = _chan(self.channel)
+        key, sub, ka = jax.random.split(state.key, 3)
         # local iterate proposal per worker: x - gamma g_i  (broadcast x)
         prop = jax.tree_util.tree_map(
             lambda x, g: x[None] - self.gamma * g, params, wgrads
         )
-        comp = worker_compress(self.q, sub, prop)
-        mean = _tree_mean_w(comp)
+        comp, bits = ch.uplink(self.q, sub, prop)
+        mean = ch.reduce_mean(ka, comp)
         new_params = jax.tree_util.tree_map(
             lambda x, m: (1.0 - self.eta) * x + self.eta * m, params, mean
         )
-        w = jax.tree_util.tree_leaves(wgrads)[0].shape[0]
-        bits = w * tree_bits(self.q, params)
         return new_params, GDCIState(
             key=key, step=state.step + 1, bits=state.bits + bits
         )
@@ -91,6 +92,7 @@ class VRGDCI:
     gamma: float = 0.1
     eta: float = 0.5
     alpha: float = 0.5
+    channel: Optional[Channel] = None
 
     def init(self, params, n_workers: int, *, seed: int = 0) -> VRGDCIState:
         h = jax.tree_util.tree_map(
@@ -104,23 +106,22 @@ class VRGDCI:
         )
 
     def update(self, params, state: VRGDCIState, wgrads):
-        key, sub = jax.random.split(state.key)
+        ch = _chan(self.channel)
+        key, sub, ka = jax.random.split(state.key, 3)
         target = jax.tree_util.tree_map(
             lambda x, g, h: x[None] - self.gamma * g - h,
             params, wgrads, state.h,
         )
-        delta = worker_compress(self.q, sub, target)
+        delta, bits = ch.uplink(self.q, sub, target)
         h_new = jax.tree_util.tree_map(
             lambda h, d: h + self.alpha * d, state.h, delta
         )
         h_bar = _tree_mean_w(state.h)
-        delta_bar = _tree_mean_w(delta)
+        delta_bar = ch.reduce_mean(ka, delta)
         new_params = jax.tree_util.tree_map(
             lambda x, db, hb: (1.0 - self.eta) * x + self.eta * (db + hb),
             params, delta_bar, h_bar,
         )
-        w = jax.tree_util.tree_leaves(wgrads)[0].shape[0]
-        bits = w * tree_bits(self.q, params)
         return new_params, VRGDCIState(
             h=h_new, key=key, step=state.step + 1, bits=state.bits + bits
         )

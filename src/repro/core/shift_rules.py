@@ -7,18 +7,27 @@ how the worker messages are formed from the shifted gradients, and how
 jit); their mutable state is the stacked shift pytree ``h`` with leading
 worker axis ``W`` plus a bits counter.
 
+All communication goes through a ``repro.comm.Channel``: the rule calls
+``channel.uplink`` (codec encode -> wire -> decode, with STRUCTURAL bits
+accounting from the actual payloads) and ``channel.reduce_mean`` (the
+master-side aggregation in the channel's wire format).  The default
+``SimChannel`` is the paper's vmapped parameter server; the production
+``MeshChannel`` swaps in transparently.
+
 All rules implement::
 
-    init(wgrads_like)                  -> h0            (W-stacked pytree)
-    step(q, key, wgrads, h)            -> (g_bar, h_new, bits)
+    init(wgrads_like)                        -> h0        (W-stacked pytree)
+    step(q, key, wgrads, h, channel=None)    -> (g_bar, h_new, bits)
 
 where ``wgrads`` is the stacked per-worker gradient pytree (leaves shaped
-``(W, *param.shape)``), ``g_bar`` is the master's unbiased gradient
-estimator (no worker axis), and ``bits`` is the total uplink wire cost of
-the step (a traced scalar — Rand-DIANA's cost is a random variable).
+``(W, *param.shape)``), ``g_bar`` is the master's gradient estimator (no
+worker axis), and ``bits`` is the total uplink wire cost of the step (a
+traced scalar — Rand-DIANA's cost is a random variable).
 
 DIANA-like rules couple the estimator and the shift update (they reuse
 the same compressed message), which is why the rule computes both.
+``EF21Shift`` is the error-feedback member of the family: its message is
+a CONTRACTIVE compression of the residual, integrated into the shift.
 """
 
 from __future__ import annotations
@@ -29,47 +38,36 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import (
-    Compressor,
-    Contractive,
-    Unbiased,
-    Zero,
-    tree_bits,
-)
+from repro.comm.channel import Channel, SimChannel
+from repro.core.compressors import FLOAT_BITS, Compressor, Zero
+
+tmap = jax.tree_util.tree_map
 
 
 def _tree_mean_w(tree):
     """Mean over the leading worker axis, leaf-wise."""
-    return jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0), tree)
+    return tmap(lambda a: jnp.mean(a, axis=0), tree)
 
 
 def worker_compress(q: Compressor, key: jax.Array, wtree):
     """Compress each worker's slice of a W-stacked pytree independently.
 
-    Workers get decorrelated keys unless the operator declares a shared
-    pattern (correlated Rand-K), in which case every worker samples the
-    same sparsity mask — the property the payload-shrinking collective
-    relies on.
+    Compatibility wrapper over ``SimChannel.uplink`` (same key
+    derivation: per-leaf fold-in, then per-worker split unless the codec
+    declares a shared pattern or is deterministic).  Prefer the channel
+    when wire-bit accounting is also needed.
     """
-    leaves, treedef = jax.tree_util.tree_flatten(wtree)
-    shared = bool(getattr(q, "shared_pattern", False))
-    out = []
-    for i, leaf in enumerate(leaves):
-        lk = jax.random.fold_in(key, i)
-        w = leaf.shape[0]
-        if shared or not q.stochastic:
-            keys = jnp.broadcast_to(lk, (w, *lk.shape))
-        else:
-            keys = jax.random.split(lk, w)
-        out.append(jax.vmap(q)(keys, leaf))
-    return jax.tree_util.tree_unflatten(treedef, out)
+    m, _ = SimChannel().uplink(q, key, wtree)
+    return m
 
 
 def stack_like(tree, w: int):
     """Zeros with a leading worker axis mirroring ``tree``."""
-    return jax.tree_util.tree_map(
-        lambda a: jnp.zeros((w, *a.shape), a.dtype), tree
-    )
+    return tmap(lambda a: jnp.zeros((w, *a.shape), a.dtype), tree)
+
+
+def _chan(channel: Optional[Channel]) -> Channel:
+    return channel if channel is not None else SimChannel()
 
 
 # --------------------------------------------------------------------------
@@ -80,7 +78,7 @@ class ShiftRule:
     def init(self, wgrads_like):
         raise NotImplementedError
 
-    def step(self, q: Unbiased, key, wgrads, h):
+    def step(self, q: Compressor, key, wgrads, h, channel: Optional[Channel] = None):
         raise NotImplementedError
 
 
@@ -91,17 +89,15 @@ class FixedShift(ShiftRule):
     proportional to mean_i ||grad_i(x*) - h_i||^2."""
 
     def init(self, wgrads_like):
-        return jax.tree_util.tree_map(jnp.zeros_like, wgrads_like)
+        return tmap(jnp.zeros_like, wgrads_like)
 
-    def step(self, q, key, wgrads, h):
-        diff = jax.tree_util.tree_map(lambda g, s: g - s, wgrads, h)
-        m = worker_compress(q, key, diff)
-        g_bar = _tree_mean_w(
-            jax.tree_util.tree_map(lambda s, mm: s + mm, h, m)
-        )
-        w = jax.tree_util.tree_leaves(wgrads)[0].shape[0]
-        bits = w * tree_bits(q, jax.tree_util.tree_map(lambda a: a[0], wgrads))
-        return g_bar, h, jnp.asarray(bits, jnp.float32)
+    def step(self, q, key, wgrads, h, channel=None):
+        ch = _chan(channel)
+        ku, ka = jax.random.split(key)
+        diff = tmap(lambda g, s: g - s, wgrads, h)
+        m, bits = ch.uplink(q, ku, diff)
+        g_bar = ch.reduce_mean(ka, tmap(lambda s, mm: s + mm, h, m))
+        return g_bar, h, bits
 
 
 @dataclass(frozen=True)
@@ -122,22 +118,18 @@ class StarShift(ShiftRule):
     def init(self, wgrads_like):  # pragma: no cover - guarded
         raise ValueError("StarShift requires init_with_star(grads_at_optimum)")
 
-    def step(self, q, key, wgrads, state):
+    def step(self, q, key, wgrads, state, channel=None):
+        ch = _chan(channel)
         h, star = state["h"], state["star"]
-        kq, kc = jax.random.split(key)
-        diff = jax.tree_util.tree_map(lambda g, s: g - s, wgrads, h)
-        m = worker_compress(q, kq, diff)
-        g_bar = _tree_mean_w(
-            jax.tree_util.tree_map(lambda s, mm: s + mm, h, m)
-        )
+        kq, kc, ka = jax.random.split(key, 3)
+        diff = tmap(lambda g, s: g - s, wgrads, h)
+        m, bits_q = ch.uplink(q, kq, diff)
+        g_bar = ch.reduce_mean(ka, tmap(lambda s, mm: s + mm, h, m))
         # h_i^{k+1} = g*_i + C(grad_i - g*_i)
-        dstar = jax.tree_util.tree_map(lambda g, s: g - s, wgrads, star)
-        ch = worker_compress(self.c, kc, dstar)
-        h_new = jax.tree_util.tree_map(lambda s, cc: s + cc, star, ch)
-        one = jax.tree_util.tree_map(lambda a: a[0], wgrads)
-        w = jax.tree_util.tree_leaves(wgrads)[0].shape[0]
-        bits = w * (tree_bits(q, one) + tree_bits(self.c, one))
-        return g_bar, {"h": h_new, "star": star}, jnp.asarray(bits, jnp.float32)
+        dstar = tmap(lambda g, s: g - s, wgrads, star)
+        chm, bits_c = ch.uplink(self.c, kc, dstar)
+        h_new = tmap(lambda s, cc: s + cc, star, chm)
+        return g_bar, {"h": h_new, "star": star}, bits_q + bits_c
 
 
 @dataclass(frozen=True)
@@ -155,26 +147,20 @@ class DianaShift(ShiftRule):
     c: Compressor = field(default_factory=Zero)
 
     def init(self, wgrads_like):
-        return jax.tree_util.tree_map(jnp.zeros_like, wgrads_like)
+        return tmap(jnp.zeros_like, wgrads_like)
 
-    def step(self, q, key, wgrads, h):
-        kc, kq = jax.random.split(key)
-        diff = jax.tree_util.tree_map(lambda g, s: g - s, wgrads, h)
-        cmsg = worker_compress(self.c, kc, diff)
-        resid = jax.tree_util.tree_map(lambda d, cc: d - cc, diff, cmsg)
-        qmsg = worker_compress(q, kq, resid)
+    def step(self, q, key, wgrads, h, channel=None):
+        ch = _chan(channel)
+        kc, kq, ka = jax.random.split(key, 3)
+        diff = tmap(lambda g, s: g - s, wgrads, h)
+        cmsg, bits_c = ch.uplink(self.c, kc, diff)
+        resid = tmap(lambda d, cc: d - cc, diff, cmsg)
+        qmsg, bits_q = ch.uplink(q, kq, resid)
         # m_full = Q_ind(grad - h) = c + Q(grad - h - c)
-        m_full = jax.tree_util.tree_map(lambda cc, mm: cc + mm, cmsg, qmsg)
-        g_bar = _tree_mean_w(
-            jax.tree_util.tree_map(lambda s, mf: s + mf, h, m_full)
-        )
-        h_new = jax.tree_util.tree_map(
-            lambda s, mf: s + self.alpha * mf, h, m_full
-        )
-        one = jax.tree_util.tree_map(lambda a: a[0], wgrads)
-        w = jax.tree_util.tree_leaves(wgrads)[0].shape[0]
-        bits = w * (tree_bits(q, one) + tree_bits(self.c, one))
-        return g_bar, h_new, jnp.asarray(bits, jnp.float32)
+        m_full = tmap(lambda cc, mm: cc + mm, cmsg, qmsg)
+        g_bar = ch.reduce_mean(ka, tmap(lambda s, mf: s + mf, h, m_full))
+        h_new = tmap(lambda s, mf: s + self.alpha * mf, h, m_full)
+        return g_bar, h_new, bits_c + bits_q
 
 
 @dataclass(frozen=True)
@@ -193,25 +179,61 @@ class RandDianaShift(ShiftRule):
     p: float = 0.1
 
     def init(self, wgrads_like):
-        return jax.tree_util.tree_map(jnp.zeros_like, wgrads_like)
+        return tmap(jnp.zeros_like, wgrads_like)
 
-    def step(self, q, key, wgrads, h):
-        kq, kb = jax.random.split(key)
-        diff = jax.tree_util.tree_map(lambda g, s: g - s, wgrads, h)
-        m = worker_compress(q, kq, diff)
-        g_bar = _tree_mean_w(
-            jax.tree_util.tree_map(lambda s, mm: s + mm, h, m)
-        )
+    def step(self, q, key, wgrads, h, channel=None):
+        ch = _chan(channel)
+        kq, kb, ka = jax.random.split(key, 3)
+        diff = tmap(lambda g, s: g - s, wgrads, h)
+        m, bits = ch.uplink(q, kq, diff)
+        g_bar = ch.reduce_mean(ka, tmap(lambda s, mm: s + mm, h, m))
         w = jax.tree_util.tree_leaves(wgrads)[0].shape[0]
         refresh = jax.random.bernoulli(kb, self.p, (w,))
+
         def upd(s, g):
             mask = refresh.reshape((w,) + (1,) * (g.ndim - 1))
             return jnp.where(mask, g, s)
-        h_new = jax.tree_util.tree_map(upd, h, wgrads)
-        one = jax.tree_util.tree_map(lambda a: a[0], wgrads)
+
+        h_new = tmap(upd, h, wgrads)
+        # refresh messages are uncompressed f32 vectors (structurally
+        # FLOAT_BITS per scalar), sent only by the workers that fired
+        one = tmap(lambda a: a[0], wgrads)
         d = sum(int(l.size) for l in jax.tree_util.tree_leaves(one))
-        bits = w * tree_bits(q, one) + jnp.sum(refresh) * 32.0 * d
-        return g_bar, h_new, jnp.asarray(bits, jnp.float32)
+        bits = bits + jnp.sum(refresh) * float(FLOAT_BITS * d)
+        return g_bar, h_new, bits
+
+
+@dataclass(frozen=True)
+class EF21Shift(ShiftRule):
+    """EF21 error feedback (Richtárik, Sokolov & Fatkhullin, 2021) in the
+    shifted-compression template.
+
+    The wire message is the CONTRACTIVE compression of the gradient-shift
+    residual, and the shift integrates it::
+
+        c_i     = C(grad_i - h_i)           (the payload on the wire)
+        g^k     = mean_i (h_i + c_i)        (master estimator)
+        h_i^{k+1} = h_i + c_i               (worker-local, no extra comm)
+
+    Because h_i tracks grad_i at the contraction rate delta, biased
+    operators (TopK, ScaledSign) converge EXACTLY where plain DCGD with
+    the same operator stalls at a bias floor — the error-feedback
+    mechanism the ROADMAP's ``ef21`` comm mode ships.  The master's
+    aggregated shift is tracked incrementally (h_bar += mean_i c_i) just
+    like DIANA's, so no uncompressed collective ever materializes.
+    """
+
+    def init(self, wgrads_like):
+        return tmap(jnp.zeros_like, wgrads_like)
+
+    def step(self, q, key, wgrads, h, channel=None):
+        ch = _chan(channel)
+        ku, ka = jax.random.split(key)
+        diff = tmap(lambda g, s: g - s, wgrads, h)
+        c, bits = ch.uplink(q, ku, diff)
+        g_bar = ch.reduce_mean(ka, tmap(lambda s, cc: s + cc, h, c))
+        h_new = tmap(lambda s, cc: s + cc, h, c)
+        return g_bar, h_new, bits
 
 
 def make_shift_rule(name: str, **kw) -> ShiftRule:
@@ -221,6 +243,7 @@ def make_shift_rule(name: str, **kw) -> ShiftRule:
         "star": StarShift,
         "diana": DianaShift,
         "rand_diana": RandDianaShift,
+        "ef21": EF21Shift,
     }
     if name not in table:
         raise ValueError(f"unknown shift rule {name!r}; have {sorted(table)}")

@@ -4,6 +4,12 @@ and record the (relative error, cumulative bits) trajectory.
 This is the engine behind every paper-fidelity experiment (Figures 1-4,
 Table 1) and the theorem unit tests.  Runs the whole optimization as one
 ``lax.scan`` so even 10^4-step sweeps are fast on CPU.
+
+Communication runs through the method's ``repro.comm.Channel`` (the
+vmapped parameter-server ``SimChannel`` by default — construct
+``DCGDShift(..., channel=...)`` / ``GDCI(..., channel=...)`` to swap the
+transport); the recorded ``bits`` are the structural ``wire_bits`` of
+the actual encoded payloads.
 """
 
 from __future__ import annotations

@@ -6,16 +6,19 @@ Mapping onto the paper's operators (Algorithm 1, DCGD-SHIFT):
   ``worker_grads.per_worker_grads``   line 5, "worker i computes
       g_i = grad f_i(x^k)" — one vmapped gradient per batch shard, the
       worker axis sharded over (pod x data).
-  ``Q_i`` (the per-worker unbiased compressor, Def. 2) is applied by
-      ``repro.core.shift_rules.worker_compress`` to the SHIFTED
+  ``Q_i`` (the per-worker compressor, Defs. 1-2) is applied by the
+      Channel uplink (``repro.comm``): each worker ENCODES the shifted
       difference ``g_i - h_i`` (Def. 3: Q_{h_i}(g_i) = h_i + Q(g_i -
-      h_i)), so what travels on the wire is the compressed residual.
+      h_i)) into a wire payload — what travels is the codec's encoded
+      message, and wire bits are counted from the payload itself.
   ``collectives.compressed_tree_mean``   lines 9-11, "master averages
-      the received m_i" — the uplink aggregation in one of three wire
-      formats: exact psum (``dense_mean``), correlated Rand-K with a
-      shared pattern (``randk_shared_mean``: the aggregated message is
-      K-dimensional), or the int8 ring/tree all-reduce
-      (``q8_ring_tree_mean``).  The master's aggregated shift h^k is
+      the received m_i" — the uplink aggregation, codec-driven in one of
+      three wire formats: exact psum (``dense_mean``), correlated
+      Rand-K payload averaging (``randk_shared_mean``: K values per
+      message, pattern implied by the shared seed), or the ring/tree
+      all-reduce forwarding ``Int8Stochastic`` payloads
+      (``q8_ring_tree_mean``).  ``repro.comm.MeshChannel`` is the
+      high-level entry point.  The master's aggregated shift h^k is
       tracked incrementally in ``launch.train`` (h^{k+1} = h^k +
       alpha * m^k), so no uncompressed collective ever materializes.
   ``sharding``   not in the paper — the GSPMD layer that places

@@ -1,36 +1,43 @@
-"""Compressed tree-mean collectives — the "send m_i to master, average"
-line of Algorithm 1, in the three wire formats the system supports.
+"""Codec-driven tree-mean collectives — the "send m_i to master, average"
+line of Algorithm 1, in the wire formats the system supports.
 
-All collectives consume a *worker-stacked* pytree (leaves
-``(W, *param.shape)``) and return the mean over the worker axis:
+Every payload format here is OWNED by a codec in ``repro.core.compressors``
+(``encode``/``decode``/``wire_bits``); this module only moves payloads
+around the mesh — it contains no compressor math of its own:
 
   ``dense_mean``         exact f32 mean (lowers to a plain psum under
                          GSPMD) — the no-compression baseline.
-  ``randk_shared_mean``  correlated Rand-K (all workers share one
-                         sparsity pattern per step): the aggregated
-                         message is K-dimensional, unbiased, and exactly
-                         K coordinates survive.  Matches
-                         ``RandK(shared_pattern=True)`` applied per
-                         worker followed by an exact mean.
-  ``q8_ring_tree_mean``  int8-quantized ring all-reduce (reduce-scatter
-                         + all-gather with int8 payloads and per-chunk
-                         scales, stochastic rounding) over the mesh's
-                         worker axes, with an optional quantized tree
-                         (psum) stage across the ``pod`` axis.
+  ``randk_shared_mean``  correlated Rand-K: every worker runs
+                         ``RandK(shared_pattern=True).encode`` with the
+                         SAME per-step key, so the K-value payloads share
+                         one pattern and aggregate by a payload mean; one
+                         decode scatters the averaged values back.
+                         Exactly K coordinates survive, unbiased over the
+                         pattern draw.
+  ``q8_ring_tree_mean``  ring all-reduce (reduce-scatter + all-gather)
+                         whose hops forward ``Int8Stochastic`` payloads
+                         (int8 block + f32 scale) over the mesh's worker
+                         axes, with an optional quantized tree (psum)
+                         stage across the ``pod`` axis.  The ring is
+                         generic over any meta-free codec
+                         (``_ring_allreduce_coded``).
 
-``compressed_tree_mean`` dispatches between them from a
-``CompressionConfig`` (or its ``comm_mode`` string).
+``compressed_tree_mean`` dispatches between them from an aggregation-mode
+string or a ``CompressionConfig``; ``repro.comm.MeshChannel`` is the
+higher-level entry point.
 """
 
 from __future__ import annotations
 
-import math
-from typing import Optional, Sequence, Tuple
+import functools
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.core.compressors import Compressor, Int8Stochastic, RandK
 
 tmap = jax.tree_util.tree_map
 
@@ -48,59 +55,64 @@ def dense_mean(wtree):
 def randk_shared_mean(key: jax.Array, wtree, ratio: float):
     """Mean of shared-pattern Rand-K messages (correlated sampling).
 
-    Every worker keeps the SAME uniformly-random K-subset (K =
-    round(ratio * d) per leaf, at least 1) scaled by d/K, so the
-    aggregated message is supported on exactly K coordinates and the
-    masts cancel into one mask applied to the exact mean:
+    Every worker encodes with the SAME per-leaf key, so
+    ``RandK(shared_pattern=True)`` gives all workers one uniformly-random
+    K-subset (K = round(ratio * d) per leaf, at least 1).  The per-worker
+    payload is just the K kept values (the pattern is implied by the
+    shared seed — it lives in ``meta`` and is never charged to the wire);
+    the master averages payloads value-wise and decodes ONCE:
 
-        mean_i C_shared(g_i) = (d/K) * mask * mean_i g_i
+        mean_i C_shared(g_i) = decode(mean_i encode(g_i))
 
-    Unbiased over the pattern draw: E[(d/K) * mask] = 1 coordinatewise.
+    (decode is linear in the values for a fixed pattern).  Unbiased over
+    the pattern draw: E[(d/K) * mask] = 1 coordinatewise.
     """
+    codec = RandK(q=ratio, shared_pattern=True)
     leaves, treedef = jax.tree_util.tree_flatten(wtree)
     out = []
     for i, leaf in enumerate(leaves):
         lk = jax.random.fold_in(key, i)
-        w = leaf.shape[0]
-        inner = leaf.shape[1:]
-        d = int(math.prod(inner)) if inner else 1
-        k = max(1, int(round(ratio * d)))
-        idx = jax.random.permutation(lk, d)[:k]
-        mask = jnp.zeros((d,), leaf.dtype).at[idx].set(1)
-        mean = jnp.mean(leaf.reshape(w, d), axis=0)
-        out.append((mean * mask * (d / k)).reshape(inner))
+        sds = jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype)
+        payload, meta = jax.vmap(codec.encode, in_axes=(None, 0))(lk, leaf)
+        mean_payload = tmap(lambda v: jnp.mean(v, axis=0), payload)
+        meta_one = tmap(lambda v: v[0], meta)  # identical across workers
+        out.append(codec.decode(mean_payload, meta_one, sds))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
 # ---------------------------------------------------------------------------
-# int8 ring / tree all-reduce
+# Codec ring / tree all-reduce
 # ---------------------------------------------------------------------------
 
 
-def _q8(key: jax.Array, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Per-tensor max-scale int8 with unbiased stochastic rounding.
-
-    Returns ``(payload int8, scale f32)``; ``payload * scale``
-    reconstructs x up to quantization noise.  The scale floor keeps
-    tiny tensors off the subnormal path (would flush to 0 -> NaN).
+def _encode_meta_free(codec: Compressor, key: jax.Array, block: jax.Array):
+    """Encode for forwarded-payload transports (ring hops, the pod psum
+    stage): the decoder sees ONLY the payload, so shared-seed side
+    information in ``meta`` cannot travel — reject codecs that need it.
     """
-    xf = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-30) / 127.0
-    y = xf / scale
-    lo = jnp.floor(y)
-    u = jax.random.uniform(key, x.shape)
-    q = (lo + (u < (y - lo)).astype(jnp.float32)).astype(jnp.int8)
-    return q, scale
+    payload, meta = codec.encode(key, block)
+    if jax.tree_util.tree_leaves(meta):
+        raise ValueError(
+            f"{type(codec).__name__} carries decoder state in meta; "
+            "quantized ring/tree stages forward payloads only "
+            "(meta must be empty)"
+        )
+    return payload
 
 
-def _ring_allreduce_q8(key: jax.Array, x: jax.Array, axis: str, n: int):
-    """Ring all-reduce of ``x`` (sum) over mesh axis ``axis`` with int8
-    hops: reduce-scatter then all-gather, both with quantized payloads.
+def _ring_allreduce_coded(key: jax.Array, x: jax.Array, axis: str, n: int,
+                          codec: Compressor):
+    """Ring all-reduce of ``x`` (sum) over mesh axis ``axis``, forwarding
+    the CODEC'S ENCODED PAYLOAD on every hop: reduce-scatter then
+    all-gather, both with compressed payloads.
 
-    In the all-gather phase each finished chunk is quantized ONCE by its
-    owner and the (int8, scale) pair is forwarded verbatim, so every
-    device decodes bit-identical values — the output is truly
-    replicated over ``axis``.
+    The payload pytree is permuted leaf-wise, so this works for any
+    codec whose decoder state travels entirely in the payload (empty
+    ``meta`` — shared-seed side information cannot ride the ring).
+
+    In the all-gather phase each finished chunk is encoded ONCE by its
+    owner and the payload is forwarded verbatim, so every device decodes
+    bit-identical values — the output is truly replicated over ``axis``.
     """
     if n == 1:
         return x
@@ -112,35 +124,38 @@ def _ring_allreduce_q8(key: jax.Array, x: jax.Array, axis: str, n: int):
     chunks = flat.reshape(n, c)
     idx = jax.lax.axis_index(axis)
     fwd = [(j, (j + 1) % n) for j in range(n)]
+    sds = jax.ShapeDtypeStruct((1, c), jnp.float32)
+
+    encode = functools.partial(_encode_meta_free, codec)
+
+    def hop(payload):
+        return tmap(lambda a: jax.lax.ppermute(a, axis, fwd), payload)
 
     # Phase 1 — reduce-scatter: after n-1 hops, device i owns the fully
     # reduced chunk (i + 1) % n.
     for t in range(n - 1):
         send_id = (idx - t) % n
-        payload = jax.lax.dynamic_slice_in_dim(chunks, send_id, 1, axis=0)
-        q, s = _q8(jax.random.fold_in(key, t), payload)
-        q = jax.lax.ppermute(q, axis, fwd)
-        s = jax.lax.ppermute(s, axis, fwd)
+        block = jax.lax.dynamic_slice_in_dim(chunks, send_id, 1, axis=0)
+        payload = hop(encode(jax.random.fold_in(key, t), block))
         recv_id = (send_id - 1) % n
         mine = jax.lax.dynamic_slice_in_dim(chunks, recv_id, 1, axis=0)
         chunks = jax.lax.dynamic_update_slice_in_dim(
-            chunks, mine + q.astype(jnp.float32) * s, recv_id, axis=0
+            chunks, mine + codec.decode(payload, {}, sds), recv_id, axis=0
         )
 
-    # Phase 2 — all-gather: circulate each owner's chunk, quantized once.
+    # Phase 2 — all-gather: circulate each owner's chunk, encoded once.
     own_id = (idx + 1) % n
     own = jax.lax.dynamic_slice_in_dim(chunks, own_id, 1, axis=0)
-    q, s = _q8(jax.random.fold_in(key, n + 1), own)
+    payload = encode(jax.random.fold_in(key, n + 1), own)
     final = jnp.zeros_like(chunks)
     final = jax.lax.dynamic_update_slice_in_dim(
-        final, q.astype(jnp.float32) * s, own_id, axis=0
+        final, codec.decode(payload, {}, sds), own_id, axis=0
     )
     for t in range(n - 1):
-        q = jax.lax.ppermute(q, axis, fwd)
-        s = jax.lax.ppermute(s, axis, fwd)
+        payload = hop(payload)
         recv_id = (idx - t) % n  # sender (idx-1) owned (idx - t) at hop t
         final = jax.lax.dynamic_update_slice_in_dim(
-            final, q.astype(jnp.float32) * s, recv_id, axis=0
+            final, codec.decode(payload, {}, sds), recv_id, axis=0
         )
     return final.reshape(-1)[:d].reshape(shape)
 
@@ -153,13 +168,15 @@ def q8_ring_tree_mean(
     worker_axes: Sequence[str] = ("data",),
     pod_axis: Optional[str] = None,
     wspecs=None,
+    codec: Compressor = Int8Stochastic(),
 ):
-    """int8 ring/tree mean over a worker-stacked tree on a sharded mesh.
+    """Quantized ring/tree mean over a worker-stacked tree on a sharded
+    mesh, with ``Int8Stochastic`` payloads by default.
 
     Leaves are ``(W, ...)`` with the leading dim sharded over
     ``worker_axes`` (plus ``pod_axis``); each device sums its local
     worker rows in f32, ring-all-reduces the partial sums over each
-    worker axis with int8 hops, then (multi-pod) runs one quantized
+    worker axis with encoded hops, then (multi-pod) runs one quantized
     tree (psum) stage across ``pod_axis``.  ``wspecs`` optionally gives
     the worker-stacked PartitionSpecs so inner-dim ("model") sharding is
     preserved through the shard_map — each model shard runs its own
@@ -194,12 +211,17 @@ def q8_ring_tree_mean(
             lk = jax.random.fold_in(k, i)
             acc = jnp.sum(x.astype(jnp.float32), axis=0)
             for j, ax in enumerate(waxes):
-                acc = _ring_allreduce_q8(
-                    jax.random.fold_in(lk, j), acc, ax, sizes[ax]
+                acc = _ring_allreduce_coded(
+                    jax.random.fold_in(lk, j), acc, ax, sizes[ax], codec
                 )
             if pod_axis and pod_n > 1:
-                q, s = _q8(jax.random.fold_in(lk, 101), acc)
-                acc = jax.lax.psum(q.astype(jnp.float32) * s, pod_axis)
+                payload = _encode_meta_free(
+                    codec, jax.random.fold_in(lk, 101), acc
+                )
+                dec = codec.decode(
+                    payload, {}, jax.ShapeDtypeStruct(acc.shape, jnp.float32)
+                )
+                acc = jax.lax.psum(dec, pod_axis)
             outs.append((acc / w_glob[i]).astype(x.dtype))
         return tuple(outs)
 
@@ -229,14 +251,17 @@ def compressed_tree_mean(
 ):
     """Worker-mean of a stacked tree in the configured wire format.
 
-    ``mode`` is a comm-mode string (``dense | randk_shared | q8_ring``)
-    or a ``CompressionConfig``, in which case its ``comm_mode`` and
-    ``randk_q`` fields are used (a disabled config means dense).
+    ``mode`` is an aggregation-mode string (``dense | randk_shared |
+    q8_ring``) or a ``CompressionConfig``, in which case its effective
+    aggregation mode and ``randk_q`` fields are used (a disabled config
+    and the ``ef21`` comm mode both aggregate densely).  Prefer
+    ``repro.comm.make_channel(...).reduce_mean`` in new code.
     """
+    from repro.comm.channel import aggregation_mode_of
+
     if hasattr(mode, "comm_mode"):  # CompressionConfig
-        cfg = mode
-        randk_q = cfg.randk_q
-        mode = cfg.comm_mode if cfg.enabled else "dense"
+        randk_q = mode.randk_q
+    mode = aggregation_mode_of(mode)  # ef21/disabled normalize to dense
     if mode == "dense":
         return dense_mean(wtree)
     if mode == "randk_shared":

@@ -176,8 +176,33 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         if isinstance(cost, (list, tuple)):  # jaxlib < 0.5 returns [dict]
             cost = cost[0] if cost else {}
         hlo = compiled.as_text()
+        from repro.comm import collective_payload_scale
         from repro.launch import hlo_cost
         corrected = hlo_cost.analyze(hlo)
+        scale = (
+            collective_payload_scale(tcfg.compression)
+            if shape.kind == "train" else {}
+        )
+        if scale:
+            # re-charge only the gradient-mean share of the all-reduce
+            # bytes at the codec wire fraction; activation collectives
+            # stay structural.  The per-DEVICE gradient message is the
+            # param tree sharded over the model axis only (the data/pod
+            # reduction replicates over those axes), so divide by the
+            # model-axis size, not the chip count.
+            import numpy as np
+            params_shapes = jax.eval_shape(
+                lambda k: M.init_params(k, cfg),
+                jax.ShapeDtypeStruct((2,), jnp.uint32),
+            )
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            msg_bytes = sum(
+                int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+                for l in jax.tree_util.tree_leaves(params_shapes)
+            ) / sizes.get("model", 1)
+            corrected = hlo_cost.apply_gradient_payload_model(
+                corrected, "all-reduce", msg_bytes, scale["all-reduce"]
+            )
         coll = hlo_stats.collective_bytes(hlo)  # static instruction counts
         mf = model_flops(
             serving_config(cfg, shape_name) if shape.kind == "decode" else cfg,
@@ -218,10 +243,12 @@ def main(argv=None):
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--save-hlo", action="store_true")
-    ap.add_argument("--comm-mode", default="dense",
-                    choices=["dense", "randk_shared", "q8_ring"])
+    ap.add_argument("--comm-mode", "--comm_mode", dest="comm_mode",
+                    default="dense",
+                    choices=["dense", "randk_shared", "q8_ring", "ef21"])
     ap.add_argument("--compressor", default="natural")
-    ap.add_argument("--shift-rule", default="diana")
+    ap.add_argument("--shift-rule", "--shift_rule", dest="shift_rule",
+                    default="diana")
     ap.add_argument("--no-compression", action="store_true")
     args = ap.parse_args(argv)
 

@@ -370,15 +370,65 @@ class HloCostModel:
         return self.cost_of(entry.name)
 
 
-def analyze(hlo_text: str) -> Dict[str, object]:
+def apply_gradient_payload_model(corrected: Dict[str, object], kind: str,
+                                 message_bytes: float,
+                                 wire_fraction: float) -> Dict[str, object]:
+    """Re-charge the GRADIENT-AGGREGATION share of one collective kind
+    at the codec's wire fraction, leaving the rest structural.
+
+    For comm modes whose aggregation lowers to a dense collective while
+    the protocol payload is compressed (EF21: an exact mean of DECODED
+    sparse messages), only the gradient-message bytes — one per-device
+    param-tree share, ``message_bytes`` — ride the compressed uplink;
+    model-parallel activation all-reduces and loss reductions of the
+    same HLO kind are genuine dense traffic and must keep their
+    structural count.
+    """
+    coll = dict(corrected["collective_bytes_by_kind"])
+    total = float(coll.get(kind, 0.0))
+    grad = min(float(message_bytes), total)
+    coll[kind] = (total - grad) + grad * wire_fraction
+    out = dict(corrected)
+    out["collective_bytes_by_kind"] = coll
+    out["collective_bytes"] = sum(coll.values())
+    out["payload_model"] = {
+        "kind": kind,
+        "gradient_message_bytes": grad,
+        "wire_fraction": wire_fraction,
+    }
+    return out
+
+
+def analyze(hlo_text: str,
+            collective_scale: Optional[Dict[str, float]] = None
+            ) -> Dict[str, object]:
+    """Loop-aware cost analysis of an HLO module text.
+
+    ``collective_scale`` applies a Channel payload model uniformly to a
+    whole collective kind — appropriate only when EVERY instruction of
+    that kind carries the compressed payload.  When compressed gradient
+    aggregation shares an HLO kind with dense traffic (activation
+    all-reduces under model parallelism), use
+    ``apply_gradient_payload_model`` on the result instead.  Kinds
+    absent from the dict keep their structural count (the int8 ring's
+    s8 payloads and the shared-pattern Rand-K's K-sized value mean are
+    already honest in the HLO).
+    """
     model = HloCostModel(hlo_text)
     c = model.entry_cost()
+    coll = dict(c.coll)
+    if collective_scale:
+        for kind, scale in collective_scale.items():
+            if kind in coll:
+                coll[kind] *= scale
     return {
         "flops": c.flops,
         "bytes": c.bytes,
         "transcendentals": c.transcendentals,
-        "collective_bytes_by_kind": dict(c.coll),
-        "collective_bytes": sum(c.coll.values()),
+        "collective_bytes_by_kind": coll,
+        "collective_bytes": sum(coll.values()),
+        "collective_bytes_structural": sum(c.coll.values()),
+        "collective_scale": dict(collective_scale or {}),
         "while_trips": model.while_trips,
         "unresolved_whiles": model.unresolved_whiles,
     }

@@ -2,7 +2,11 @@
 
 ``build_serve_step`` returns the pure decode function; ``decode_specs``
 builds ShapeDtypeStruct stand-ins for (params, state, tok, pos) used by
-the dry-run.  KV caches are sharded batch-over-("pod","data") and
+the dry-run.  ``broadcast_params`` routes the model-broadcast (the
+downlink direction of the framework) through the same ``repro.comm``
+Channel the trainer uses for its uplink, so a quantized weight
+broadcast (int8 / natural) shares the codec and its structural wire
+accounting with the rest of the system.  KV caches are sharded batch-over-("pod","data") and
 SEQUENCE-over-"model": with GQA kv-head counts (8) below the model-axis
 size (16), head sharding cannot absorb the model axis — sequence sharding
 keeps per-device cache bytes ~C/256 and lowers the softmax over the
@@ -58,6 +62,25 @@ def build_serve_step(cfg: ModelConfig):
         logits, state = M.decode_step(params, cfg, tok, state, pos)
         return logits, state
     return serve_step
+
+
+def broadcast_params(params, compressor: str = "identity", *,
+                     key: Optional[jax.Array] = None, channel=None):
+    """Model-broadcast through the Channel downlink.
+
+    The params pytree is encoded leaf-wise with the named codec and
+    decoded on the receiving side — ``identity`` is the exact (f32)
+    broadcast, ``int8`` / ``natural`` give a quantized weight broadcast
+    at 8-9 bits/scalar.  Returns ``(params_received, wire_bits)`` with
+    bits computed structurally from the actual payloads.
+    """
+    from repro.comm import SimChannel
+    from repro.core.compressors import make_compressor
+
+    channel = channel if channel is not None else SimChannel()
+    q = make_compressor(compressor)
+    key = jax.random.PRNGKey(0) if key is None else key
+    return channel.broadcast(q, key, params)
 
 
 # ---------------------------------------------------------------------------
@@ -123,11 +146,20 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--broadcast-compressor", "--broadcast_compressor",
+                    dest="broadcast_compressor", default="identity",
+                    help="codec for the model-broadcast downlink "
+                         "(identity = exact, int8/natural = quantized)")
     args = ap.parse_args(argv)
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     cfg = cfg.with_(dtype="float32")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
+    params, bcast_bits = broadcast_params(
+        params, args.broadcast_compressor, key=jax.random.PRNGKey(17)
+    )
+    print(f"model broadcast [{args.broadcast_compressor}]: "
+          f"{float(bcast_bits) / 8e6:.2f} MB on the wire")
     cache_len = args.prompt_len + args.gen_len
     enc_len = args.prompt_len if cfg.is_encoder_decoder else 0
     state = M.make_decode_state(cfg, args.batch, cache_len, enc_len)

@@ -5,9 +5,13 @@ This is Algorithm 1 (DCGD-SHIFT) mapped onto the TPU mesh:
   * "worker i" = one (pod, data) slice; per-worker gradients come from a
     vmap over the worker axis (``dist.worker_grads``), sharded
     P(("pod","data"), ...).
-  * "send m_i to master + average" = a compressed tree-mean
-    (``dist.collectives``): dense psum / shared-pattern Rand-K /
-    int8 ring.
+  * ALL communication goes through one ``repro.comm.Channel``
+    (``MeshChannel`` here): ``channel.uplink`` encodes each worker's
+    shifted gradient with the configured codec (wire bits accounted
+    STRUCTURALLY from the actual payloads) and ``channel.reduce_mean``
+    aggregates in the configured wire format (dense psum /
+    shared-pattern Rand-K / int8 ring) — no comm-mode string dispatch
+    lives here anymore.
   * The master's aggregated shift h^k is tracked INCREMENTALLY
     (Alg. 1 line 14 as the paper notes: h^{k+1} = h^k + alpha*m^k for
     DIANA) so no uncompressed collective ever materializes for it.
@@ -20,6 +24,10 @@ parameter-server algebra lives in ``repro.core``):
   rand_diana  h_i = grad_i w.p. p (worker-local refresh); the h_bar
               correction is a dense mean of the sparse refresh deltas
               (expected p * full message — noted in EXPERIMENTS.md).
+  ef21        error feedback (Richtárik et al., 2021): the message is
+              the CONTRACTIVE compression c_i = C(grad_i - h_i);
+              h_i += c_i; h_bar += c_bar; g_bar = h_bar + c_bar.
+              Selected by shift_rule="ef21" OR comm_mode="ef21".
   vr_gdci     Algorithm 2 — compressed ITERATES (the model-broadcast
               direction): delta_i = Q(x - gamma*SGD_dir_i - h_i);
               h_i += alpha*delta_i; x = (1-eta)x + eta(delta_bar+h_bar).
@@ -27,26 +35,25 @@ parameter-server algebra lives in ``repro.core``):
               gradient mapping); the AdamW/momentum path does not apply
               to iterate compression.
 
-CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b ...
+CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+          [--comm_mode dense|randk_shared|q8_ring|ef21] ...
 """
 
 from __future__ import annotations
 
 import argparse
-import functools
 import time
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config, get_smoke_config, INPUT_SHAPES
+from repro.comm import make_channel
+from repro.configs import get_config, get_smoke_config
 from repro.configs.base import CompressionConfig, ModelConfig, TrainConfig
 from repro.core.compressors import make_compressor
-from repro.core.shift_rules import worker_compress
 from repro.dist import (
-    compressed_tree_mean,
     params_pspecs,
     per_worker_grads,
     split_batch,
@@ -59,6 +66,8 @@ from repro.models import model as M
 from repro.optim import make_optimizer
 
 tmap = jax.tree_util.tree_map
+
+COMM_MODES = ("dense", "randk_shared", "q8_ring", "ef21")
 
 
 class TrainState(NamedTuple):
@@ -76,7 +85,9 @@ def init_state(key, cfg: ModelConfig, tcfg: TrainConfig, w: int) -> TrainState:
     params = M.init_params(kp, cfg)
     opt = make_optimizer(tcfg).init(params)
     comp = tcfg.compression
-    if comp.enabled and comp.shift_rule in ("diana", "rand_diana", "vr_gdci"):
+    if comp.enabled and comp.effective_shift_rule in (
+        "diana", "rand_diana", "vr_gdci", "ef21"
+    ):
         # shift state in the gradient dtype (bf16 at scale) — a full f32
         # copy per worker would dominate HBM for the 32B archs
         h = tmap(lambda p: jnp.zeros((w, *p.shape), p.dtype), params)
@@ -88,9 +99,27 @@ def init_state(key, cfg: ModelConfig, tcfg: TrainConfig, w: int) -> TrainState:
                       jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
 
 
-def _message_bits(q, grads_one) -> float:
-    from repro.core.compressors import tree_bits
-    return tree_bits(q, grads_one)
+def build_channel(comp: CompressionConfig, cfg: ModelConfig, mesh, w: int):
+    """The MeshChannel for this run, with worker-stacked specs when the
+    aggregation runs a shard_map (q8 ring / shared Rand-K)."""
+    wspecs = None
+    if (
+        comp.enabled
+        and comp.aggregation_mode in ("q8_ring", "randk_shared")
+        and mesh is not None
+    ):
+        # worker-stacked grad specs so the ring's shard_map keeps the
+        # model-axis sharding of inner dims (no whole-leaf gathers)
+        params_shapes = jax.eval_shape(
+            lambda k: M.init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+        )
+        inner = validate_pspecs(params_shapes, params_pspecs(params_shapes), mesh)
+        wspecs = tmap(lambda sp: worker_stacked_pspec(mesh, sp), inner,
+                      is_leaf=lambda x: isinstance(x, P))
+        wshapes = tmap(lambda p: jax.ShapeDtypeStruct((w, *p.shape), p.dtype),
+                       params_shapes)
+        wspecs = validate_pspecs(wshapes, wspecs, mesh)
+    return make_channel(comp, mesh, wspecs=wspecs)
 
 
 def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int):
@@ -100,21 +129,8 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int):
     comp = tcfg.compression
     optimizer = make_optimizer(tcfg)
     q = make_compressor(comp.compressor, **dict(comp.compressor_kwargs)) if comp.enabled else None
-
-    wspecs = None
-    if comp.enabled and comp.comm_mode in ("q8_ring", "randk_shared") and mesh is not None:
-        # worker-stacked grad specs so the ring's shard_map keeps the
-        # model-axis sharding of inner dims (no whole-leaf gathers)
-        from jax.sharding import PartitionSpec as _P
-        params_shapes = jax.eval_shape(
-            lambda k: M.init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
-        )
-        inner = validate_pspecs(params_shapes, params_pspecs(params_shapes), mesh)
-        wspecs = tmap(lambda sp: worker_stacked_pspec(mesh, sp), inner,
-                      is_leaf=lambda x: isinstance(x, _P))
-        wshapes = tmap(lambda p: jax.ShapeDtypeStruct((w, *p.shape), p.dtype),
-                       params_shapes)
-        wspecs = validate_pspecs(wshapes, wspecs, mesh)
+    rule = comp.effective_shift_rule
+    channel = build_channel(comp, cfg, mesh, w)
 
     def loss_fn(params, batch):
         return M.train_loss(params, cfg, batch)
@@ -132,12 +148,9 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int):
             lambda x, g, s: (x[None] - gamma * g.astype(x.dtype)) - s,
             state.params, grads, state.h,
         )
-        delta = worker_compress(q, k1, target)
+        delta, step_bits = channel.uplink(q, k1, target)
         h = tmap(lambda s, d: s + alpha * d, state.h, delta)
-        delta_bar = compressed_tree_mean(
-            delta, comp.comm_mode, k2, mesh, randk_q=comp.randk_q,
-            wspecs=wspecs,
-        )
+        delta_bar = channel.reduce_mean(k2, delta)
         new_params = tmap(
             lambda x, db, hb: ((1.0 - eta) * x.astype(jnp.float32)
                                + eta * (db + hb).astype(jnp.float32)
@@ -145,42 +158,43 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int):
             state.params, delta_bar, state.h_bar,
         )
         h_bar = tmap(lambda hb, db: hb + alpha * db, state.h_bar, delta_bar)
-        one = tmap(lambda g: g[0], grads)
-        bits = state.bits + w * jnp.asarray(_message_bits(q, one), jnp.float32)
+        bits = state.bits + step_bits
         new_state = TrainState(new_params, state.opt, h, h_bar, key,
                                state.step + 1, bits)
         return new_state, {**metrics, "loss": loss, "bits": bits}
 
     def train_step(state: TrainState, batch):
-        if comp.enabled and comp.shift_rule == "vr_gdci":
+        if comp.enabled and rule == "vr_gdci":
             return vr_gdci_step(state, batch)
         wbatch = split_batch(batch, w)
-        grads, loss, metrics = per_worker_grads(loss_fn, params := state.params, wbatch)
+        grads, loss, metrics = per_worker_grads(loss_fn, state.params, wbatch)
         key, k1, k2, k3 = jax.random.split(state.key, 4)
         bits = state.bits
 
         if not comp.enabled:
-            g_bar = compressed_tree_mean(grads, "dense", k1, mesh)
+            g_bar = channel.reduce_mean(k1, grads)
             h, h_bar = state.h, state.h_bar
         else:
             if state.h is not None:
                 diff = tmap(lambda g, s: g - s, grads, state.h)
             else:
                 diff = grads
-            m = worker_compress(q, k1, diff)
-            m_bar = compressed_tree_mean(
-                m, comp.comm_mode, k2, mesh, randk_q=comp.randk_q,
-                wspecs=wspecs,
-            )
+            m, step_bits = channel.uplink(q, k1, diff)
+            m_bar = channel.reduce_mean(k2, m)
             h, h_bar = state.h, state.h_bar
-            if comp.shift_rule in ("fixed", "dcgd"):
+            if rule in ("fixed", "dcgd"):
                 g_bar = m_bar                     # h == 0
-            elif comp.shift_rule == "diana":
+            elif rule == "diana":
                 g_bar = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
                 a = comp.shift_alpha
                 h = tmap(lambda s, mm: s + a * mm, h, m)
                 h_bar = tmap(lambda hb, mb: hb + a * mb, h_bar, m_bar)
-            elif comp.shift_rule == "rand_diana":
+            elif rule == "ef21":
+                # error feedback: integrate the contractive message
+                g_bar = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
+                h = tmap(lambda s, mm: s + mm, h, m)
+                h_bar = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
+            elif rule == "rand_diana":
                 g_bar = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
                 refresh = jax.random.bernoulli(k3, comp.shift_p, (w,))
                 def upd(s, g):
@@ -191,10 +205,14 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int):
                 h_bar = tmap(
                     lambda hb, d: hb + jnp.mean(d, axis=0), h_bar, delta
                 )
+                # the rare refresh uplink is a full uncompressed message
+                d_total = sum(
+                    int(l.size) // w for l in jax.tree_util.tree_leaves(grads)
+                )
+                step_bits = step_bits + jnp.sum(refresh) * float(32 * d_total)
             else:
-                raise ValueError(comp.shift_rule)
-            one = tmap(lambda g: g[0], grads)
-            bits = bits + w * jnp.asarray(_message_bits(q, one), jnp.float32)
+                raise ValueError(rule)
+            bits = bits + step_bits
 
         new_params, opt = optimizer.update(g_bar, state.opt, state.params)
         new_state = TrainState(new_params, opt, h, h_bar, key,
@@ -262,7 +280,14 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke variant of the arch")
     ap.add_argument("--compressor", default="natural")
-    ap.add_argument("--shift-rule", default="diana")
+    ap.add_argument("--shift-rule", "--shift_rule", dest="shift_rule",
+                    default="diana",
+                    choices=["fixed", "dcgd", "diana", "rand_diana",
+                             "vr_gdci", "ef21"])
+    ap.add_argument("--comm-mode", "--comm_mode", dest="comm_mode",
+                    default="dense", choices=list(COMM_MODES),
+                    help="Channel aggregation format; ef21 selects the "
+                         "error-feedback mode (implies the ef21 rule)")
     ap.add_argument("--no-compression", action="store_true")
     ap.add_argument("--lr", type=float, default=3e-4)
     args = ap.parse_args(argv)
@@ -273,6 +298,7 @@ def main(argv=None):
         enabled=not args.no_compression,
         compressor=args.compressor,
         shift_rule=args.shift_rule,
+        comm_mode=args.comm_mode,
     )
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        warmup_steps=max(1, args.steps // 10),
@@ -287,7 +313,8 @@ def main(argv=None):
     stream = TokenStream(cfg, args.seq, args.batch)
 
     print(f"arch={args.arch} params={M.count_params_analytic(cfg):,} "
-          f"workers={w} compression={comp.enabled}")
+          f"workers={w} compression={comp.enabled} "
+          f"rule={comp.effective_shift_rule} comm={comp.comm_mode}")
     t0 = time.time()
     for i in range(args.steps):
         state, metrics = step_fn(state, stream.batch(i))

@@ -94,6 +94,31 @@ def test_randk_keeps_exactly_k():
     np.testing.assert_allclose(out[out != 0], 4.0)  # d/k scaling
 
 
+def test_randk_exact_k_regression_large_d():
+    """Regression: the old threshold-on-uniform-scores selection kept
+    MORE than K coordinates whenever float32 scores tied at the
+    threshold (prob ~ d/2^24 per draw — near-certain over many draws at
+    large d), and the d/k rescale then made the operator BIASED upward.
+    The permutation-prefix pattern keeps exactly K for every key."""
+    d, qfrac = 1 << 18, 0.1
+    q = RandK(qfrac)
+    k = max(1, round(qfrac * d))
+    x = jnp.ones((d,))
+    count = jax.jit(lambda kk: jnp.sum(q(kk, x) != 0))
+    for batch in range(6):
+        keys = jax.random.split(jax.random.PRNGKey(100 + batch), 50)
+        counts = np.asarray(jax.vmap(count)(keys))
+        assert (counts == k).all(), (batch, counts[counts != k])
+
+
+def test_topk_exact_k_on_ties():
+    """All-equal magnitudes are a guaranteed tie: the old >=-threshold
+    mask kept EVERY coordinate; top_k index order keeps exactly K."""
+    x = jnp.ones(40)
+    out = TopK(0.25)(None, x)
+    assert int(jnp.sum(out != 0)) == 10
+
+
 def test_topk_keeps_largest():
     x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 1.0])
     out = TopK(0.5)(None, x)
@@ -194,3 +219,28 @@ def test_registry():
     assert isinstance(make_compressor("randk", q=0.5), RandK)
     with pytest.raises(ValueError):
         make_compressor("nope")
+
+
+def test_registry_rejects_unknown_kwargs():
+    """The convenience entries must raise on unknown kwargs exactly like
+    the dataclass paths do (no silent **kwargs sink)."""
+    ind = make_compressor("induced_topk_randk", q=0.25)
+    assert isinstance(ind, Induced)
+    for name in ("induced_topk_randk", "induced_topk_natural", "randk",
+                 "int8", "topk"):
+        with pytest.raises(TypeError):
+            make_compressor(name, not_a_real_kwarg=1)
+
+
+def test_tree_shifted_compress_structure_mismatch():
+    from repro.core.compressors import tree_shifted_compress
+
+    key = jax.random.PRNGKey(0)
+    tree = {"a": jnp.ones(4), "b": jnp.ones(3)}
+    with pytest.raises(ValueError, match="structure"):
+        tree_shifted_compress(Identity(), key, tree,
+                              {"a": jnp.ones(4), "c": jnp.ones(3)})
+    # matching structures still work
+    out = tree_shifted_compress(Identity(), key, tree,
+                                {"a": jnp.zeros(4), "b": jnp.zeros(3)})
+    np.testing.assert_allclose(np.asarray(out["a"]), 1.0)

@@ -1,6 +1,12 @@
 """Launch-layer integration: the production train step (all shift rules
-and comm modes) trains a tiny LM on one host; decode state round-trips
-through the serve step."""
+and comm modes, routed through the Channel) trains a tiny LM on one
+host; the EF21 comm mode also runs through the train CLI on 8 fake
+devices."""
+
+import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +18,8 @@ from repro.configs.base import CompressionConfig, TrainConfig
 from repro.data.tokens import TokenStream
 from repro.launch.mesh import make_host_mesh, n_workers
 from repro.launch.train import build_train_step, init_state
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _train(comp: CompressionConfig, steps=100, lr=1e-2):
@@ -57,6 +65,49 @@ def test_vr_gdci_trains():
     assert np.isfinite(losses).all()
     assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.015, (
         losses[:3], losses[-3:])
+
+
+def test_ef21_comm_mode_trains():
+    """The ef21 comm mode (error feedback with a contractive TopK codec)
+    learns on the LM; comm_mode alone selects the rule."""
+    losses, state = _train(CompressionConfig(
+        enabled=True, compressor="topk", compressor_kwargs=(("q", 0.25),),
+        comm_mode="ef21"))
+    assert np.isfinite(losses).all(), losses[-5:]
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.02, (
+        losses[:3], losses[-3:])
+    assert float(state.bits) > 0
+    # shifts are live: EF21 integrates every message into h
+    assert state.h is not None
+    assert float(jnp.sum(jnp.abs(jax.tree_util.tree_leaves(state.h)[0]))) > 0
+
+
+_EF21_CLI = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.launch.train import main
+    state = main(["--arch", "qwen3-0.6b", "--smoke", "--steps", "2",
+                  "--batch", "8", "--seq", "32",
+                  "--compressor", "topk", "--comm_mode", "ef21"])
+    assert np.isfinite(float(state.bits)) and float(state.bits) > 0
+    assert state.h is not None  # EF21 shift state allocated (8 workers)
+    import jax
+    assert jax.tree_util.tree_leaves(state.h)[0].shape[0] == 8
+    print("EF21_CLI_OK")
+""")
+
+
+def test_train_cli_ef21_8dev_subprocess():
+    """--comm_mode ef21 end-to-end through the train CLI on 8 fake
+    devices (the acceptance path for the error-feedback comm mode)."""
+    r = subprocess.run(
+        [sys.executable, "-c", _EF21_CLI],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=_REPO_ROOT,
+    )
+    assert "EF21_CLI_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]
 
 
 def test_diana_matches_dense_direction():

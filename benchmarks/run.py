@@ -21,7 +21,7 @@ def main(argv=None):
                     help="tiny-config run of every suite (CI smoke)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig2,fig4,table1,"
-                         "gdci,ef21,kernels,roofline")
+                         "gdci,ef21,kernels,overlap,roofline")
     args = ap.parse_args(argv)
     scale = 50 if args.smoke else (4 if args.fast else 1)
 
@@ -32,6 +32,7 @@ def main(argv=None):
         fig4_logreg,
         gdci_bench,
         kernels_bench,
+        overlap_bench,
         roofline_report,
         table1_rates,
     )
@@ -44,6 +45,8 @@ def main(argv=None):
         "gdci": lambda: gdci_bench.main(steps=gdci_bench.STEPS // scale),
         "ef21": lambda: ef21_bench.main(steps=ef21_bench.STEPS // scale),
         "kernels": lambda: kernels_bench.main(smoke=args.smoke),
+        "overlap": lambda: overlap_bench.main(
+            steps=overlap_bench.STEPS // scale, smoke=args.smoke),
         "roofline": roofline_report.main,
     }
     only = set(args.only.split(",")) if args.only else set(suites)

@@ -2,11 +2,15 @@
 
 See ``repro.comm.channel`` for the abstraction; ``SimChannel`` is the
 vmapped parameter server used by the reference algebra in ``repro.core``,
-``MeshChannel`` wraps the codec-driven collectives in ``repro.dist``.
+``MeshChannel`` wraps the codec-driven collectives in ``repro.dist``,
+and ``AsyncChannel`` (``repro.comm.overlap``) is the bucketed,
+pipelined overlapped runtime on top of them.  ``repro.comm.wire``
+holds the per-worker encode helpers shared by all of them.
 """
 
 from repro.comm.channel import (
     AGGREGATION_MODES,
+    CHANNEL_MODES,
     Channel,
     MeshChannel,
     SimChannel,
@@ -14,13 +18,36 @@ from repro.comm.channel import (
     collective_payload_scale,
     make_channel,
 )
+from repro.comm.overlap import (
+    DEFAULT_BUCKET_BYTES,
+    AsyncChannel,
+    Bucket,
+    BucketPlan,
+    plan_buckets,
+)
+from repro.comm.wire import (
+    encode_decode_workers,
+    encode_meta_free,
+    encode_workers,
+    worker_keys,
+)
 
 __all__ = [
     "AGGREGATION_MODES",
+    "CHANNEL_MODES",
+    "DEFAULT_BUCKET_BYTES",
+    "AsyncChannel",
+    "Bucket",
+    "BucketPlan",
     "Channel",
     "MeshChannel",
     "SimChannel",
     "aggregation_mode_of",
     "collective_payload_scale",
+    "encode_decode_workers",
+    "encode_meta_free",
+    "encode_workers",
     "make_channel",
+    "plan_buckets",
+    "worker_keys",
 ]

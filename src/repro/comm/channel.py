@@ -18,7 +18,7 @@ routes BOTH through a single interface instead of ad-hoc call sites:
         the downlink (model-broadcast) direction: one encoded message
         from the master, decoded by every worker.
 
-Two interchangeable implementations:
+Three interchangeable implementations:
 
   ``SimChannel``   the vmapped parameter-server of ``core.simulate`` /
         ``core.shift_rules``: the master receives every decoded message
@@ -27,11 +27,17 @@ Two interchangeable implementations:
         live on their worker's device slice), aggregation wraps
         ``dist.collectives`` — dense psum, shared-pattern Rand-K, or the
         int8 ring/tree all-reduce, all driven by the same codecs.
+  ``AsyncChannel`` (``repro.comm.overlap``) the overlapped runtime:
+        reverse-layer byte-budget buckets with explicit start/finish
+        handles and an interleaved encode/reduce pipeline; drained
+        synchronously it is bit-exact with ``MeshChannel``.
 
 ``make_channel`` builds the right one from a ``CompressionConfig`` (or a
 comm-mode string), replacing the string dispatch that used to live in
 ``launch/train.py``.  The ``ef21`` comm mode aggregates densely — the
-messages themselves are the contractive-compressed EF21 increments.
+messages themselves are the contractive-compressed EF21 increments —
+and ``q8_ring_overlap`` selects the AsyncChannel over the Pallas-fused
+``q8_ring_fused`` aggregation format.
 """
 
 from __future__ import annotations
@@ -42,13 +48,19 @@ from typing import TYPE_CHECKING, Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm.wire import encode_decode_workers
+
 if TYPE_CHECKING:  # import cycle: core.shift_rules routes through Channel
     from repro.core.compressors import Compressor
 
 tmap = jax.tree_util.tree_map
 
 #: aggregation formats a MeshChannel supports (ef21/disabled map to dense)
-AGGREGATION_MODES = ("dense", "randk_shared", "q8_ring")
+AGGREGATION_MODES = ("dense", "randk_shared", "q8_ring", "q8_ring_fused")
+
+#: every comm-mode string make_channel accepts (config/CLI surface):
+#: aggregation formats plus the channel-selecting aliases
+CHANNEL_MODES = AGGREGATION_MODES + ("sim", "ef21", "q8_ring_overlap")
 
 
 class Channel:
@@ -65,23 +77,11 @@ class Channel:
         structural (summed ``q.wire_bits`` over the actual payloads).
         """
         leaves, treedef = jax.tree_util.tree_flatten(wtree)
-        shared = bool(getattr(q, "shared_pattern", False))
         out = []
         bits = jnp.zeros((), jnp.float32)
         for i, leaf in enumerate(leaves):
             lk = jax.random.fold_in(key, i)
-            w = leaf.shape[0]
-            if shared or not q.stochastic:
-                keys = jnp.broadcast_to(lk, (w, *lk.shape))
-            else:
-                keys = jax.random.split(lk, w)
-            sds = jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype)
-
-            def enc_dec(k, row):
-                payload, meta = q.encode(k, row)
-                return payload, q.decode(payload, meta, sds)
-
-            payload, decoded = jax.vmap(enc_dec)(keys, leaf)
+            payload, decoded = encode_decode_workers(q, lk, leaf)
             bits = bits + q.wire_bits(payload)
             out.append(decoded)
         return jax.tree_util.tree_unflatten(treedef, out), bits
@@ -153,24 +153,56 @@ class MeshChannel(Channel):
 def aggregation_mode_of(mode_or_cfg) -> str:
     """Normalize a comm-mode string / CompressionConfig to an aggregation
     format: disabled configs and the ``ef21`` mode aggregate densely
-    (EF21's wire savings are in the per-worker contractive messages)."""
+    (EF21's wire savings are in the per-worker contractive messages);
+    ``q8_ring_overlap`` aggregates in the Pallas-fused ``q8_ring_fused``
+    wire format."""
     if hasattr(mode_or_cfg, "aggregation_mode"):  # CompressionConfig
         return mode_or_cfg.aggregation_mode
-    return "dense" if mode_or_cfg == "ef21" else mode_or_cfg
+    if mode_or_cfg == "ef21":
+        return "dense"
+    if mode_or_cfg == "q8_ring_overlap":
+        return "q8_ring_fused"
+    return mode_or_cfg
 
 
 def make_channel(mode_or_cfg="dense", mesh=None, *, randk_q: float = 0.05,
-                 wspecs=None) -> Channel:
+                 wspecs=None, bucket_bytes: Optional[int] = None) -> Channel:
     """Build a Channel from a comm-mode string or a CompressionConfig.
 
-    ``"sim"`` gives the parameter-server SimChannel; everything else a
-    MeshChannel in the corresponding aggregation format.
+    ``"sim"`` gives the parameter-server SimChannel; ``q8_ring_overlap``
+    the bucketed AsyncChannel over the fused q8 ring (``bucket_bytes``
+    sets its per-bucket budget in uncompressed per-worker message
+    bytes, and is rejected for every other mode); everything else a
+    MeshChannel in the corresponding aggregation format.  Unknown modes
+    raise, naming every accepted mode — a typo'd mode must fail HERE,
+    not as a confusing shape/key error deep in a collective.
     """
+    comm_mode = getattr(mode_or_cfg, "comm_mode", mode_or_cfg)
+    if isinstance(comm_mode, str) and comm_mode not in CHANNEL_MODES:
+        raise ValueError(
+            f"unknown comm mode {comm_mode!r}; have channel modes "
+            f"{CHANNEL_MODES} (aggregation formats: {AGGREGATION_MODES})"
+        )
+    if bucket_bytes is not None and comm_mode != "q8_ring_overlap":
+        raise ValueError(
+            f"bucket_bytes only applies to the 'q8_ring_overlap' channel, "
+            f"not {comm_mode!r} (it would be silently ignored)"
+        )
+    if comm_mode == "sim":  # uniform: string or config comm_mode
+        return SimChannel()
     if hasattr(mode_or_cfg, "comm_mode"):
         randk_q = mode_or_cfg.randk_q
-    elif mode_or_cfg == "sim":
-        return SimChannel()
+        if bucket_bytes is None:
+            bucket_bytes = getattr(mode_or_cfg, "overlap_bucket_bytes", None)
     mode = aggregation_mode_of(mode_or_cfg)
+    if comm_mode == "q8_ring_overlap":
+        from repro.comm.overlap import DEFAULT_BUCKET_BYTES, AsyncChannel
+
+        return AsyncChannel(
+            mode=mode, mesh=mesh, randk_q=randk_q, wspecs=wspecs,
+            bucket_bytes=(DEFAULT_BUCKET_BYTES if bucket_bytes is None
+                          else bucket_bytes),
+        )
     return MeshChannel(mode=mode, mesh=mesh, randk_q=randk_q, wspecs=wspecs)
 
 

@@ -1,0 +1,68 @@
+"""Shared per-worker encode plumbing for the wire layer.
+
+One home for the helpers that were duplicated between the Channel
+uplink (``repro.comm.channel``) and the codec-driven collectives
+(``repro.dist.collectives``): worker key derivation, the vmapped
+per-worker encode, and the meta-free guard for forwarded-payload
+transports.  Imports only jax — safe for both sides of the
+comm <-> dist boundary.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def worker_keys(codec, key: jax.Array, w: int) -> jax.Array:
+    """Per-worker encode keys for ONE leaf, stacked (w, *key.shape).
+
+    Every worker samples the SAME key when the codec declares a shared
+    pattern (correlated Rand-K) or is deterministic — the property the
+    payload-shrinking collectives rely on; decorrelated split keys
+    otherwise.
+    """
+    if getattr(codec, "shared_pattern", False) or not codec.stochastic:
+        return jnp.broadcast_to(key, (w, *key.shape))
+    return jax.random.split(key, w)
+
+
+def encode_workers(codec, key: jax.Array, leaf: jax.Array):
+    """Encode each worker row of a worker-stacked leaf.
+
+    Returns the worker-stacked ``(payload, meta)`` pytrees (leaves gain
+    a leading W axis; for shared-pattern codecs every row is encoded
+    with the same key, so meta rows are identical).
+    """
+    return jax.vmap(codec.encode)(worker_keys(codec, key, leaf.shape[0]), leaf)
+
+
+def encode_decode_workers(codec, key: jax.Array, leaf: jax.Array):
+    """One uplink leaf: encode then decode each worker row.
+
+    Returns ``(stacked payload, stacked decoded messages)`` — the
+    decoded tensor is what the master-side aggregation sees, the payload
+    is what wire accounting charges.
+    """
+    sds = jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype)
+
+    def enc_dec(k, row):
+        payload, meta = codec.encode(k, row)
+        return payload, codec.decode(payload, meta, sds)
+
+    return jax.vmap(enc_dec)(worker_keys(codec, key, leaf.shape[0]), leaf)
+
+
+def encode_meta_free(codec, key: jax.Array, block: jax.Array):
+    """Encode for forwarded-payload transports (ring hops, the pod psum
+    stage): the decoder sees ONLY the payload, so shared-seed side
+    information in ``meta`` cannot travel — reject codecs that need it.
+    """
+    payload, meta = codec.encode(key, block)
+    if jax.tree_util.tree_leaves(meta):
+        raise ValueError(
+            f"{type(codec).__name__} carries decoder state in meta; "
+            "quantized ring/tree stages forward payloads only "
+            "(meta must be empty)"
+        )
+    return payload

@@ -128,7 +128,10 @@ class CompressionConfig:
     ``randk_shared`` / ``q8_ring`` pick the uplink aggregation wire
     format; ``ef21`` selects the error-feedback mode (contractive
     messages integrated into the shifts, aggregated densely) and
-    overrides ``shift_rule``.
+    overrides ``shift_rule``; ``q8_ring_overlap`` selects the bucketed
+    overlapped AsyncChannel over the Pallas-fused q8 ring
+    (``overlap_bucket_bytes`` sets its per-bucket budget, in
+    uncompressed per-worker message bytes).
     """
     enabled: bool = True
     compressor: str = "natural"    # see core.compressors.make_compressor
@@ -138,7 +141,9 @@ class CompressionConfig:
     shift_p: float = 0.05          # Rand-DIANA refresh probability
     gdci_eta: float = 0.5          # VR-GDCI model-mixing rate
     comm_mode: str = "dense"       # dense | q8_ring | randk_shared | ef21
+                                   # | q8_ring_overlap
     randk_q: float = 0.05          # keep-fraction for randk_shared
+    overlap_bucket_bytes: int = 4 << 20  # AsyncChannel bucket budget
 
     @property
     def effective_shift_rule(self) -> str:

@@ -679,6 +679,13 @@ def _induced_topk_natural(q: float = 0.1) -> "Induced":
     return Induced(c=TopK(q), q=NaturalCompression())
 
 
+def _fused_q8(**kw) -> Compressor:
+    # lazy: the Pallas-fused blockwise-int8 codec lives with its kernel
+    from repro.kernels.q8ring.ops import FusedQ8
+
+    return FusedQ8(**kw)
+
+
 def make_compressor(name: str, **kw) -> Compressor:
     table = {
         "identity": Identity,
@@ -689,6 +696,7 @@ def make_compressor(name: str, **kw) -> Compressor:
         "natural": NaturalCompression,
         "terngrad": TernGrad,
         "int8": Int8Stochastic,
+        "q8_block": _fused_q8,
         "topk": TopK,
         "sign": ScaledSign,
         "induced": Induced,

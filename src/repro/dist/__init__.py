@@ -16,10 +16,14 @@ Mapping onto the paper's operators (Algorithm 1, DCGD-SHIFT):
       three wire formats: exact psum (``dense_mean``), correlated
       Rand-K payload averaging (``randk_shared_mean``: K values per
       message, pattern implied by the shared seed), or the ring/tree
-      all-reduce forwarding ``Int8Stochastic`` payloads
-      (``q8_ring_tree_mean``).  ``repro.comm.MeshChannel`` is the
-      high-level entry point.  The master's aggregated shift h^k is
-      tracked incrementally in ``launch.train`` (h^{k+1} = h^k +
+      all-reduce (``q8_ring_tree_mean``) forwarding ``Int8Stochastic``
+      payloads — or, for codecs flagged ``fused_ring`` (``FusedQ8``),
+      running the Pallas-fused hop pipeline of ``kernels.q8ring``.
+      ``repro.comm.MeshChannel`` is the high-level entry point;
+      ``repro.comm.AsyncChannel`` pipelines the same collectives bucket
+      by bucket (``leaf_indices`` keeps per-leaf keys global, so
+      bucketing never changes the math).  The master's aggregated shift
+      h^k is tracked incrementally in ``launch.train`` (h^{k+1} = h^k +
       alpha * m^k), so no uncompressed collective ever materializes.
   ``sharding``   not in the paper — the GSPMD layer that places
       parameters, optimizer moments, and worker-stacked shift state on

@@ -20,11 +20,18 @@ around the mesh — it contains no compressor math of its own:
                          axes, with an optional quantized tree (psum)
                          stage across the ``pod`` axis.  The ring is
                          generic over any meta-free codec
-                         (``_ring_allreduce_coded``).
+                         (``_ring_allreduce_coded``); codecs that set
+                         ``fused_ring`` (``kernels.q8ring.FusedQ8``)
+                         take ``_ring_allreduce_fused`` instead, where
+                         chunk gather + scale + int8 quantize are one
+                         Pallas kernel per hop (``q8_ring_fused`` mode).
 
 ``compressed_tree_mean`` dispatches between them from an aggregation-mode
 string or a ``CompressionConfig``; ``repro.comm.MeshChannel`` is the
-higher-level entry point.
+higher-level entry point.  Every tree-level entry takes an optional
+``leaf_indices`` — the GLOBAL positions of the given leaves in the full
+gradient tree, so per-leaf keys stay stable when the overlap runtime
+(``repro.comm.overlap``) reduces bucket subtrees independently.
 """
 
 from __future__ import annotations
@@ -37,6 +44,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.comm.wire import encode_meta_free, encode_workers
 from repro.core.compressors import Compressor, Int8Stochastic, RandK
 
 tmap = jax.tree_util.tree_map
@@ -52,7 +60,8 @@ def dense_mean(wtree):
 # ---------------------------------------------------------------------------
 
 
-def randk_shared_mean(key: jax.Array, wtree, ratio: float):
+def randk_shared_mean(key: jax.Array, wtree, ratio: float, *,
+                      leaf_indices: Optional[Sequence[int]] = None):
     """Mean of shared-pattern Rand-K messages (correlated sampling).
 
     Every worker encodes with the SAME per-leaf key, so
@@ -69,11 +78,12 @@ def randk_shared_mean(key: jax.Array, wtree, ratio: float):
     """
     codec = RandK(q=ratio, shared_pattern=True)
     leaves, treedef = jax.tree_util.tree_flatten(wtree)
+    idxs = _leaf_indices(leaves, leaf_indices)
     out = []
     for i, leaf in enumerate(leaves):
-        lk = jax.random.fold_in(key, i)
+        lk = jax.random.fold_in(key, idxs[i])
         sds = jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype)
-        payload, meta = jax.vmap(codec.encode, in_axes=(None, 0))(lk, leaf)
+        payload, meta = encode_workers(codec, lk, leaf)
         mean_payload = tmap(lambda v: jnp.mean(v, axis=0), payload)
         meta_one = tmap(lambda v: v[0], meta)  # identical across workers
         out.append(codec.decode(mean_payload, meta_one, sds))
@@ -85,34 +95,85 @@ def randk_shared_mean(key: jax.Array, wtree, ratio: float):
 # ---------------------------------------------------------------------------
 
 
-def _encode_meta_free(codec: Compressor, key: jax.Array, block: jax.Array):
-    """Encode for forwarded-payload transports (ring hops, the pod psum
-    stage): the decoder sees ONLY the payload, so shared-seed side
-    information in ``meta`` cannot travel — reject codecs that need it.
-    """
-    payload, meta = codec.encode(key, block)
-    if jax.tree_util.tree_leaves(meta):
+# the meta-free encode guard lives in comm.wire now (shared with the
+# Channel layer); kept under its old private name for callers/tests
+_encode_meta_free = encode_meta_free
+
+
+def _leaf_indices(leaves, leaf_indices) -> tuple:
+    """Normalize/validate the global leaf positions for per-leaf keys."""
+    if leaf_indices is None:
+        return tuple(range(len(leaves)))
+    if len(leaf_indices) != len(leaves):
         raise ValueError(
-            f"{type(codec).__name__} carries decoder state in meta; "
-            "quantized ring/tree stages forward payloads only "
-            "(meta must be empty)"
+            f"leaf_indices has {len(leaf_indices)} entries for "
+            f"{len(leaves)} leaves"
         )
-    return payload
+    return tuple(int(i) for i in leaf_indices)
+
+
+def _ring_schedule(key: jax.Array, chunks: jax.Array, axis: str, n: int, *,
+                   encode_send, decode_add, decode):
+    """THE ring all-reduce schedule, in one place.
+
+    ``chunks`` is (n, ...) with one chunk per device position; both ring
+    variants (generic coded, Pallas-fused) drive this same hop/ownership
+    arithmetic through three hooks:
+
+      ``encode_send(k, chunks, chunk_id)``  encode the rotating send
+            chunk into a forwardable payload pytree.
+      ``decode_add(payload, mine)``         dequantize + accumulate into
+            the local (1, ...) chunk slice.
+      ``decode(payload)``                   dequantize to a (1, ...) slice.
+
+    Phase 1 — reduce-scatter: at hop t each device sends chunk
+    ``(idx - t) % n`` (per-hop key ``fold_in(key, t)``) and accumulates
+    what it receives into chunk ``(send_id - 1) % n``; after n-1 hops
+    device i owns the fully reduced chunk ``(i + 1) % n``.  Phase 2 —
+    all-gather: each owner's chunk is encoded ONCE (key ``n + 1``) and
+    the payload forwarded verbatim, so every device decodes
+    bit-identical values — the output is truly replicated over ``axis``.
+    """
+    idx = jax.lax.axis_index(axis)
+    fwd = [(j, (j + 1) % n) for j in range(n)]
+
+    def hop(payload):
+        return tmap(lambda a: jax.lax.ppermute(a, axis, fwd), payload)
+
+    for t in range(n - 1):
+        send_id = (idx - t) % n
+        payload = hop(encode_send(jax.random.fold_in(key, t), chunks,
+                                  send_id))
+        recv_id = (send_id - 1) % n
+        mine = jax.lax.dynamic_slice_in_dim(chunks, recv_id, 1, axis=0)
+        chunks = jax.lax.dynamic_update_slice_in_dim(
+            chunks, decode_add(payload, mine), recv_id, axis=0
+        )
+
+    own_id = (idx + 1) % n
+    payload = encode_send(jax.random.fold_in(key, n + 1), chunks, own_id)
+    final = jnp.zeros_like(chunks)
+    final = jax.lax.dynamic_update_slice_in_dim(
+        final, decode(payload), own_id, axis=0
+    )
+    for t in range(n - 1):
+        payload = hop(payload)
+        recv_id = (idx - t) % n  # sender (idx-1) owned (idx - t) at hop t
+        final = jax.lax.dynamic_update_slice_in_dim(
+            final, decode(payload), recv_id, axis=0
+        )
+    return final
 
 
 def _ring_allreduce_coded(key: jax.Array, x: jax.Array, axis: str, n: int,
                           codec: Compressor):
     """Ring all-reduce of ``x`` (sum) over mesh axis ``axis``, forwarding
-    the CODEC'S ENCODED PAYLOAD on every hop: reduce-scatter then
-    all-gather, both with compressed payloads.
+    the CODEC'S ENCODED PAYLOAD on every hop (schedule in
+    ``_ring_schedule``).
 
     The payload pytree is permuted leaf-wise, so this works for any
     codec whose decoder state travels entirely in the payload (empty
     ``meta`` — shared-seed side information cannot ride the ring).
-
-    In the all-gather phase each finished chunk is encoded ONCE by its
-    owner and the payload is forwarded verbatim, so every device decodes
-    bit-identical values — the output is truly replicated over ``axis``.
     """
     if n == 1:
         return x
@@ -120,43 +181,69 @@ def _ring_allreduce_coded(key: jax.Array, x: jax.Array, axis: str, n: int,
     flat = x.reshape(-1).astype(jnp.float32)
     d = flat.shape[0]
     c = -(-d // n)  # chunk length, ceil
-    flat = jnp.pad(flat, (0, n * c - d))
-    chunks = flat.reshape(n, c)
-    idx = jax.lax.axis_index(axis)
-    fwd = [(j, (j + 1) % n) for j in range(n)]
+    chunks = jnp.pad(flat, (0, n * c - d)).reshape(n, c)
     sds = jax.ShapeDtypeStruct((1, c), jnp.float32)
-
     encode = functools.partial(_encode_meta_free, codec)
 
-    def hop(payload):
-        return tmap(lambda a: jax.lax.ppermute(a, axis, fwd), payload)
-
-    # Phase 1 — reduce-scatter: after n-1 hops, device i owns the fully
-    # reduced chunk (i + 1) % n.
-    for t in range(n - 1):
-        send_id = (idx - t) % n
-        block = jax.lax.dynamic_slice_in_dim(chunks, send_id, 1, axis=0)
-        payload = hop(encode(jax.random.fold_in(key, t), block))
-        recv_id = (send_id - 1) % n
-        mine = jax.lax.dynamic_slice_in_dim(chunks, recv_id, 1, axis=0)
-        chunks = jax.lax.dynamic_update_slice_in_dim(
-            chunks, mine + codec.decode(payload, {}, sds), recv_id, axis=0
-        )
-
-    # Phase 2 — all-gather: circulate each owner's chunk, encoded once.
-    own_id = (idx + 1) % n
-    own = jax.lax.dynamic_slice_in_dim(chunks, own_id, 1, axis=0)
-    payload = encode(jax.random.fold_in(key, n + 1), own)
-    final = jnp.zeros_like(chunks)
-    final = jax.lax.dynamic_update_slice_in_dim(
-        final, codec.decode(payload, {}, sds), own_id, axis=0
+    final = _ring_schedule(
+        key, chunks, axis, n,
+        encode_send=lambda k, ch, cid: encode(
+            k, jax.lax.dynamic_slice_in_dim(ch, cid, 1, axis=0)
+        ),
+        decode_add=lambda p, mine: mine + codec.decode(p, {}, sds),
+        decode=lambda p: codec.decode(p, {}, sds),
     )
-    for t in range(n - 1):
-        payload = hop(payload)
-        recv_id = (idx - t) % n  # sender (idx-1) owned (idx - t) at hop t
-        final = jax.lax.dynamic_update_slice_in_dim(
-            final, codec.decode(payload, {}, sds), recv_id, axis=0
-        )
+    return final.reshape(-1)[:d].reshape(shape)
+
+
+def _ring_allreduce_fused(key: jax.Array, x: jax.Array, axis: str, n: int,
+                          codec):
+    """Ring all-reduce with the Pallas-fused q8 hop kernels.
+
+    Same ``_ring_schedule``, but the per-hop pipeline — gather the
+    rotating send chunk, compute tile scales, stochastic-round to int8 —
+    is ONE kernel (``q8_quantize_chunk_3d``: the chunk id goes in via
+    scalar prefetch, so no f32 chunk copy materializes), and the receive
+    side is one fused dequant-accumulate pass.  ``codec`` is a
+    ``kernels.q8ring.FusedQ8`` (blockwise scales; supplies block_rows /
+    interpret).  Chunks are row-aligned to the (rows, 128) lane layout.
+    """
+    from repro.kernels.q8ring.kernel import (
+        LANE,
+        q8_dequant_add_2d,
+        q8_quantize_chunk_3d,
+    )
+    from repro.kernels.q8ring.ops import q8_dequant, ring_chunk_layout
+
+    if n == 1:
+        return x
+    shape = x.shape
+    d = int(x.size)
+    rows_c, block = ring_chunk_layout(d, n, codec.block_rows)
+    flat = x.reshape(-1).astype(jnp.float32)
+    chunks = jnp.pad(flat, (0, n * rows_c * LANE - d)).reshape(
+        n, rows_c, LANE
+    )
+    interp = codec.run_interpret
+
+    def encode_send(k, ch, cid):
+        u = jax.random.uniform(k, (rows_c, LANE))
+        return q8_quantize_chunk_3d(ch, u, cid, block_rows=block,
+                                    interpret=interp)
+
+    def decode_add(payload, mine):
+        q, s = payload
+        return q8_dequant_add_2d(q, s, mine[0], block_rows=block,
+                                 interpret=interp)[None]
+
+    def decode(payload):
+        q, s = payload
+        return q8_dequant(q, s, block=block, interpret=interp)[None]
+
+    final = _ring_schedule(
+        key, chunks, axis, n,
+        encode_send=encode_send, decode_add=decode_add, decode=decode,
+    )
     return final.reshape(-1)[:d].reshape(shape)
 
 
@@ -169,6 +256,7 @@ def q8_ring_tree_mean(
     pod_axis: Optional[str] = None,
     wspecs=None,
     codec: Compressor = Int8Stochastic(),
+    leaf_indices: Optional[Sequence[int]] = None,
 ):
     """Quantized ring/tree mean over a worker-stacked tree on a sharded
     mesh, with ``Int8Stochastic`` payloads by default.
@@ -180,12 +268,19 @@ def q8_ring_tree_mean(
     tree (psum) stage across ``pod_axis``.  ``wspecs`` optionally gives
     the worker-stacked PartitionSpecs so inner-dim ("model") sharding is
     preserved through the shard_map — each model shard runs its own
-    independent ring.
+    independent ring.  Codecs with ``fused_ring`` set (``FusedQ8``) run
+    the Pallas-fused hop pipeline instead of the generic encoded ring.
+    ``leaf_indices`` pins per-leaf keys to global tree positions so a
+    bucket subtree reduces bit-identically to the same leaves inside the
+    full tree (the overlap runtime's drained-sync contract).
     """
     waxes = tuple(worker_axes)
     all_axes = ((pod_axis,) if pod_axis else ()) + waxes
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     leaves, treedef = jax.tree_util.tree_flatten(tree)
+    idxs = _leaf_indices(leaves, leaf_indices)
+    ring = (_ring_allreduce_fused if getattr(codec, "fused_ring", False)
+            else _ring_allreduce_coded)
     w_glob = [leaf.shape[0] for leaf in leaves]
 
     if wspecs is None:
@@ -208,10 +303,10 @@ def q8_ring_tree_mean(
     def local_fn(k, *ls):
         outs = []
         for i, x in enumerate(ls):
-            lk = jax.random.fold_in(k, i)
+            lk = jax.random.fold_in(k, idxs[i])
             acc = jnp.sum(x.astype(jnp.float32), axis=0)
             for j, ax in enumerate(waxes):
-                acc = _ring_allreduce_coded(
+                acc = ring(
                     jax.random.fold_in(lk, j), acc, ax, sizes[ax], codec
                 )
             if pod_axis and pod_n > 1:
@@ -248,16 +343,18 @@ def compressed_tree_mean(
     *,
     randk_q: float = 0.05,
     wspecs=None,
+    leaf_indices: Optional[Sequence[int]] = None,
 ):
     """Worker-mean of a stacked tree in the configured wire format.
 
     ``mode`` is an aggregation-mode string (``dense | randk_shared |
-    q8_ring``) or a ``CompressionConfig``, in which case its effective
-    aggregation mode and ``randk_q`` fields are used (a disabled config
-    and the ``ef21`` comm mode both aggregate densely).  Prefer
+    q8_ring | q8_ring_fused``) or a ``CompressionConfig``, in which case
+    its effective aggregation mode and ``randk_q`` fields are used (a
+    disabled config and the ``ef21`` comm mode both aggregate densely;
+    ``q8_ring_overlap`` aggregates ``q8_ring_fused``).  Prefer
     ``repro.comm.make_channel(...).reduce_mean`` in new code.
     """
-    from repro.comm.channel import aggregation_mode_of
+    from repro.comm.channel import AGGREGATION_MODES, aggregation_mode_of
 
     if hasattr(mode, "comm_mode"):  # CompressionConfig
         randk_q = mode.randk_q
@@ -265,13 +362,23 @@ def compressed_tree_mean(
     if mode == "dense":
         return dense_mean(wtree)
     if mode == "randk_shared":
-        return randk_shared_mean(key, wtree, randk_q)
-    if mode == "q8_ring":
+        return randk_shared_mean(key, wtree, randk_q,
+                                 leaf_indices=leaf_indices)
+    if mode in ("q8_ring", "q8_ring_fused"):
         if mesh is None:
-            raise ValueError("q8_ring needs a mesh")
+            raise ValueError(f"{mode} needs a mesh")
+        if mode == "q8_ring_fused":
+            from repro.kernels.q8ring.ops import FusedQ8
+
+            codec = FusedQ8()
+        else:
+            codec = Int8Stochastic()
         waxes = tuple(a for a in ("data",) if a in mesh.axis_names)
         pod = "pod" if "pod" in mesh.axis_names else None
         return q8_ring_tree_mean(
-            key, wtree, mesh, worker_axes=waxes, pod_axis=pod, wspecs=wspecs
+            key, wtree, mesh, worker_axes=waxes, pod_axis=pod, wspecs=wspecs,
+            codec=codec, leaf_indices=leaf_indices,
         )
-    raise ValueError(f"unknown comm mode {mode!r}")
+    raise ValueError(
+        f"unknown aggregation mode {mode!r}; have {AGGREGATION_MODES}"
+    )

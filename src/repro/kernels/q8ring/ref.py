@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the fused q8 ring kernels: per-tile max-scale
+int8 stochastic rounding and dequant-accumulate, tile semantics exactly
+as the kernels (one scale per (block, 128) row block)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.q8ring.kernel import LANE, LEVELS, SCALE_FLOOR
+
+
+def q8_quantize_ref(x, u, *, block: int):
+    """x, u: (R, 128); returns (q int8 (R, 128), scales f32 (R//block, 1))."""
+    r, lane = x.shape
+    assert lane == LANE and r % block == 0
+    nb = r // block
+    xb = x.astype(jnp.float32).reshape(nb, block * lane)
+    scales = jnp.maximum(jnp.max(jnp.abs(xb), axis=1), SCALE_FLOOR) / LEVELS
+    y = xb / scales[:, None]
+    lo = jnp.floor(y)
+    up = (u.reshape(nb, block * lane) < (y - lo)).astype(jnp.float32)
+    q = (lo + up).astype(jnp.int8).reshape(r, lane)
+    return q, scales[:, None]
+
+
+def q8_dequant_add_ref(q, scales, acc, *, block: int):
+    """acc + q * scale with one scale per (block, 128) row block."""
+    r, lane = q.shape
+    nb = r // block
+    deq = q.astype(jnp.float32).reshape(nb, block * lane) * scales
+    return acc + deq.reshape(r, lane)

@@ -30,7 +30,13 @@ from repro.data.tokens import make_batch_specs
 from repro.launch import hlo_stats
 from repro.launch.mesh import make_production_mesh, n_workers
 from repro.launch.serve import decode_specs, decode_state_pspecs, serving_config
-from repro.launch.train import batch_pspecs, build_train_step, init_state, state_pspecs
+from repro.launch.train import (
+    COMM_MODES,
+    batch_pspecs,
+    build_train_step,
+    init_state,
+    state_pspecs,
+)
 from repro.models import model as M
 
 tmap = jax.tree_util.tree_map
@@ -244,8 +250,7 @@ def main(argv=None):
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--comm-mode", "--comm_mode", dest="comm_mode",
-                    default="dense",
-                    choices=["dense", "randk_shared", "q8_ring", "ef21"])
+                    default="dense", choices=list(COMM_MODES))
     ap.add_argument("--compressor", default="natural")
     ap.add_argument("--shift-rule", "--shift_rule", dest="shift_rule",
                     default="diana")

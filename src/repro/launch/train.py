@@ -36,7 +36,12 @@ parameter-server algebra lives in ``repro.core``):
               to iterate compression.
 
 CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
-          [--comm_mode dense|randk_shared|q8_ring|ef21] ...
+          [--comm_mode dense|randk_shared|q8_ring|q8_ring_overlap|ef21] ...
+
+``q8_ring_overlap`` routes aggregation through ``comm.AsyncChannel``:
+reverse-layer byte-budget buckets over the Pallas-fused int8 ring, one
+independent collective per bucket so XLA can overlap ring hops with
+encode and backward compute.
 """
 
 from __future__ import annotations
@@ -67,7 +72,7 @@ from repro.optim import make_optimizer
 
 tmap = jax.tree_util.tree_map
 
-COMM_MODES = ("dense", "randk_shared", "q8_ring", "ef21")
+COMM_MODES = ("dense", "randk_shared", "q8_ring", "q8_ring_overlap", "ef21")
 
 
 class TrainState(NamedTuple):
@@ -105,7 +110,8 @@ def build_channel(comp: CompressionConfig, cfg: ModelConfig, mesh, w: int):
     wspecs = None
     if (
         comp.enabled
-        and comp.aggregation_mode in ("q8_ring", "randk_shared")
+        and comp.aggregation_mode in ("q8_ring", "q8_ring_fused",
+                                      "randk_shared")
         and mesh is not None
     ):
         # worker-stacked grad specs so the ring's shard_map keeps the

@@ -9,6 +9,13 @@ import pytest
 from repro.kernels.natural.kernel import shifted_natural_2d
 from repro.kernels.natural.ops import shifted_natural
 from repro.kernels.natural.ref import shifted_natural_ref
+from repro.kernels.q8ring.kernel import (
+    q8_dequant_add_2d,
+    q8_quantize_2d,
+    q8_quantize_chunk_3d,
+)
+from repro.kernels.q8ring.ops import FusedQ8
+from repro.kernels.q8ring.ref import q8_dequant_add_ref, q8_quantize_ref
 from repro.kernels.topk.kernel import block_topk_2d
 from repro.kernels.topk.ops import block_topk
 from repro.kernels.topk.ref import block_topk_ref
@@ -101,6 +108,85 @@ def test_block_topk_contraction():
         xn = np.asarray(x)
         err = np.sum((out - xn) ** 2)
         assert err <= (1 - 0.2) * np.sum(xn**2) + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# fused q8 ring (quantize + chunk-select + dequant-accumulate)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,block", [(8, 8), (64, 8), (64, 64), (96, 32),
+                                        (1, 1)])
+def test_q8_quantize_matches_ref(rows, block):
+    x = jax.random.normal(jax.random.PRNGKey(0), (rows, 128)) * 3.0
+    u = jax.random.uniform(jax.random.PRNGKey(1), (rows, 128))
+    q, s = q8_quantize_2d(x, u, block_rows=block)
+    qr, sr = q8_quantize_ref(x, u, block=block)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+def test_q8_quantize_chunk_select_matches_2d():
+    """The scalar-prefetch chunk variant (the fused ring-hop gather)
+    equals quantizing the sliced chunk — for static AND traced ids."""
+    chunks = jax.random.normal(jax.random.PRNGKey(2), (4, 16, 128))
+    u = jax.random.uniform(jax.random.PRNGKey(3), (16, 128))
+    for cid in range(4):
+        q, s = q8_quantize_chunk_3d(chunks, u, cid, block_rows=8)
+        qr, sr = q8_quantize_2d(chunks[cid], u, block_rows=8)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    qt, st = jax.jit(
+        lambda c, u_, i: q8_quantize_chunk_3d(c, u_, i, block_rows=8)
+    )(chunks, u, jnp.int32(3))
+    qr, sr = q8_quantize_2d(chunks[3], u, block_rows=8)
+    np.testing.assert_array_equal(np.asarray(qt), np.asarray(qr))
+
+
+def test_q8_dequant_add_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(4), (32, 128)) * 2.0
+    u = jax.random.uniform(jax.random.PRNGKey(5), (32, 128))
+    acc = jax.random.normal(jax.random.PRNGKey(6), (32, 128))
+    q, s = q8_quantize_2d(x, u, block_rows=8)
+    out = q8_dequant_add_2d(q, s, acc, block_rows=8)
+    ref = q8_dequant_add_ref(q, s, acc, block=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+    # quantization is tight: |dequant - x| <= one lattice step per tile
+    err = np.abs(np.asarray(out - acc) - np.asarray(x))
+    step = np.repeat(np.asarray(s)[:, 0], 8)[:, None]
+    assert (err <= step + 1e-7).all()
+
+
+def test_q8_quantize_unbiased():
+    """Monte-Carlo unbiasedness of the stochastic rounding (the codec
+    must stay a U(omega) member for the DIANA step-size theory)."""
+    x = jnp.asarray([0.3, -1.7, 5.0, 0.011] * 32, jnp.float32).reshape(1, 128)
+    outs = []
+    for i in range(512):
+        u = jax.random.uniform(jax.random.PRNGKey(i), x.shape)
+        q, s = q8_quantize_2d(x, u, block_rows=1)
+        outs.append(np.asarray(q, np.float32) * np.asarray(s)[0, 0])
+    mean = np.mean(np.stack(outs), axis=0)
+    np.testing.assert_allclose(mean, np.asarray(x), rtol=0.05, atol=0.01)
+
+
+@pytest.mark.parametrize("shape", [(100,), (33, 7), (5, 4, 3, 2), (8192,),
+                                   (), (1,)])
+def test_fused_q8_codec_roundtrip_arbitrary_shapes(shape):
+    """FusedQ8 decode(encode(x)) stays within one blockwise lattice step
+    of x on any shape (incl. scalars) — and the payload is honest int8."""
+    x = jax.random.normal(jax.random.PRNGKey(7), shape, jnp.float32) * 2.0
+    c = FusedQ8()
+    payload, meta = c.encode(jax.random.PRNGKey(8), x)
+    assert payload["q"].dtype == jnp.int8
+    assert not jax.tree_util.tree_leaves(meta)  # meta-free: may ride rings
+    out = c.decode(payload, meta, jax.ShapeDtypeStruct(x.shape, x.dtype))
+    assert out.shape == x.shape and out.dtype == x.dtype
+    if x.size:
+        bound = np.abs(np.asarray(x)).max() / 127.0 + 1e-6
+        assert np.abs(np.asarray(out) - np.asarray(x)).max() <= bound
 
 
 # ---------------------------------------------------------------------------

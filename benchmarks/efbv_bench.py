@@ -1,0 +1,138 @@
+"""EF-BV benchmark (the ``efbv`` comm mode): bits-to-target vs the two
+mechanisms it unifies.
+
+EF-BV (Condat, Li & Richtárik, 2022) is the shift recursion
+``h += eta * C(g - h)`` with estimator ``g_bar = h_bar + nu * m_bar``:
+``eta = nu = 1`` is EF21 (error feedback for BIASED contractive
+operators), and for UNBIASED operators the damped ``eta = 1/(1+omega)``
+is DIANA at its optimal alpha.  This bench measures both regimes on the
+theorem-test ridge instance:
+
+  * biased Top-K: EF-BV at its recommended (eta, nu) vs EF21 — same
+    operator, same tuned-gamma protocol, bits/iters to rel_err <= 1e-6;
+  * unbiased Rand-K: EF-BV (damped) vs DIANA — the variance-reduction
+    side of the unification.
+
+Writes the machine-readable ``BENCH_efbv.json`` next to the repo root
+(uploaded as a CI artifact alongside ``BENCH_overlap.json``) so the
+algorithm-quality trajectory is tracked run over run.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import fmt_bits, print_table, tuned_run
+from repro.core import (
+    DCGDShift,
+    DianaShift,
+    EF21Shift,
+    EFBVShift,
+    RandK,
+    TopK,
+    efbv_params,
+    stepsize_diana,
+    stepsize_ef21,
+    stepsize_efbv,
+)
+from repro.core.simulate import run_dcgd_shift
+from repro.data.problems import make_ridge
+
+TOL = 1e-6
+STEPS = 20_000
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(REPO, "BENCH_efbv.json")
+
+
+def _finite(x: float):
+    """inf -> None so the artifact stays STRICT JSON (json.dump would
+    happily emit a bare ``Infinity`` token, which RFC 8259 parsers —
+    jq, JSON.parse — reject); None means 'did not reach tol'."""
+    x = float(x)
+    return x if x == x and abs(x) != float("inf") else None
+
+
+def main(steps: int = STEPS):
+    # noise=10: the non-interpolating regime (same fixture as the
+    # theorem tests) — shift quality decides the reachable tolerance
+    prob = make_ridge(m=100, d=80, n_workers=10, seed=0, noise=10.0)
+    results = {}
+    rows = []
+
+    # -- biased route: Top-K, EF-BV vs EF21 -------------------------------
+    for qf in (0.1, 0.25):
+        c = TopK(qf)
+        delta = c.delta(prob.d)
+        g_ef = stepsize_ef21(prob.L, prob.L_max, delta)
+        bits_e, it_e, _ = tuned_run(
+            lambda m: run_dcgd_shift(
+                prob, DCGDShift(q=c, rule=EF21Shift()), g_ef * m, steps,
+                name="ef21"),
+            multipliers=(1, 4, 16, 64), tol=TOL,
+        )
+        eta, nu = efbv_params(delta=delta)
+        g_bv = stepsize_efbv(prob.L, prob.L_max, delta=delta, eta=eta, nu=nu)
+        bits_b, it_b, _ = tuned_run(
+            lambda m: run_dcgd_shift(
+                prob, DCGDShift(q=c, rule=EFBVShift(eta=eta, nu=nu)),
+                g_bv * m, steps, name="efbv"),
+            multipliers=(1, 4, 16, 64), tol=TOL,
+        )
+        key = f"topk_q{qf}"
+        results[key] = {
+            "efbv": {"bits": _finite(bits_b), "iters": _finite(it_b),
+                     "eta": eta, "nu": nu},
+            "ef21": {"bits": _finite(bits_e), "iters": _finite(it_e)},
+        }
+        rows.append((f"top-k q={qf} (biased)",
+                     f"{it_b:.0f}", fmt_bits(bits_b),
+                     f"{it_e:.0f}", fmt_bits(bits_e), "ef21"))
+
+    # -- unbiased route: Rand-K, damped EF-BV vs DIANA --------------------
+    for qf in (0.1, 0.25):
+        u = RandK(qf)
+        omega = u.omega(prob.d)
+        eta, nu = efbv_params(omega=omega)
+        g_bv = stepsize_efbv(prob.L, prob.L_max, omega=omega, eta=eta, nu=nu)
+        bits_b, it_b, _ = tuned_run(
+            lambda m: run_dcgd_shift(
+                prob, DCGDShift(q=u, rule=EFBVShift(eta=eta, nu=nu)),
+                g_bv * m, steps, name="efbv"),
+            multipliers=(1, 4, 16, 64), tol=TOL,
+        )
+        alpha, g_di = stepsize_diana(prob.L_max, omega, 0.0, prob.n_workers)
+        # same tuning grid as the EF-BV side — the comparison must
+        # measure the algorithm, not the protocol
+        bits_d, it_d, _ = tuned_run(
+            lambda m: run_dcgd_shift(
+                prob, DCGDShift(q=u, rule=DianaShift(alpha=alpha)),
+                g_di * m, steps, name="diana"),
+            multipliers=(1, 4, 16, 64), tol=TOL,
+        )
+        key = f"randk_q{qf}"
+        results[key] = {
+            "efbv": {"bits": _finite(bits_b), "iters": _finite(it_b),
+                     "eta": eta, "nu": nu},
+            "diana": {"bits": _finite(bits_d), "iters": _finite(it_d)},
+        }
+        rows.append((f"rand-k q={qf} (unbiased)",
+                     f"{it_b:.0f}", fmt_bits(bits_b),
+                     f"{it_d:.0f}", fmt_bits(bits_d), "diana"))
+
+    with open(OUT_JSON, "w") as f:
+        # allow_nan=False: fail loudly here rather than shipping a
+        # non-JSON artifact if a non-finite value ever slips through
+        json.dump(results, f, indent=2, sort_keys=True, allow_nan=False)
+    print_table(
+        "EF-BV vs the mechanisms it unifies (bits/iters to rel_err <= 1e-6)",
+        ["compressor", "EF-BV iters", "EF-BV bits",
+         "baseline iters", "baseline bits", "baseline"],
+        rows,
+    )
+    print(f"wrote {OUT_JSON}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -21,12 +21,13 @@ def main(argv=None):
                     help="tiny-config run of every suite (CI smoke)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig2,fig4,table1,"
-                         "gdci,ef21,kernels,overlap,roofline")
+                         "gdci,ef21,efbv,kernels,overlap,roofline")
     args = ap.parse_args(argv)
     scale = 50 if args.smoke else (4 if args.fast else 1)
 
     from benchmarks import (
         ef21_bench,
+        efbv_bench,
         fig1_ridge,
         fig2_stability,
         fig4_logreg,
@@ -44,6 +45,7 @@ def main(argv=None):
         "table1": lambda: table1_rates.main(steps=table1_rates.STEPS // scale),
         "gdci": lambda: gdci_bench.main(steps=gdci_bench.STEPS // scale),
         "ef21": lambda: ef21_bench.main(steps=ef21_bench.STEPS // scale),
+        "efbv": lambda: efbv_bench.main(steps=efbv_bench.STEPS // scale),
         "kernels": lambda: kernels_bench.main(smoke=args.smoke),
         "overlap": lambda: overlap_bench.main(
             steps=overlap_bench.STEPS // scale, smoke=args.smoke),

@@ -34,10 +34,16 @@ Three interchangeable implementations:
 
 ``make_channel`` builds the right one from a ``CompressionConfig`` (or a
 comm-mode string), replacing the string dispatch that used to live in
-``launch/train.py``.  The ``ef21`` comm mode aggregates densely — the
-messages themselves are the contractive-compressed EF21 increments —
-and ``q8_ring_overlap`` selects the AsyncChannel over the Pallas-fused
+``launch/train.py``.  The ``ef21``/``efbv`` comm modes aggregate
+densely — the messages themselves are the contractive-compressed
+error-feedback increments — and the overlap modes (``q8_ring_overlap``,
+``efbv_overlap``) select the AsyncChannel over the Pallas-fused
 ``q8_ring_fused`` aggregation format.
+
+``Channel.shift_round`` is the engine entry: one shift-rule round
+(message -> aux -> reduce -> apply) scheduled by the channel.  All
+three channels run the SAME rule algebra (``repro.core.shift_rules``);
+the AsyncChannel merely re-schedules it bucket by bucket.
 """
 
 from __future__ import annotations
@@ -48,19 +54,25 @@ from typing import TYPE_CHECKING, Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.comm.wire import encode_decode_workers
+from repro.comm.wire import encode_decode_workers, leaf_key
 
 if TYPE_CHECKING:  # import cycle: core.shift_rules routes through Channel
     from repro.core.compressors import Compressor
 
 tmap = jax.tree_util.tree_map
 
-#: aggregation formats a MeshChannel supports (ef21/disabled map to dense)
+#: aggregation formats a MeshChannel supports (ef21/efbv/disabled map to
+#: dense)
 AGGREGATION_MODES = ("dense", "randk_shared", "q8_ring", "q8_ring_fused")
 
 #: every comm-mode string make_channel accepts (config/CLI surface):
 #: aggregation formats plus the channel-selecting aliases
-CHANNEL_MODES = AGGREGATION_MODES + ("sim", "ef21", "q8_ring_overlap")
+CHANNEL_MODES = AGGREGATION_MODES + (
+    "sim", "ef21", "efbv", "q8_ring_overlap", "efbv_overlap"
+)
+
+#: comm modes served by the bucketed overlapped AsyncChannel
+OVERLAP_MODES = ("q8_ring_overlap", "efbv_overlap")
 
 
 class Channel:
@@ -80,7 +92,7 @@ class Channel:
         out = []
         bits = jnp.zeros((), jnp.float32)
         for i, leaf in enumerate(leaves):
-            lk = jax.random.fold_in(key, i)
+            lk = leaf_key(key, i)
             payload, decoded = encode_decode_workers(q, lk, leaf)
             bits = bits + q.wire_bits(payload)
             out.append(decoded)
@@ -95,13 +107,31 @@ class Channel:
         m, bits = self.uplink(q, k1, wtree)
         return m, self.reduce_mean(k2, m), bits
 
+    def shift_round(self, rule, q: Compressor, key: jax.Array,
+                    wgrads, h, h_bar):
+        """One shift-rule round, scheduled by this channel.
+
+        The DEFAULT schedule: the rule's whole-tree message, its
+        tree-level aux draw, ONE aggregation of the message tree, then
+        the rule's ``apply``.  Subclasses that pipeline (the bucketed
+        ``AsyncChannel``) override the SCHEDULE only — the per-leaf key
+        folding (global tree positions) keeps any re-schedule bit-exact
+        with this one.  Returns ``(g_bar, h_new, h_bar_new, bits)``.
+        """
+        k_msg, k_aux, k_agg = jax.random.split(key, 3)
+        m, bits = rule.message(q, k_msg, wgrads, h)
+        aux, extra = rule.aux(k_aux, wgrads, h)
+        m_bar = self.reduce_mean(k_agg, m)
+        g_bar, h_new, hb_new = rule.apply(wgrads, m, m_bar, h, h_bar, aux)
+        return g_bar, h_new, hb_new, bits + extra
+
     def broadcast(self, q: Compressor, key: jax.Array, tree) -> Tuple[Any, jax.Array]:
         """Downlink (model-broadcast): one encoded message per leaf."""
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         out = []
         bits = jnp.zeros((), jnp.float32)
         for i, leaf in enumerate(leaves):
-            lk = jax.random.fold_in(key, i)
+            lk = leaf_key(key, i)
             payload, meta = q.encode(lk, leaf)
             bits = bits + q.wire_bits(payload)
             out.append(
@@ -152,15 +182,15 @@ class MeshChannel(Channel):
 
 def aggregation_mode_of(mode_or_cfg) -> str:
     """Normalize a comm-mode string / CompressionConfig to an aggregation
-    format: disabled configs and the ``ef21`` mode aggregate densely
-    (EF21's wire savings are in the per-worker contractive messages);
-    ``q8_ring_overlap`` aggregates in the Pallas-fused ``q8_ring_fused``
-    wire format."""
+    format: disabled configs and the ``ef21``/``efbv`` modes aggregate
+    densely (their wire savings are in the per-worker contractive
+    messages); the overlap modes aggregate in the Pallas-fused
+    ``q8_ring_fused`` wire format."""
     if hasattr(mode_or_cfg, "aggregation_mode"):  # CompressionConfig
         return mode_or_cfg.aggregation_mode
-    if mode_or_cfg == "ef21":
+    if mode_or_cfg in ("ef21", "efbv"):
         return "dense"
-    if mode_or_cfg == "q8_ring_overlap":
+    if mode_or_cfg in OVERLAP_MODES:
         return "q8_ring_fused"
     return mode_or_cfg
 
@@ -169,13 +199,14 @@ def make_channel(mode_or_cfg="dense", mesh=None, *, randk_q: float = 0.05,
                  wspecs=None, bucket_bytes: Optional[int] = None) -> Channel:
     """Build a Channel from a comm-mode string or a CompressionConfig.
 
-    ``"sim"`` gives the parameter-server SimChannel; ``q8_ring_overlap``
-    the bucketed AsyncChannel over the fused q8 ring (``bucket_bytes``
-    sets its per-bucket budget in uncompressed per-worker message
-    bytes, and is rejected for every other mode); everything else a
-    MeshChannel in the corresponding aggregation format.  Unknown modes
-    raise, naming every accepted mode — a typo'd mode must fail HERE,
-    not as a confusing shape/key error deep in a collective.
+    ``"sim"`` gives the parameter-server SimChannel; the overlap modes
+    (``q8_ring_overlap``, ``efbv_overlap``) the bucketed AsyncChannel
+    over the fused q8 ring (``bucket_bytes`` sets its per-bucket budget
+    in uncompressed per-worker message bytes, and is rejected for every
+    other mode); everything else a MeshChannel in the corresponding
+    aggregation format.  Unknown modes raise, naming every accepted
+    mode — a typo'd mode must fail HERE, not as a confusing shape/key
+    error deep in a collective.
     """
     comm_mode = getattr(mode_or_cfg, "comm_mode", mode_or_cfg)
     if isinstance(comm_mode, str) and comm_mode not in CHANNEL_MODES:
@@ -183,10 +214,11 @@ def make_channel(mode_or_cfg="dense", mesh=None, *, randk_q: float = 0.05,
             f"unknown comm mode {comm_mode!r}; have channel modes "
             f"{CHANNEL_MODES} (aggregation formats: {AGGREGATION_MODES})"
         )
-    if bucket_bytes is not None and comm_mode != "q8_ring_overlap":
+    if bucket_bytes is not None and comm_mode not in OVERLAP_MODES:
         raise ValueError(
-            f"bucket_bytes only applies to the 'q8_ring_overlap' channel, "
-            f"not {comm_mode!r} (it would be silently ignored)"
+            f"bucket_bytes only applies to the overlap channels "
+            f"{OVERLAP_MODES}, not {comm_mode!r} (it would be silently "
+            f"ignored)"
         )
     if comm_mode == "sim":  # uniform: string or config comm_mode
         return SimChannel()
@@ -195,7 +227,7 @@ def make_channel(mode_or_cfg="dense", mesh=None, *, randk_q: float = 0.05,
         if bucket_bytes is None:
             bucket_bytes = getattr(mode_or_cfg, "overlap_bucket_bytes", None)
     mode = aggregation_mode_of(mode_or_cfg)
-    if comm_mode == "q8_ring_overlap":
+    if comm_mode in OVERLAP_MODES:
         from repro.comm.overlap import DEFAULT_BUCKET_BYTES, AsyncChannel
 
         return AsyncChannel(
@@ -220,13 +252,15 @@ def collective_payload_scale(cfg, d_nominal: int = 1_000_000) -> dict:
     messages, so the all-reduce is full-width in HLO while the wire
     carries the contractive codec's payload — scale by that codec's
     wire fraction, derived structurally (``bits`` shim), not from an
-    analytic formula.  Apply it to the GRADIENT-MESSAGE share only
+    analytic formula.  The same holds for ``efbv`` (EF-BV shares EF21's
+    dense aggregation of decoded messages).  Apply it to the
+    GRADIENT-MESSAGE share only
     (``hlo_cost.apply_gradient_payload_model``): activation all-reduces
     under model parallelism are genuine dense traffic.
     """
     if not getattr(cfg, "enabled", True):
         return {}
-    if getattr(cfg, "comm_mode", "dense") == "ef21":
+    if getattr(cfg, "comm_mode", "dense") in ("ef21", "efbv"):
         from repro.core.compressors import make_compressor
 
         q = make_compressor(cfg.compressor, **dict(cfg.compressor_kwargs))

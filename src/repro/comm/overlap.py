@@ -43,7 +43,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.comm.channel import AGGREGATION_MODES, Channel
-from repro.comm.wire import encode_decode_workers
+from repro.comm.wire import encode_decode_workers, leaf_key
 
 tmap = jax.tree_util.tree_map
 
@@ -180,7 +180,7 @@ class AsyncChannel(Channel):
         decoded, bits = [], []
         for i in bucket.indices:
             payload, dec = encode_decode_workers(
-                q, jax.random.fold_in(key, i), leaves[i]
+                q, leaf_key(key, i), leaves[i]
             )
             decoded.append(dec)
             bits.append(q.wire_bits(payload))
@@ -225,6 +225,47 @@ class AsyncChannel(Channel):
         """The synchronous drain: start everything, finish everything —
         bit-exact with ``MeshChannel(mode=...)`` (the contract test)."""
         return self.finish(self.reduce_start(key, wtree))
+
+    def shift_round(self, rule, q, key, wgrads, h, h_bar):
+        """The overlapped SHIFT-RULE round: bucket i's message is formed
+        (``rule.message_leaf`` with keys folded from GLOBAL leaf
+        positions) and its reduction issued BEFORE bucket i+1's message
+        — the same interleave as ``push_mean``, but for any rule of the
+        phased protocol, so shifted modes (DIANA, EF21, EF-BV, ...) ride
+        the overlap runtime instead of being silently serialized.
+
+        Scheduling only: drained synchronously this is bit-exact with
+        the default ``Channel.shift_round`` over this channel's
+        ``reduce_mean`` (the engine contract test), because both fold
+        the same global leaf positions into the message and reduction
+        keys.  ``rule.apply`` — the math — is untouched.
+        """
+        k_msg, k_aux, k_agg = jax.random.split(key, 3)
+        g_leaves, treedef = jax.tree_util.tree_flatten(wgrads)
+        n = len(g_leaves)
+        h_leaves = [None] * n if h is None else jax.tree_util.tree_leaves(h)
+        plan = plan_buckets(wgrads, self.bucket_bytes)
+        spec_leaves = self._spec_leaves(wgrads)
+        msgs: list = [None] * n
+        reduced: list = [None] * n
+        bits = jnp.zeros((), jnp.float32)
+
+        for b in plan.buckets:
+            for i in b.indices:
+                m, bl = rule.message_leaf(
+                    q, leaf_key(k_msg, i), g_leaves[i], h_leaves[i]
+                )
+                msgs[i] = m
+                bits = bits + bl
+            hd = self._reduce_bucket(k_agg, msgs, b, spec_leaves)
+            for j, i in enumerate(hd.bucket.indices):
+                reduced[i] = hd.values[j]
+
+        m_tree = jax.tree_util.tree_unflatten(treedef, msgs)
+        m_bar = jax.tree_util.tree_unflatten(treedef, reduced)
+        aux, extra = rule.aux(k_aux, wgrads, h)
+        g_bar, h_new, hb_new = rule.apply(wgrads, m_tree, m_bar, h, h_bar, aux)
+        return g_bar, h_new, hb_new, bits + extra
 
     def push_mean(self, q, key, wtree):
         """The overlapped round: each bucket's reduction is issued right

@@ -14,6 +14,20 @@ import jax
 import jax.numpy as jnp
 
 
+def leaf_key(key: jax.Array, leaf_index: int) -> jax.Array:
+    """THE per-leaf key derivation of the whole wire layer.
+
+    Every consumer — ``Channel.uplink``/``broadcast``,
+    ``ShiftRule.message``, the bucketed loops in ``comm.overlap``, and
+    the codec-driven collectives — folds the leaf's GLOBAL tree
+    position through this one function.  That shared derivation is what
+    makes any re-schedule (bucket partition, interleaved
+    message/reduce) bit-exact with the whole-tree round; change it here
+    or nowhere.
+    """
+    return jax.random.fold_in(key, leaf_index)
+
+
 def worker_keys(codec, key: jax.Array, w: int) -> jax.Array:
     """Per-worker encode keys for ONE leaf, stacked (w, *key.shape).
 

@@ -126,29 +126,38 @@ class CompressionConfig:
 
     ``comm_mode`` selects the Channel (see ``repro.comm``): ``dense`` /
     ``randk_shared`` / ``q8_ring`` pick the uplink aggregation wire
-    format; ``ef21`` selects the error-feedback mode (contractive
-    messages integrated into the shifts, aggregated densely) and
-    overrides ``shift_rule``; ``q8_ring_overlap`` selects the bucketed
-    overlapped AsyncChannel over the Pallas-fused q8 ring
-    (``overlap_bucket_bytes`` sets its per-bucket budget, in
-    uncompressed per-worker message bytes).
+    format; ``ef21`` / ``efbv`` select the error-feedback modes
+    (contractive messages integrated into the shifts, aggregated
+    densely) and override ``shift_rule``; ``q8_ring_overlap`` /
+    ``efbv_overlap`` select the bucketed overlapped AsyncChannel over
+    the Pallas-fused q8 ring (``overlap_bucket_bytes`` sets its
+    per-bucket budget, in uncompressed per-worker message bytes).
     """
     enabled: bool = True
     compressor: str = "natural"    # see core.compressors.make_compressor
     compressor_kwargs: tuple = ()  # tuple of (key, value) pairs (hashable)
-    shift_rule: str = "diana"      # fixed | diana | rand_diana | vr_gdci | ef21
+    shift_rule: str = "diana"      # fixed | diana | rand_diana | vr_gdci
+                                   # | ef21 | efbv
     shift_alpha: float = 0.125     # DIANA / VR-GDCI alpha
     shift_p: float = 0.05          # Rand-DIANA refresh probability
     gdci_eta: float = 0.5          # VR-GDCI model-mixing rate
+    efbv_eta: float = 1.0          # EF-BV shift integration rate (lambda);
+                                   # 1.0 with nu=1.0 is exactly EF21
+    efbv_nu: float = 1.0           # EF-BV estimator mixing
     comm_mode: str = "dense"       # dense | q8_ring | randk_shared | ef21
-                                   # | q8_ring_overlap
+                                   # | efbv | q8_ring_overlap | efbv_overlap
     randk_q: float = 0.05          # keep-fraction for randk_shared
     overlap_bucket_bytes: int = 4 << 20  # AsyncChannel bucket budget
 
     @property
     def effective_shift_rule(self) -> str:
-        """The update rule actually run (``ef21`` comm mode implies it)."""
-        return "ef21" if self.comm_mode == "ef21" else self.shift_rule
+        """The update rule actually run (the ``ef21``/``efbv`` comm
+        modes imply their rule)."""
+        if self.comm_mode == "ef21":
+            return "ef21"
+        if self.comm_mode in ("efbv", "efbv_overlap"):
+            return "efbv"
+        return self.shift_rule
 
     @property
     def aggregation_mode(self) -> str:
@@ -161,21 +170,42 @@ class CompressionConfig:
 
         return aggregation_mode_of(self.comm_mode)
 
-    def make(self):
+    def make(self, learning_rate: Optional[float] = None):
+        """Build the ``(compressor, rule)`` pair this config describes.
+
+        The rule is the ONE engine object every consumer runs
+        (reference simulator, production trainer, overlap runtime).
+        ``vr_gdci`` — Algorithm 2, compressed iterates — needs the
+        outer ``learning_rate`` as its gradient-mapping gamma, so the
+        trainer passes it; the others ignore it.  Unknown rules fail
+        here, naming the accepted ones.
+        """
         from repro.core import make_compressor, make_shift_rule
         q = make_compressor(self.compressor, **dict(self.compressor_kwargs))
         rule_name = self.effective_shift_rule
-        if rule_name in ("fixed", "dcgd"):
-            rule = make_shift_rule("fixed")
-        elif rule_name == "diana":
-            rule = make_shift_rule("diana", alpha=self.shift_alpha)
-        elif rule_name == "rand_diana":
-            rule = make_shift_rule("rand_diana", p=self.shift_p)
-        elif rule_name == "ef21":
-            rule = make_shift_rule("ef21")
-        else:
-            raise ValueError(rule_name)
-        return q, rule
+        if rule_name == "vr_gdci":
+            from repro.core.iterate_comp import VRGDCI
+            if learning_rate is None:
+                raise ValueError(
+                    "shift_rule 'vr_gdci' needs learning_rate (its "
+                    "gradient-mapping gamma); pass make(learning_rate=...)"
+                )
+            return q, VRGDCI(q=q, gamma=learning_rate, eta=self.gdci_eta,
+                             alpha=self.shift_alpha)
+        rule_kwargs = {
+            "fixed": {},
+            "dcgd": {},
+            "diana": dict(alpha=self.shift_alpha),
+            "rand_diana": dict(p=self.shift_p),
+            "ef21": {},
+            "efbv": dict(eta=self.efbv_eta, nu=self.efbv_nu),
+        }
+        if rule_name not in rule_kwargs:
+            raise ValueError(
+                f"unknown shift rule {rule_name!r}; have trainer rules "
+                f"{tuple(sorted(rule_kwargs)) + ('vr_gdci',)}"
+            )
+        return q, make_shift_rule(rule_name, **rule_kwargs[rule_name])
 
 
 @dataclass(frozen=True)

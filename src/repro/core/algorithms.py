@@ -23,11 +23,13 @@ import jax.numpy as jnp
 
 from repro.comm.channel import Channel
 from repro.core.compressors import Compressor, Identity
-from repro.core.shift_rules import FixedShift, ShiftRule, stack_like
+from repro.core.shift_rules import FixedShift, ShiftRule
 
 
 class DCGDState(NamedTuple):
     h: Any              # shift state (rule-specific pytree, worker-stacked)
+    h_bar: Any          # master aggregated shift (no worker axis; tracked
+                        # incrementally — None for stateless/oracle rules)
     key: jax.Array      # PRNG state for the compressors
     step: jax.Array     # iteration counter
     bits: jax.Array     # cumulative uplink bits (f32 scalar)
@@ -38,10 +40,16 @@ class DCGDShift:
     """Distributed Compressed Gradient Descent with Shift (Alg. 1).
 
     ``q``       — per-worker compressor Q_i (unbiased U(omega) for the
-                  DIANA family; contractive B(delta) for EF21)
-    ``rule``    — the shift update mechanism (Section 3)
+                  DIANA family; contractive B(delta) for EF21/EF-BV)
+    ``rule``    — the shift update mechanism (Section 3), a phased
+                  ``ShiftRule`` (message/apply engine)
     ``channel`` — the message transport; ``None`` means the vmapped
                   parameter-server ``SimChannel`` (the paper's setting)
+
+    This is the REFERENCE consumer of the shift-rule engine: the
+    production ``launch/train.py`` step runs the *same*
+    ``rule.round(...)`` over the same channel abstraction, which the
+    cross-layer bit-exactness tests pin.
     """
 
     q: Compressor = field(default_factory=Identity)
@@ -51,10 +59,13 @@ class DCGDShift:
     def init(self, wgrads_like, *, seed: int = 0, star: Any = None) -> DCGDState:
         if star is not None:
             h = self.rule.init_with_star(star)  # type: ignore[attr-defined]
+            h_bar = None
         else:
             h = self.rule.init(wgrads_like)
+            h_bar = self.rule.init_bar(wgrads_like)
         return DCGDState(
             h=h,
+            h_bar=h_bar,
             key=jax.random.PRNGKey(seed),
             step=jnp.zeros((), jnp.int32),
             bits=jnp.zeros((), jnp.float32),
@@ -67,11 +78,12 @@ class DCGDShift:
         unbiased estimator of the full gradient (no worker axis).
         """
         key, sub = jax.random.split(state.key)
-        g_bar, h_new, bits = self.rule.step(
-            self.q, sub, wgrads, state.h, channel=self.channel
+        g_bar, h_new, hb_new, bits = self.rule.round(
+            self.q, sub, wgrads, state.h, state.h_bar, channel=self.channel
         )
         return g_bar, DCGDState(
-            h=h_new, key=key, step=state.step + 1, bits=state.bits + bits
+            h=h_new, h_bar=hb_new, key=key, step=state.step + 1,
+            bits=state.bits + bits,
         )
 
 
@@ -119,8 +131,66 @@ def stepsize_ef21(L, L_max, delta):
     delta-contractive C, theta = 1 - sqrt(1-delta), beta = (1-delta)/theta,
     gamma <= 1 / (L + L_tilde sqrt(beta/theta)); we bound L_tilde =
     sqrt(mean_i L_i^2) by L_max.  delta = 1 (Identity) recovers 1/L."""
-    theta = 1.0 - math.sqrt(max(1.0 - delta, 0.0))
+    return stepsize_efbv(L, L_max, delta=delta)
+
+
+def _efbv_contraction(eta: float, delta: float, omega) -> float:
+    """Per-step contraction r^2 of the EF-BV shift error e = grad - h
+    under h <- h + eta * C(e): the best of the available certificates.
+
+      contractive (C in B(delta)):
+          ||e - eta C(e)|| <= ((1-eta) + eta sqrt(1-delta)) ||e||
+          (triangle inequality on (1-eta) e + eta (e - C(e)))
+      unbiased (C in U(omega), pass ``omega``; None = not unbiased):
+          E||e - eta C(e)||^2 = (1 - 2 eta + eta^2 (1+omega)) ||e||^2
+          (exact — the cross term uses E C(e) = e)
+    """
+    r2 = ((1.0 - eta) + eta * math.sqrt(max(1.0 - delta, 0.0))) ** 2
+    if omega is not None:
+        r2 = min(r2, 1.0 - 2.0 * eta + eta * eta * (1.0 + omega))
+    return max(r2, 0.0)
+
+
+def stepsize_efbv(L, L_max, delta: float = 0.0, omega=None,
+                  eta: float = 1.0, nu: float = 1.0):
+    """EF-BV (Condat, Li & Richtárik, 2022) step size, generalizing
+    ``stepsize_ef21`` to the damped shift recursion h += eta * C(e).
+
+    With r^2 the shift-error contraction (``_efbv_contraction``),
+    theta = 1 - r and beta = r^2 / theta, the EF21-shaped bound is
+
+        gamma <= 1 / (L + nu * L_max * sqrt(beta / theta)).
+
+    It reduces EXACTLY to ``stepsize_ef21`` at eta = nu = 1 with a
+    delta-contractive C, and for an unbiased C at the optimal
+    eta = 1/(1+omega) it lands in DIANA's stepsize regime.  Returns 0
+    when no certificate contracts (r >= 1): no safe step exists —
+    e.g. eta = 1 with a non-contractive unbiased operator, the exact
+    failure mode EF-BV's damping is for.
+    """
+    r2 = _efbv_contraction(eta, delta, omega)
+    theta = 1.0 - math.sqrt(r2)
     if theta <= 0.0:
-        return 0.0  # delta == 0: the compressor makes no progress
-    beta = (1.0 - delta) / theta
-    return 1.0 / (L + L_max * math.sqrt(beta / theta))
+        return 0.0  # the shift recursion does not contract
+    beta = r2 / theta
+    return 1.0 / (L + nu * L_max * math.sqrt(beta / theta))
+
+
+def efbv_params(delta: float = 0.0, omega=None):
+    """Recommended EF-BV ``(eta, nu)`` for a compressor with contraction
+    ``delta`` (B-class) and/or unbiased variance ``omega`` (U-class;
+    ``None`` = not unbiased).
+
+    The unbiased certificate is exactly minimized at eta = 1/(1+omega)
+    (DIANA's optimal alpha); the contractive certificate is decreasing
+    in eta on (0, 1], so its optimum is eta = 1 (EF21).  The better of
+    the two is chosen by comparing contractions.  nu = 1 keeps the
+    estimator's correction unscaled — unbiased when C is, and the EF21
+    choice when C is contractive.
+    """
+    eta_c = 1.0
+    best = (_efbv_contraction(eta_c, delta, None), eta_c)
+    if omega is not None:
+        eta_u = 1.0 / (1.0 + omega)
+        best = min(best, (_efbv_contraction(eta_u, delta, omega), eta_u))
+    return best[1], 1.0

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.comm.channel import Channel
 from repro.core.compressors import Compressor, Identity
-from repro.core.shift_rules import _chan, _tree_mean_w
+from repro.core.shift_rules import _chan
 
 
 class GDCIState(NamedTuple):
@@ -70,6 +70,9 @@ class GDCI:
 
 class VRGDCIState(NamedTuple):
     h: Any              # per-worker shifts on iterates, W-stacked
+    h_bar: Any          # master aggregated shift (tracked incrementally:
+                        # h_bar += alpha * delta_bar, so no dense mean of
+                        # the W-stacked h ever materializes)
     key: jax.Array
     step: jax.Array
     bits: jax.Array
@@ -86,6 +89,12 @@ class VRGDCI:
     Theorem 6 (improved): linear to the *exact* optimum at rate
     min{alpha/2, eta}, complexity max{2(omega+1), (1+6w/n) kappa} — same
     order as DIANA, improving Chraibi et al. (2019).
+
+    Like the gradient-direction ``ShiftRule``s, the algebra is phased
+    (``message`` / ``apply`` / ``round``) and the SAME object drives the
+    reference simulator and the production trainer — ``launch/train.py``
+    plumbs ``TrainState`` fields through ``round`` and contains no
+    iterate-compression math of its own.
     """
 
     q: Compressor = field(default_factory=Identity)
@@ -94,36 +103,84 @@ class VRGDCI:
     alpha: float = 0.5
     channel: Optional[Channel] = None
 
-    def init(self, params, n_workers: int, *, seed: int = 0) -> VRGDCIState:
+    # -- trainer-facing state protocol (mirrors ShiftRule) ----------------
+
+    stateful = True
+
+    def init(self, wgrads_like):
+        """Worker-stacked iterate shifts (arrays or ShapeDtypeStructs)."""
+        return jax.tree_util.tree_map(
+            lambda a: jnp.zeros(a.shape, a.dtype), wgrads_like
+        )
+
+    def init_bar(self, wgrads_like):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.zeros(a.shape[1:], a.dtype), wgrads_like
+        )
+
+    # -- phases -----------------------------------------------------------
+
+    def message(self, key, params, wgrads, h, channel=None):
+        """The wire message: per-worker compressed iterate proposals
+        delta_i = Q(x - gamma grad_i - h_i)."""
+        ch = _chan(channel if channel is not None else self.channel)
+        target = jax.tree_util.tree_map(
+            lambda x, g, s: (x[None] - self.gamma * g.astype(x.dtype)) - s,
+            params, wgrads, h,
+        )
+        return ch.uplink(self.q, key, target)
+
+    def apply(self, params, delta, delta_bar, h, h_bar):
+        """Iterate + shift update from the aggregated proposal.  The
+        model mix runs in f32 and is cast back to the param dtype (a
+        no-op in the f32 simulator, required for bf16 training)."""
+        h_new = jax.tree_util.tree_map(
+            lambda s, d: s + self.alpha * d, h, delta
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda x, db, hb: ((1.0 - self.eta) * x.astype(jnp.float32)
+                               + self.eta * (db + hb).astype(jnp.float32)
+                               ).astype(x.dtype),
+            params, delta_bar, h_bar,
+        )
+        h_bar_new = jax.tree_util.tree_map(
+            lambda hb, db: hb + self.alpha * db, h_bar, delta_bar
+        )
+        return new_params, h_new, h_bar_new
+
+    def round(self, key, params, wgrads, h, h_bar, channel=None):
+        """One full round: ``(new_params, h_new, h_bar_new, bits)``."""
+        ch = _chan(channel if channel is not None else self.channel)
+        k_msg, k_agg = jax.random.split(key)
+        delta, bits = self.message(k_msg, params, wgrads, h, ch)
+        delta_bar = ch.reduce_mean(k_agg, delta)
+        new_params, h_new, hb_new = self.apply(
+            params, delta, delta_bar, h, h_bar
+        )
+        return new_params, h_new, hb_new, bits
+
+    # -- simulator driver --------------------------------------------------
+
+    def init_state(self, params, n_workers: int, *, seed: int = 0) -> VRGDCIState:
         h = jax.tree_util.tree_map(
             lambda x: jnp.zeros((n_workers, *x.shape), x.dtype), params
         )
         return VRGDCIState(
             h=h,
+            h_bar=jax.tree_util.tree_map(jnp.zeros_like, params),
             key=jax.random.PRNGKey(seed),
             step=jnp.zeros((), jnp.int32),
             bits=jnp.zeros((), jnp.float32),
         )
 
     def update(self, params, state: VRGDCIState, wgrads):
-        ch = _chan(self.channel)
-        key, sub, ka = jax.random.split(state.key, 3)
-        target = jax.tree_util.tree_map(
-            lambda x, g, h: x[None] - self.gamma * g - h,
-            params, wgrads, state.h,
-        )
-        delta, bits = ch.uplink(self.q, sub, target)
-        h_new = jax.tree_util.tree_map(
-            lambda h, d: h + self.alpha * d, state.h, delta
-        )
-        h_bar = _tree_mean_w(state.h)
-        delta_bar = ch.reduce_mean(ka, delta)
-        new_params = jax.tree_util.tree_map(
-            lambda x, db, hb: (1.0 - self.eta) * x + self.eta * (db + hb),
-            params, delta_bar, h_bar,
+        key, sub = jax.random.split(state.key)
+        new_params, h_new, hb_new, bits = self.round(
+            sub, params, wgrads, state.h, state.h_bar, self.channel
         )
         return new_params, VRGDCIState(
-            h=h_new, key=key, step=state.step + 1, bits=state.bits + bits
+            h=h_new, h_bar=hb_new, key=key, step=state.step + 1,
+            bits=state.bits + bits,
         )
 
 

@@ -1,33 +1,67 @@
-"""Shift update rules — Section 3 of the paper.
+"""Shift update rules — Section 3 of the paper, as ONE phased engine.
 
 A *shift rule* owns everything the meta-algorithm DCGD-SHIFT leaves open
 (the coloured line of Alg. 1): how the per-worker shifts ``h_i`` start,
-how the worker messages are formed from the shifted gradients, and how
-``h_i^{k+1}`` is produced.  Rules are frozen dataclasses (static under
-jit); their mutable state is the stacked shift pytree ``h`` with leading
-worker axis ``W`` plus a bits counter.
+what message goes on the wire, and how ``h_i^{k+1}`` is produced.  Rules
+are frozen dataclasses (static under jit); their mutable state is the
+stacked shift pytree ``h`` (leading worker axis ``W``) plus the master's
+aggregated shift ``h_bar`` — tracked INCREMENTALLY, so no uncompressed
+collective over ``h`` ever materializes (Alg. 1 line 14, as the paper
+notes for DIANA: ``h^{k+1} = h^k + alpha * m_bar^k``).  Over LOSSY
+aggregation formats (the q8 rings, shared Rand-K) the incremental
+``h_bar`` carries the per-step aggregation noise as a zero-mean random
+walk relative to ``mean_i h_i`` — inherent to the tracking, unbiased,
+and absent on dense/sim aggregation; see the ARCHITECTURE.md
+"Algorithm layer" footnote.
 
-All communication goes through a ``repro.comm.Channel``: the rule calls
-``channel.uplink`` (codec encode -> wire -> decode, with STRUCTURAL bits
-accounting from the actual payloads) and ``channel.reduce_mean`` (the
-master-side aggregation in the channel's wire format).  The default
-``SimChannel`` is the paper's vmapped parameter server; the production
-``MeshChannel`` swaps in transparently.
+Every rule implements the same PHASED protocol, and the same rule object
+drives all three transports (the vmapped parameter-server ``SimChannel``,
+the production ``MeshChannel``, and the bucketed overlapped
+``AsyncChannel``) — the trainer contains no per-rule update math::
 
-All rules implement::
+    init(wgrads_like)            -> h       worker-stacked state (None if
+                                            the rule is stateless)
+    init_bar(wgrads_like)        -> h_bar   master aggregated shift
+    message_leaf(q, key, g, h)   -> (m, bits)
+                                            ONE leaf's wire message; the
+                                            key is already folded to the
+                                            leaf's GLOBAL tree position,
+                                            so any bucket partition of
+                                            the tree reproduces it
+                                            bit-exactly
+    message(q, key, wgrads, h)   -> (m, bits)
+                                            derived: message_leaf mapped
+                                            over the tree
+    aux(key, wgrads, h)          -> (aux, extra_bits)
+                                            tree-level extras that are
+                                            not per-leaf wire messages
+                                            (Rand-DIANA's refresh draw
+                                            and its dense refresh cost)
+    apply(wgrads, m, m_bar, h, h_bar, aux)
+                                 -> (g_bar, h_new, h_bar_new)
+                                            estimator + shift update
+                                            from the AGGREGATED message
+    round(q, key, wgrads, h, h_bar, channel=None)
+                                 -> (g_bar, h_new, h_bar_new, bits)
+                                            one full communication round,
+                                            scheduled by the channel
+                                            (``Channel.shift_round``);
+                                            the AsyncChannel interleaves
+                                            message/reduce per bucket
 
-    init(wgrads_like)                        -> h0        (W-stacked pytree)
-    step(q, key, wgrads, h, channel=None)    -> (g_bar, h_new, bits)
-
-where ``wgrads`` is the stacked per-worker gradient pytree (leaves shaped
-``(W, *param.shape)``), ``g_bar`` is the master's gradient estimator (no
-worker axis), and ``bits`` is the total uplink wire cost of the step (a
-traced scalar — Rand-DIANA's cost is a random variable).
+``wgrads`` is the stacked per-worker gradient pytree (leaves shaped
+``(W, *param.shape)``), ``g_bar`` the master's gradient estimator (no
+worker axis), and ``bits`` the total uplink wire cost of the round — a
+traced scalar computed STRUCTURALLY from the actual payloads
+(``Compressor.wire_bits``); there are no hand-written bit formulas here.
 
 DIANA-like rules couple the estimator and the shift update (they reuse
-the same compressed message), which is why the rule computes both.
-``EF21Shift`` is the error-feedback member of the family: its message is
-a CONTRACTIVE compression of the residual, integrated into the shift.
+the same compressed message), which is why ``apply`` computes both.
+``EF21Shift`` is the error-feedback member of the family (contractive
+message integrated into the shift); ``EFBVShift`` generalizes it with
+the EF-BV ``eta``/``nu`` knobs (Condat, Li & Richtárik, 2022), covering
+EF21 (``eta = nu = 1``) and DIANA (unbiased Q, ``eta = 1/(1+omega)``,
+``nu = 1``) as special cases.
 """
 
 from __future__ import annotations
@@ -39,7 +73,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm.channel import Channel, SimChannel
-from repro.core.compressors import FLOAT_BITS, Compressor, Zero
+from repro.comm.wire import encode_decode_workers, leaf_key
+from repro.core.compressors import Compressor, Zero, wire_bits
 
 tmap = jax.tree_util.tree_map
 
@@ -70,34 +105,133 @@ def _chan(channel: Optional[Channel]) -> Channel:
     return channel if channel is not None else SimChannel()
 
 
+def _zeros(tree):
+    """Zeros matching a tree of arrays OR ``ShapeDtypeStruct`` leaves
+    (rule state is initializable AOT, e.g. from ``jax.eval_shape``)."""
+    return tmap(lambda a: jnp.zeros(a.shape, a.dtype), tree)
+
+
+def dense_message_bits(wgrads_like) -> float:
+    """STRUCTURAL wire cost of one worker's uncompressed (dense) message:
+    the ``wire_bits`` of the identity payload — per-leaf inner numel at
+    the leaf's true dtype width, never a hand-written ``32 * d``."""
+    return float(
+        sum(
+            wire_bits(jax.ShapeDtypeStruct(a.shape[1:], a.dtype))
+            for a in jax.tree_util.tree_leaves(wgrads_like)
+        )
+    )
+
+
 # --------------------------------------------------------------------------
 
 
 @dataclass(frozen=True)
 class ShiftRule:
+    """Base of the phased protocol (see module docstring).
+
+    The default ``message_leaf`` compresses the gradient-shift residual
+    ``g - h`` with the round's codec ``q`` — the shifted-compression
+    message every rule in the paper sends; rules whose message differs
+    (generalized DIANA's induced two-part message) override it.
+    """
+
+    #: rules with ``stateful = False`` keep ``h``/``h_bar`` as ``None``
+    #: (the trainer then allocates no shift tensors at all)
+    stateful: bool = field(default=True, init=False, repr=False)
+
+    # -- state ------------------------------------------------------------
+
     def init(self, wgrads_like):
+        """Worker-stacked shift state (``None`` for stateless rules).
+        Accepts arrays or ``ShapeDtypeStruct`` leaves."""
+        return _zeros(wgrads_like) if self.stateful else None
+
+    def init_bar(self, wgrads_like):
+        """The master's aggregated shift ``h_bar`` (no worker axis)."""
+        if not self.stateful:
+            return None
+        return tmap(lambda a: jnp.zeros(a.shape[1:], a.dtype), wgrads_like)
+
+    # -- phases -----------------------------------------------------------
+
+    def message_leaf(self, q: Compressor, key, g, h):
+        """One leaf's wire message: ``Q(g - h)`` encoded per worker.
+
+        ``key`` must already be folded to the leaf's GLOBAL tree
+        position — the invariant that makes any bucket partition of the
+        tree (the overlap runtime) bit-exact with the whole-tree round.
+        Returns ``(decoded W-stacked message, structural wire bits)``.
+        """
+        diff = g if h is None else g - h
+        payload, m = encode_decode_workers(q, key, diff)
+        return m, q.wire_bits(payload)
+
+    def message(self, q: Compressor, key, wgrads, h):
+        """``message_leaf`` mapped over the tree with global-position
+        key folding (identical derivation to ``Channel.uplink``)."""
+        leaves, treedef = jax.tree_util.tree_flatten(wgrads)
+        h_leaves = (
+            [None] * len(leaves) if h is None else jax.tree_util.tree_leaves(h)
+        )
+        out = []
+        bits = jnp.zeros((), jnp.float32)
+        for i, (g, hl) in enumerate(zip(leaves, h_leaves)):
+            m, b = self.message_leaf(q, leaf_key(key, i), g, hl)
+            out.append(m)
+            bits = bits + b
+        return jax.tree_util.tree_unflatten(treedef, out), bits
+
+    def aux(self, key, wgrads, h):
+        """Tree-level extras: ``(aux carried to apply, extra wire bits)``."""
+        return None, jnp.zeros((), jnp.float32)
+
+    def apply(self, wgrads, m, m_bar, h, h_bar, aux):
+        """Estimator + shift update from the aggregated message."""
         raise NotImplementedError
 
-    def step(self, q: Compressor, key, wgrads, h, channel: Optional[Channel] = None):
-        raise NotImplementedError
+    # -- the composed round -----------------------------------------------
+
+    def round(self, q: Compressor, key, wgrads, h, h_bar,
+              channel: Optional[Channel] = None):
+        """One full communication round, scheduled by the channel.
+
+        ``Channel.shift_round`` runs message -> aux -> reduce -> apply;
+        the overlapped ``AsyncChannel`` overrides the schedule (per
+        bucket: message then issue the reduction) without touching the
+        math.  Returns ``(g_bar, h_new, h_bar_new, bits)``.
+        """
+        return _chan(channel).shift_round(self, q, key, wgrads, h, h_bar)
+
+    def step(self, q: Compressor, key, wgrads, h,
+             channel: Optional[Channel] = None):
+        """DEPRECATED single-state entry: ``(g_bar, h_new, bits)``.
+
+        Kept for callers that track only ``h``; ``h_bar`` is recomputed
+        as the exact worker mean each call, which the incremental
+        tracking of ``round`` makes unnecessary.  Prefer ``round``.
+        """
+        h_bar = None if h is None else _tree_mean_w(h)
+        g_bar, h_new, _, bits = self.round(q, key, wgrads, h, h_bar,
+                                           channel=channel)
+        return g_bar, h_new, bits
 
 
 @dataclass(frozen=True)
 class FixedShift(ShiftRule):
-    """DCGD-SHIFT with constant shifts (eq. 6).  ``h0 = 0`` gives plain
-    DCGD (Khirirat et al., 2018).  Theorem 1: linear to a neighborhood
-    proportional to mean_i ||grad_i(x*) - h_i||^2."""
+    """DCGD-SHIFT with constant shifts (eq. 6).  ``h = 0`` (the stateless
+    default) gives plain DCGD (Khirirat et al., 2018).  Theorem 1:
+    linear to a neighborhood proportional to
+    mean_i ||grad_i(x*) - h_i||^2.  Nonzero fixed shifts still work:
+    pass an ``h``/``h_bar`` pair and ``apply`` leaves them untouched."""
 
-    def init(self, wgrads_like):
-        return tmap(jnp.zeros_like, wgrads_like)
+    stateful: bool = field(default=False, init=False, repr=False)
 
-    def step(self, q, key, wgrads, h, channel=None):
-        ch = _chan(channel)
-        ku, ka = jax.random.split(key)
-        diff = tmap(lambda g, s: g - s, wgrads, h)
-        m, bits = ch.uplink(q, ku, diff)
-        g_bar = ch.reduce_mean(ka, tmap(lambda s, mm: s + mm, h, m))
-        return g_bar, h, bits
+    def apply(self, wgrads, m, m_bar, h, h_bar, aux):
+        g_bar = m_bar if h_bar is None else tmap(
+            lambda hb, mb: hb + mb, h_bar, m_bar
+        )
+        return g_bar, h, h_bar
 
 
 @dataclass(frozen=True)
@@ -106,7 +240,11 @@ class StarShift(ShiftRule):
     compressed by a contractive C.  Theorem 2: exact linear convergence.
 
     Impractical by construction (needs the optimum) — included as the
-    theoretical reference point, exactly as in the paper.
+    theoretical reference point, exactly as in the paper.  Its state is
+    the dict ``{"h", "star"}`` and its message has a second (oracle
+    refresh) part, so it overrides ``round`` wholesale; it runs on the
+    reference ``SimChannel`` only and never rides the mesh or the
+    overlap runtime.
     """
 
     c: Compressor = field(default_factory=Zero)
@@ -118,7 +256,10 @@ class StarShift(ShiftRule):
     def init(self, wgrads_like):  # pragma: no cover - guarded
         raise ValueError("StarShift requires init_with_star(grads_at_optimum)")
 
-    def step(self, q, key, wgrads, state, channel=None):
+    def init_bar(self, wgrads_like):
+        return None
+
+    def round(self, q, key, wgrads, state, h_bar, channel=None):
         ch = _chan(channel)
         h, star = state["h"], state["star"]
         kq, kc, ka = jax.random.split(key, 3)
@@ -129,7 +270,12 @@ class StarShift(ShiftRule):
         dstar = tmap(lambda g, s: g - s, wgrads, star)
         chm, bits_c = ch.uplink(self.c, kc, dstar)
         h_new = tmap(lambda s, cc: s + cc, star, chm)
-        return g_bar, {"h": h_new, "star": star}, bits_q + bits_c
+        return g_bar, {"h": h_new, "star": star}, None, bits_q + bits_c
+
+    def step(self, q, key, wgrads, state, channel=None):
+        g_bar, state_new, _, bits = self.round(q, key, wgrads, state, None,
+                                               channel=channel)
+        return g_bar, state_new, bits
 
 
 @dataclass(frozen=True)
@@ -146,21 +292,21 @@ class DianaShift(ShiftRule):
     alpha: float = 0.1
     c: Compressor = field(default_factory=Zero)
 
-    def init(self, wgrads_like):
-        return tmap(jnp.zeros_like, wgrads_like)
+    def message_leaf(self, q, key, g, h):
+        # the induced two-part message, still leaf-local: C picks the
+        # contractive part, Q the unbiased remainder of the residual
+        diff = g if h is None else g - h
+        kc, kq = jax.random.split(key)
+        cpay, cm = encode_decode_workers(self.c, kc, diff)
+        qpay, qm = encode_decode_workers(q, kq, diff - cm)
+        return cm + qm, self.c.wire_bits(cpay) + q.wire_bits(qpay)
 
-    def step(self, q, key, wgrads, h, channel=None):
-        ch = _chan(channel)
-        kc, kq, ka = jax.random.split(key, 3)
-        diff = tmap(lambda g, s: g - s, wgrads, h)
-        cmsg, bits_c = ch.uplink(self.c, kc, diff)
-        resid = tmap(lambda d, cc: d - cc, diff, cmsg)
-        qmsg, bits_q = ch.uplink(q, kq, resid)
-        # m_full = Q_ind(grad - h) = c + Q(grad - h - c)
-        m_full = tmap(lambda cc, mm: cc + mm, cmsg, qmsg)
-        g_bar = ch.reduce_mean(ka, tmap(lambda s, mf: s + mf, h, m_full))
-        h_new = tmap(lambda s, mf: s + self.alpha * mf, h, m_full)
-        return g_bar, h_new, bits_c + bits_q
+    def apply(self, wgrads, m, m_bar, h, h_bar, aux):
+        a = self.alpha
+        g_bar = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
+        h_new = tmap(lambda s, mm: s + a * mm, h, m)
+        h_bar_new = tmap(lambda hb, mb: hb + a * mb, h_bar, m_bar)
+        return g_bar, h_new, h_bar_new
 
 
 @dataclass(frozen=True)
@@ -171,36 +317,35 @@ class RandDianaShift(ShiftRule):
 
     Because the refresh happens at the current point, h_i^{k+1} is exactly
     the gradient the worker just computed — no extra gradient evaluation —
-    but the refresh message is a *full* d-vector, sent rarely (expected
-    p*32d bits/step).  Theorem 4: max{kappa(1 + omega/n), 1/p} with a
-    dramatically simpler analysis than DIANA.
+    but the refresh message is a *full* dense vector, sent rarely
+    (expected ``p *`` one dense message per step, charged structurally at
+    the leaves' true dtype widths).  Theorem 4: max{kappa(1 + omega/n),
+    1/p} with a dramatically simpler analysis than DIANA.
     """
 
     p: float = 0.1
 
-    def init(self, wgrads_like):
-        return tmap(jnp.zeros_like, wgrads_like)
-
-    def step(self, q, key, wgrads, h, channel=None):
-        ch = _chan(channel)
-        kq, kb, ka = jax.random.split(key, 3)
-        diff = tmap(lambda g, s: g - s, wgrads, h)
-        m, bits = ch.uplink(q, kq, diff)
-        g_bar = ch.reduce_mean(ka, tmap(lambda s, mm: s + mm, h, m))
+    def aux(self, key, wgrads, h):
         w = jax.tree_util.tree_leaves(wgrads)[0].shape[0]
-        refresh = jax.random.bernoulli(kb, self.p, (w,))
+        refresh = jax.random.bernoulli(key, self.p, (w,))
+        # refresh messages are uncompressed dense vectors, sent only by
+        # the workers that fired — structural wire_bits, not 32*d
+        extra = jnp.sum(refresh) * dense_message_bits(wgrads)
+        return refresh, extra
+
+    def apply(self, wgrads, m, m_bar, h, h_bar, refresh):
+        g_bar = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
+        w = refresh.shape[0]
 
         def upd(s, g):
             mask = refresh.reshape((w,) + (1,) * (g.ndim - 1))
             return jnp.where(mask, g, s)
 
         h_new = tmap(upd, h, wgrads)
-        # refresh messages are uncompressed f32 vectors (structurally
-        # FLOAT_BITS per scalar), sent only by the workers that fired
-        one = tmap(lambda a: a[0], wgrads)
-        d = sum(int(l.size) for l in jax.tree_util.tree_leaves(one))
-        bits = bits + jnp.sum(refresh) * float(FLOAT_BITS * d)
-        return g_bar, h_new, bits
+        h_bar_new = tmap(
+            lambda hb, s, n: hb + jnp.mean(n - s, axis=0), h_bar, h, h_new
+        )
+        return g_bar, h_new, h_bar_new
 
 
 @dataclass(frozen=True)
@@ -223,17 +368,47 @@ class EF21Shift(ShiftRule):
     like DIANA's, so no uncompressed collective ever materializes.
     """
 
-    def init(self, wgrads_like):
-        return tmap(jnp.zeros_like, wgrads_like)
+    def apply(self, wgrads, m, m_bar, h, h_bar, aux):
+        g_bar = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
+        h_new = tmap(lambda s, mm: s + mm, h, m)
+        h_bar_new = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
+        return g_bar, h_new, h_bar_new
 
-    def step(self, q, key, wgrads, h, channel=None):
-        ch = _chan(channel)
-        ku, ka = jax.random.split(key)
-        diff = tmap(lambda g, s: g - s, wgrads, h)
-        c, bits = ch.uplink(q, ku, diff)
-        g_bar = ch.reduce_mean(ka, tmap(lambda s, cc: s + cc, h, c))
-        h_new = tmap(lambda s, cc: s + cc, h, c)
-        return g_bar, h_new, bits
+
+@dataclass(frozen=True)
+class EFBVShift(ShiftRule):
+    """EF-BV (Condat, Li & Richtárik, 2022): the unified error-feedback /
+    variance-reduction mechanism for Biased *and* unbiased compressors,
+    the recursive variance-reduced generalization of EF21::
+
+        m_i       = C(grad_i - h_i)          (the wire message)
+        h_i^{k+1} = h_i + eta * m_i          (shift integration, rate eta)
+        g^k       = h_bar + nu * m_bar       (estimator mixing nu)
+        h_bar^{k+1} = h_bar + eta * m_bar
+
+    ``eta`` (the paper's lambda) damps the shift recursion so the shift
+    error contracts even for NON-contractive unbiased operators —
+    E||e - eta*C(e)||^2 <= (1 - 2 eta + eta^2 (1+omega)) ||e||^2, which
+    is minimized (to omega/(1+omega)) at eta = 1/(1+omega).  ``nu``
+    scales the correction in the estimator, trading bias for variance.
+    Special cases: ``eta = nu = 1`` is EXACTLY EF21 (bitwise — the
+    trajectory test pins it); an unbiased Q with ``eta = 1/(1+omega)``,
+    ``nu = 1`` is DIANA with its optimal alpha.
+    """
+
+    eta: float = 1.0
+    nu: float = 1.0
+
+    def apply(self, wgrads, m, m_bar, h, h_bar, aux):
+        g_bar = tmap(lambda hb, mb: hb + self.nu * mb, h_bar, m_bar)
+        h_new = tmap(lambda s, mm: s + self.eta * mm, h, m)
+        h_bar_new = tmap(lambda hb, mb: hb + self.eta * mb, h_bar, m_bar)
+        return g_bar, h_new, h_bar_new
+
+
+#: the rules the registry accepts (error messages quote this)
+SHIFT_RULES = ("fixed", "dcgd", "star", "diana", "rand_diana", "ef21",
+               "efbv")
 
 
 def make_shift_rule(name: str, **kw) -> ShiftRule:
@@ -244,7 +419,11 @@ def make_shift_rule(name: str, **kw) -> ShiftRule:
         "diana": DianaShift,
         "rand_diana": RandDianaShift,
         "ef21": EF21Shift,
+        "efbv": EFBVShift,
     }
     if name not in table:
-        raise ValueError(f"unknown shift rule {name!r}; have {sorted(table)}")
+        raise ValueError(
+            f"unknown shift rule {name!r}; have shift rules "
+            f"{SHIFT_RULES}"
+        )
     return table[name](**kw)

@@ -10,6 +10,12 @@ vmapped parameter-server ``SimChannel`` by default — construct
 ``DCGDShift(..., channel=...)`` / ``GDCI(..., channel=...)`` to swap the
 transport); the recorded ``bits`` are the structural ``wire_bits`` of
 the actual encoded payloads.
+
+These reference runs drive the SAME phased rule engine
+(``ShiftRule.round`` via ``Channel.shift_round``) as the production
+``launch/train.py`` step — including the incremental ``h_bar``
+tracking — which is what makes the cross-layer bit-exactness tests
+(``tests/test_shift_engine.py``) possible.
 """
 
 from __future__ import annotations
@@ -100,7 +106,7 @@ def run_gdci(
     )
     x0 = x0.astype(problem.x_star.dtype)
     if isinstance(method, VRGDCI):
-        state0 = method.init(x0, problem.n_workers, seed=seed)
+        state0 = method.init_state(x0, problem.n_workers, seed=seed)
     else:
         state0 = method.init(x0, seed=seed)
     denom = jnp.sum((x0 - problem.x_star) ** 2)

@@ -5,43 +5,35 @@ This is Algorithm 1 (DCGD-SHIFT) mapped onto the TPU mesh:
   * "worker i" = one (pod, data) slice; per-worker gradients come from a
     vmap over the worker axis (``dist.worker_grads``), sharded
     P(("pod","data"), ...).
+  * ALL algorithm math lives in the ONE phased rule engine
+    (``repro.core.shift_rules`` for the gradient direction,
+    ``repro.core.iterate_comp.VRGDCI`` for compressed iterates): the
+    step below only plumbs ``TrainState`` fields through
+    ``rule.round(...)``.  There is NO per-rule update math in this
+    module — a rule lands once in ``repro.core`` and runs everywhere
+    (reference simulator, this mesh step, the overlap runtime), which
+    the cross-layer bit-exactness tests in ``tests/test_shift_engine.py``
+    pin.
   * ALL communication goes through one ``repro.comm.Channel``
-    (``MeshChannel`` here): ``channel.uplink`` encodes each worker's
-    shifted gradient with the configured codec (wire bits accounted
-    STRUCTURALLY from the actual payloads) and ``channel.reduce_mean``
-    aggregates in the configured wire format (dense psum /
+    (``MeshChannel`` here, ``AsyncChannel`` for the overlap modes):
+    wire bits are accounted STRUCTURALLY from the actual payloads and
+    aggregation runs in the configured wire format (dense psum /
     shared-pattern Rand-K / int8 ring) — no comm-mode string dispatch
-    lives here anymore.
-  * The master's aggregated shift h^k is tracked INCREMENTALLY
-    (Alg. 1 line 14 as the paper notes: h^{k+1} = h^k + alpha*m^k for
-    DIANA) so no uncompressed collective ever materializes for it.
-
-Shift-rule updates implemented here (production path; the reference
-parameter-server algebra lives in ``repro.core``):
-
-  fixed       h_i^k = h_i^0 (=0)  — plain DCGD
-  diana       h_i += alpha * m_i ;  h_bar += alpha * m_bar
-  rand_diana  h_i = grad_i w.p. p (worker-local refresh); the h_bar
-              correction is a dense mean of the sparse refresh deltas
-              (expected p * full message — noted in EXPERIMENTS.md).
-  ef21        error feedback (Richtárik et al., 2021): the message is
-              the CONTRACTIVE compression c_i = C(grad_i - h_i);
-              h_i += c_i; h_bar += c_bar; g_bar = h_bar + c_bar.
-              Selected by shift_rule="ef21" OR comm_mode="ef21".
-  vr_gdci     Algorithm 2 — compressed ITERATES (the model-broadcast
-              direction): delta_i = Q(x - gamma*SGD_dir_i - h_i);
-              h_i += alpha*delta_i; x = (1-eta)x + eta(delta_bar+h_bar).
-              Uses the plain SGD direction per worker (the paper's
-              gradient mapping); the AdamW/momentum path does not apply
-              to iterate compression.
+    lives here either.
+  * The master's aggregated shift h^k is tracked INCREMENTALLY by the
+    rules (Alg. 1 line 14 as the paper notes: h^{k+1} = h^k + alpha*m^k
+    for DIANA) so no uncompressed collective ever materializes for it.
 
 CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
-          [--comm_mode dense|randk_shared|q8_ring|q8_ring_overlap|ef21] ...
+          [--comm_mode dense|randk_shared|q8_ring|q8_ring_overlap|ef21|\
+           efbv|efbv_overlap] ...
 
-``q8_ring_overlap`` routes aggregation through ``comm.AsyncChannel``:
-reverse-layer byte-budget buckets over the Pallas-fused int8 ring, one
-independent collective per bucket so XLA can overlap ring hops with
-encode and backward compute.
+``q8_ring_overlap`` / ``efbv_overlap`` route the round through
+``comm.AsyncChannel``: reverse-layer byte-budget buckets over the
+Pallas-fused int8 ring, each bucket's message formed and its reduction
+issued before the next bucket's message (``AsyncChannel.shift_round``),
+so XLA can overlap ring hops with encode and backward compute — for
+EVERY rule of the engine, shifted ones included.
 """
 
 from __future__ import annotations
@@ -54,10 +46,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.comm import make_channel
+from repro.comm import CHANNEL_MODES, make_channel
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import CompressionConfig, ModelConfig, TrainConfig
-from repro.core.compressors import make_compressor
+from repro.core import SHIFT_RULES
+from repro.core.iterate_comp import VRGDCI
 from repro.dist import (
     params_pspecs,
     per_worker_grads,
@@ -72,13 +65,21 @@ from repro.optim import make_optimizer
 
 tmap = jax.tree_util.tree_map
 
-COMM_MODES = ("dense", "randk_shared", "q8_ring", "q8_ring_overlap", "ef21")
+#: CLI comm modes — DERIVED from the channel registry (minus the
+#: reference-only parameter server) so the two surfaces cannot drift
+COMM_MODES = tuple(m for m in CHANNEL_MODES if m != "sim")
+
+#: CLI shift rules — the engine registry minus the oracle rule (which
+#: needs grads at the optimum) plus the iterate-compression Algorithm 2
+SHIFT_RULE_CHOICES = tuple(
+    r for r in SHIFT_RULES if r != "star"
+) + ("vr_gdci",)
 
 
 class TrainState(NamedTuple):
     params: Any
     opt: Any
-    h: Any            # worker-stacked shifts (or None when disabled/fixed-0)
+    h: Any            # worker-stacked shifts (None for stateless rules)
     h_bar: Any        # master aggregated shift (params-like; None if zero)
     key: jax.Array
     step: jax.Array
@@ -90,13 +91,17 @@ def init_state(key, cfg: ModelConfig, tcfg: TrainConfig, w: int) -> TrainState:
     params = M.init_params(kp, cfg)
     opt = make_optimizer(tcfg).init(params)
     comp = tcfg.compression
-    if comp.enabled and comp.effective_shift_rule in (
-        "diana", "rand_diana", "vr_gdci", "ef21"
-    ):
-        # shift state in the gradient dtype (bf16 at scale) — a full f32
-        # copy per worker would dominate HBM for the 32B archs
-        h = tmap(lambda p: jnp.zeros((w, *p.shape), p.dtype), params)
-        h_bar = tmap(lambda p: jnp.zeros(p.shape, p.dtype), params)
+    if comp.enabled:
+        # the rule decides its own state: stateless rules (fixed/dcgd)
+        # allocate nothing; stateful ones get worker-stacked shifts in
+        # the gradient dtype (bf16 at scale — a full f32 copy per worker
+        # would dominate HBM for the 32B archs) plus the master h_bar
+        _, rule = comp.make(learning_rate=tcfg.learning_rate)
+        wlike = tmap(
+            lambda p: jax.ShapeDtypeStruct((w, *p.shape), p.dtype), params
+        )
+        h = rule.init(wlike)
+        h_bar = rule.init_bar(wlike)
     else:
         h = None
         h_bar = None
@@ -129,102 +134,54 @@ def build_channel(comp: CompressionConfig, cfg: ModelConfig, mesh, w: int):
 
 
 def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int):
-    """Returns train_step(state, batch) -> (state, metrics) — pure, jittable."""
+    """Returns train_step(state, batch) -> (state, metrics) — pure, jittable.
+
+    The step is RULE PLUMBING ONLY: per-worker gradients in, one
+    ``rule.round`` (the engine: message -> aggregate -> apply, scheduled
+    by the channel), optimizer out.  Iterate-compression rules
+    (``VRGDCI``) update the params inside their round, so the optimizer
+    is bypassed for them — the paper's gradient mapping is plain SGD.
+    """
     if getattr(tcfg, "train_attn_chunk", 0) and tcfg.train_attn_chunk > 0:
         cfg = cfg.with_(attn_q_chunk=tcfg.train_attn_chunk)
     comp = tcfg.compression
     optimizer = make_optimizer(tcfg)
-    q = make_compressor(comp.compressor, **dict(comp.compressor_kwargs)) if comp.enabled else None
-    rule = comp.effective_shift_rule
     channel = build_channel(comp, cfg, mesh, w)
+    if comp.enabled:
+        q, rule = comp.make(learning_rate=tcfg.learning_rate)
+        iterate_rule = isinstance(rule, VRGDCI)
+    else:
+        q, rule, iterate_rule = None, None, False
 
     def loss_fn(params, batch):
         return M.train_loss(params, cfg, batch)
 
-    def vr_gdci_step(state: TrainState, batch):
-        """Algorithm 2 (VR-GDCI) on the LM: compressed-iterate exchange.
-        x' = (1-eta) x + eta * mean_i [h_i + Q(T_i(x) - h_i)] with
-        T_i(x) = x - gamma * grad_i, h_i += alpha * Q(...)."""
-        wbatch = split_batch(batch, w)
-        grads, loss, metrics = per_worker_grads(loss_fn, state.params, wbatch)
-        key, k1, k2 = jax.random.split(state.key, 3)
-        gamma = tcfg.learning_rate
-        eta, alpha = comp.gdci_eta, comp.shift_alpha
-        target = tmap(
-            lambda x, g, s: (x[None] - gamma * g.astype(x.dtype)) - s,
-            state.params, grads, state.h,
-        )
-        delta, step_bits = channel.uplink(q, k1, target)
-        h = tmap(lambda s, d: s + alpha * d, state.h, delta)
-        delta_bar = channel.reduce_mean(k2, delta)
-        new_params = tmap(
-            lambda x, db, hb: ((1.0 - eta) * x.astype(jnp.float32)
-                               + eta * (db + hb).astype(jnp.float32)
-                               ).astype(x.dtype),
-            state.params, delta_bar, state.h_bar,
-        )
-        h_bar = tmap(lambda hb, db: hb + alpha * db, state.h_bar, delta_bar)
-        bits = state.bits + step_bits
-        new_state = TrainState(new_params, state.opt, h, h_bar, key,
-                               state.step + 1, bits)
-        return new_state, {**metrics, "loss": loss, "bits": bits}
-
     def train_step(state: TrainState, batch):
-        if comp.enabled and rule == "vr_gdci":
-            return vr_gdci_step(state, batch)
         wbatch = split_batch(batch, w)
         grads, loss, metrics = per_worker_grads(loss_fn, state.params, wbatch)
-        key, k1, k2, k3 = jax.random.split(state.key, 4)
-        bits = state.bits
+        key, sub = jax.random.split(state.key)
 
         if not comp.enabled:
-            g_bar = channel.reduce_mean(k1, grads)
-            h, h_bar = state.h, state.h_bar
+            g_bar = channel.reduce_mean(sub, grads)
+            new_params, opt = optimizer.update(g_bar, state.opt, state.params)
+            h, h_bar, bits = state.h, state.h_bar, state.bits
+        elif iterate_rule:
+            # Algorithm 2: the round returns the mixed iterate directly
+            new_params, h, h_bar, step_bits = rule.round(
+                sub, state.params, grads, state.h, state.h_bar, channel
+            )
+            opt = state.opt
+            bits = state.bits + step_bits
         else:
-            if state.h is not None:
-                diff = tmap(lambda g, s: g - s, grads, state.h)
-            else:
-                diff = grads
-            m, step_bits = channel.uplink(q, k1, diff)
-            m_bar = channel.reduce_mean(k2, m)
-            h, h_bar = state.h, state.h_bar
-            if rule in ("fixed", "dcgd"):
-                g_bar = m_bar                     # h == 0
-            elif rule == "diana":
-                g_bar = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
-                a = comp.shift_alpha
-                h = tmap(lambda s, mm: s + a * mm, h, m)
-                h_bar = tmap(lambda hb, mb: hb + a * mb, h_bar, m_bar)
-            elif rule == "ef21":
-                # error feedback: integrate the contractive message
-                g_bar = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
-                h = tmap(lambda s, mm: s + mm, h, m)
-                h_bar = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
-            elif rule == "rand_diana":
-                g_bar = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
-                refresh = jax.random.bernoulli(k3, comp.shift_p, (w,))
-                def upd(s, g):
-                    mask = refresh.reshape((w,) + (1,) * (g.ndim - 1))
-                    return jnp.where(mask, g, s)
-                delta = tmap(lambda s, g: upd(s, g) - s, h, grads)
-                h = tmap(lambda s, d: s + d, h, delta)
-                h_bar = tmap(
-                    lambda hb, d: hb + jnp.mean(d, axis=0), h_bar, delta
-                )
-                # the rare refresh uplink is a full uncompressed message
-                d_total = sum(
-                    int(l.size) // w for l in jax.tree_util.tree_leaves(grads)
-                )
-                step_bits = step_bits + jnp.sum(refresh) * float(32 * d_total)
-            else:
-                raise ValueError(rule)
-            bits = bits + step_bits
+            g_bar, h, h_bar, step_bits = rule.round(
+                q, sub, grads, state.h, state.h_bar, channel
+            )
+            new_params, opt = optimizer.update(g_bar, state.opt, state.params)
+            bits = state.bits + step_bits
 
-        new_params, opt = optimizer.update(g_bar, state.opt, state.params)
         new_state = TrainState(new_params, opt, h, h_bar, key,
                                state.step + 1, bits)
-        metrics = {**metrics, "loss": loss, "bits": bits}
-        return new_state, metrics
+        return new_state, {**metrics, "loss": loss, "bits": bits}
 
     return train_step
 
@@ -287,13 +244,19 @@ def main(argv=None):
                     help="use the reduced smoke variant of the arch")
     ap.add_argument("--compressor", default="natural")
     ap.add_argument("--shift-rule", "--shift_rule", dest="shift_rule",
-                    default="diana",
-                    choices=["fixed", "dcgd", "diana", "rand_diana",
-                             "vr_gdci", "ef21"])
+                    default="diana", choices=list(SHIFT_RULE_CHOICES))
     ap.add_argument("--comm-mode", "--comm_mode", dest="comm_mode",
                     default="dense", choices=list(COMM_MODES),
-                    help="Channel aggregation format; ef21 selects the "
-                         "error-feedback mode (implies the ef21 rule)")
+                    help="Channel aggregation format; ef21/efbv select "
+                         "the error-feedback modes (implying their rule); "
+                         "the *_overlap modes run the bucketed "
+                         "AsyncChannel over the Pallas-fused q8 ring")
+    ap.add_argument("--efbv-eta", "--efbv_eta", dest="efbv_eta",
+                    type=float, default=1.0,
+                    help="EF-BV shift integration rate (1.0 = EF21)")
+    ap.add_argument("--efbv-nu", "--efbv_nu", dest="efbv_nu",
+                    type=float, default=1.0,
+                    help="EF-BV estimator mixing")
     ap.add_argument("--no-compression", action="store_true")
     ap.add_argument("--lr", type=float, default=3e-4)
     args = ap.parse_args(argv)
@@ -305,6 +268,8 @@ def main(argv=None):
         compressor=args.compressor,
         shift_rule=args.shift_rule,
         comm_mode=args.comm_mode,
+        efbv_eta=args.efbv_eta,
+        efbv_nu=args.efbv_nu,
     )
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        warmup_steps=max(1, args.steps // 10),

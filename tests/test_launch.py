@@ -38,7 +38,7 @@ def _train(comp: CompressionConfig, steps=100, lr=1e-2):
     return losses, state
 
 
-@pytest.mark.parametrize("rule", ["fixed", "diana", "rand_diana"])
+@pytest.mark.parametrize("rule", ["fixed", "diana", "rand_diana", "efbv"])
 def test_train_step_rules_learn(rule):
     losses, state = _train(CompressionConfig(
         enabled=True, compressor="natural", shift_rule=rule))

@@ -1,0 +1,445 @@
+"""The shift-rule ENGINE contract: one phased rule object drives the
+reference simulator, the production train step, and the overlap runtime
+with bit-identical results.
+
+Three layers of pinning:
+
+  * engine x channel: every trainer rule's ``round`` is bit-exact
+    between ``MeshChannel`` and the bucketed ``AsyncChannel`` (drained),
+    and between the AsyncChannel's interleaved schedule and the default
+    ``Channel.shift_round`` schedule — bucketing changes scheduling,
+    never math (the PR-3 contract, extended to shifted rules).
+  * trainer x reference: ``launch/train.py``'s jitted step reproduces
+    ``DCGDShift`` (the paper's Algorithm-1 object) / ``VRGDCI`` exactly
+    — params, h, h_bar and bits — for every rule on the ``sim`` and
+    ``dense`` channels.  This is what guarantees the trainer contains
+    no drifted re-implementation of the rule algebra.
+  * config plumbing and the EF-BV comm modes (``efbv``,
+    ``efbv_overlap``), including the end-to-end train CLI on 8 fake
+    devices.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import AsyncChannel, MeshChannel, SimChannel, make_channel
+from repro.comm.channel import Channel
+from repro.configs import get_smoke_config
+from repro.configs.base import CompressionConfig, TrainConfig
+from repro.core import (
+    DCGDShift,
+    DCGDState,
+    EF21Shift,
+    EFBVShift,
+    dense_message_bits,
+    make_shift_rule,
+)
+from repro.core.compressors import NaturalCompression, TopK, wire_bits
+from repro.data.tokens import TokenStream
+from repro.dist import per_worker_grads, split_batch
+from repro.launch.mesh import make_host_mesh, n_workers
+from repro.launch.train import (
+    TrainState,
+    build_channel,
+    build_train_step,
+    init_state,
+)
+from repro.models import model as M
+from repro.optim import make_optimizer
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+tmap = jax.tree_util.tree_map
+
+#: every gradient-direction rule the trainer accepts, with the config
+#: that selects it (compressors chosen to exercise the rule's regime)
+RULE_CONFIGS = {
+    "fixed": CompressionConfig(enabled=True, compressor="natural",
+                               shift_rule="fixed"),
+    "diana": CompressionConfig(enabled=True, compressor="natural",
+                               shift_rule="diana", shift_alpha=0.25),
+    "rand_diana": CompressionConfig(enabled=True, compressor="natural",
+                                    shift_rule="rand_diana", shift_p=0.5),
+    "ef21": CompressionConfig(enabled=True, compressor="topk",
+                              compressor_kwargs=(("q", 0.25),),
+                              shift_rule="ef21"),
+    "efbv": CompressionConfig(enabled=True, compressor="natural",
+                              shift_rule="efbv", efbv_eta=0.5, efbv_nu=0.9),
+}
+
+
+def _wtree(key, w=4):
+    return {
+        "a": jax.random.normal(key, (w, 40)),
+        "b": {
+            "c": jax.random.normal(jax.random.fold_in(key, 1), (w, 3, 5)),
+            "d": jax.random.normal(jax.random.fold_in(key, 2), (w,)),
+        },
+        "e": jax.random.normal(jax.random.fold_in(key, 3), (w, 7)),
+    }
+
+
+def _assert_trees_equal(a, b):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)),
+        a, b,
+    )
+
+
+def _rule_and_q(name):
+    comp = RULE_CONFIGS[name]
+    return comp.make()
+
+
+# ---------------------------------------------------------------------------
+# Engine x channel: shifted rules ride the overlap runtime bit-exactly
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(RULE_CONFIGS))
+def test_rule_round_async_drained_bit_exact_vs_mesh(name):
+    """For every rule, ``round`` over the bucketed AsyncChannel (drained
+    synchronously) is bit-exact with MeshChannel — across bucket
+    granularities.  This is what makes shifted modes SUPPORTED on the
+    overlap runtime rather than silently serialized or wrong."""
+    q, rule = _rule_and_q(name)
+    key = jax.random.PRNGKey(7)
+    wtree = _wtree(key)
+    h, h_bar = rule.init(wtree), rule.init_bar(wtree)
+    ref = rule.round(q, key, wtree, h, h_bar,
+                     channel=MeshChannel(mode="dense"))
+    for budget in (1, 64, 1 << 30):
+        ach = AsyncChannel(mode="dense", bucket_bytes=budget)
+        out = rule.round(q, key, wtree, h, h_bar, channel=ach)
+        _assert_trees_equal(ref[:3], out[:3])
+        assert float(ref[3]) == float(out[3])
+
+
+@pytest.mark.parametrize("name", sorted(RULE_CONFIGS))
+def test_async_interleaved_schedule_matches_default_schedule(name):
+    """AsyncChannel.shift_round (message/reduce interleaved per bucket)
+    equals the DEFAULT whole-tree schedule run over the same channel:
+    the override re-schedules, never re-derives keys or math."""
+    q, rule = _rule_and_q(name)
+    key = jax.random.PRNGKey(8)
+    wtree = _wtree(key)
+    h, h_bar = rule.init(wtree), rule.init_bar(wtree)
+    ach = AsyncChannel(mode="dense", bucket_bytes=64)
+    base = Channel.shift_round(ach, rule, q, key, wtree, h, h_bar)
+    over = ach.shift_round(rule, q, key, wtree, h, h_bar)
+    _assert_trees_equal(base[:3], over[:3])
+    assert float(base[3]) == float(over[3])
+
+
+def test_sim_channel_round_is_exact_worker_mean():
+    """SimChannel aggregation is the exact mean: with the Identity codec
+    and zero shifts, fixed-rule g_bar equals mean(wgrads)."""
+    from repro.core.compressors import Identity
+
+    key = jax.random.PRNGKey(9)
+    wtree = _wtree(key)
+    rule = make_shift_rule("fixed")
+    g_bar, _, _, bits = rule.round(Identity(), key, wtree, None, None,
+                                   channel=SimChannel())
+    _assert_trees_equal(g_bar, tmap(lambda a: jnp.mean(a, axis=0), wtree))
+    assert float(bits) > 0
+
+
+def test_legacy_step_shim_matches_round():
+    """The deprecated ``step`` entry (h-only state) returns the same
+    estimator/shift/bits as ``round`` with the mean-h h_bar."""
+    q, rule = _rule_and_q("diana")
+    key = jax.random.PRNGKey(10)
+    wtree = _wtree(key)
+    h = rule.init(wtree)
+    h_bar = tmap(lambda a: jnp.mean(a, axis=0), h)
+    g1, h1, b1 = rule.step(q, key, wtree, h)
+    g2, h2, _, b2 = rule.round(q, key, wtree, h, h_bar)
+    _assert_trees_equal((g1, h1), (g2, h2))
+    assert float(b1) == float(b2)
+
+
+# ---------------------------------------------------------------------------
+# Trainer x reference: the production step IS the reference algebra
+# ---------------------------------------------------------------------------
+
+
+def _train_setup(comp, lr=1e-2):
+    cfg = get_smoke_config("qwen3-0.6b").with_(dtype="float32")
+    tcfg = TrainConfig(learning_rate=lr, total_steps=10, warmup_steps=2,
+                       compression=comp)
+    mesh = make_host_mesh()
+    w = n_workers(mesh)
+    return cfg, tcfg, mesh, w
+
+
+@pytest.mark.parametrize("comm_mode", ["sim", "dense"])
+@pytest.mark.parametrize("name", sorted(RULE_CONFIGS))
+def test_train_step_bit_exact_vs_reference_rule(name, comm_mode):
+    """THE harness: the jitted production train_step reproduces the
+    reference ``DCGDShift`` round (same rule object, same channel, same
+    key derivation) EXACTLY — params, h, h_bar, bits — for every rule
+    x {SimChannel, MeshChannel}."""
+    import dataclasses
+
+    comp = dataclasses.replace(RULE_CONFIGS[name], comm_mode=comm_mode)
+    cfg, tcfg, mesh, w = _train_setup(comp)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg, w)
+    step = jax.jit(build_train_step(cfg, tcfg, mesh, w))
+
+    channel = build_channel(comp, cfg, mesh, w)
+    q, rule = comp.make(learning_rate=tcfg.learning_rate)
+    optimizer = make_optimizer(tcfg)
+    method = DCGDShift(q=q, rule=rule, channel=channel)
+
+    def loss_fn(p, b):
+        return M.train_loss(p, cfg, b)
+
+    def ref_step(state, batch):
+        grads, _, _ = per_worker_grads(loss_fn, state.params,
+                                       split_batch(batch, w))
+        g_bar, ref = method.estimate(
+            DCGDState(h=state.h, h_bar=state.h_bar, key=state.key,
+                      step=state.step, bits=state.bits),
+            grads,
+        )
+        new_params, opt = optimizer.update(g_bar, state.opt, state.params)
+        return TrainState(new_params, opt, ref.h, ref.h_bar, ref.key,
+                          ref.step, ref.bits)
+
+    ref_jit = jax.jit(ref_step)
+    stream = TokenStream(cfg, 32, 4)
+    for i in range(2):
+        batch = stream.batch(i)
+        got, _ = step(state, batch)
+        want = ref_jit(state, batch)
+        _assert_trees_equal(
+            (got.params, got.h, got.h_bar, got.bits, got.key),
+            (want.params, want.h, want.h_bar, want.bits, want.key),
+        )
+        state = got
+
+
+def test_train_step_vr_gdci_bit_exact_vs_reference():
+    """Algorithm 2 (compressed iterates): the trainer plumbs TrainState
+    through ``VRGDCI.round`` — compare against the core object driving
+    the same grads."""
+    comp = CompressionConfig(enabled=True, compressor="natural",
+                             shift_rule="vr_gdci", shift_alpha=0.5,
+                             gdci_eta=0.9)
+    cfg, tcfg, mesh, w = _train_setup(comp, lr=0.2)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg, w)
+    step = jax.jit(build_train_step(cfg, tcfg, mesh, w))
+    channel = build_channel(comp, cfg, mesh, w)
+    _, rule = comp.make(learning_rate=tcfg.learning_rate)
+
+    def loss_fn(p, b):
+        return M.train_loss(p, cfg, b)
+
+    def ref_step(state, batch):
+        grads, _, _ = per_worker_grads(loss_fn, state.params,
+                                       split_batch(batch, w))
+        key, sub = jax.random.split(state.key)
+        new_params, h, h_bar, bits = rule.round(
+            sub, state.params, grads, state.h, state.h_bar, channel
+        )
+        return new_params, h, h_bar, state.bits + bits, key
+
+    ref_jit = jax.jit(ref_step)
+    stream = TokenStream(cfg, 32, 4)
+    for i in range(2):
+        batch = stream.batch(i)
+        got, _ = step(state, batch)
+        want = ref_jit(state, batch)
+        _assert_trees_equal(
+            (got.params, got.h, got.h_bar, got.bits, got.key), want
+        )
+        state = got
+
+
+def test_train_step_fixed_rule_allocates_no_shift_state():
+    """Stateless rules keep h/h_bar = None in TrainState — no worker-
+    stacked shift tensors for plain DCGD."""
+    comp = CompressionConfig(enabled=True, compressor="natural",
+                             shift_rule="fixed")
+    cfg, tcfg, mesh, w = _train_setup(comp)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg, w)
+    assert state.h is None and state.h_bar is None
+
+
+# ---------------------------------------------------------------------------
+# Satellites: structural refresh bits, registry errors, efbv plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_rand_diana_refresh_bits_are_structural():
+    """The refresh cost charges the leaves' TRUE dtype widths (wire_bits
+    of a dense payload), not a hand-written 32*d: a bf16 leaf is charged
+    16 bits/scalar."""
+    rule = make_shift_rule("rand_diana", p=1.0)  # always fires
+    w = 4
+    wtree = {
+        "f32": jnp.ones((w, 40), jnp.float32),
+        "bf16": jnp.ones((w, 3, 5), jnp.bfloat16),
+    }
+    per_worker = 40 * 32 + 15 * 16
+    assert dense_message_bits(wtree) == float(per_worker)
+    assert dense_message_bits(wtree) == float(
+        sum(
+            wire_bits(jax.ShapeDtypeStruct(a.shape[1:], a.dtype))
+            for a in jax.tree_util.tree_leaves(wtree)
+        )
+    )
+    refresh, extra = rule.aux(jax.random.PRNGKey(0), wtree, rule.init(wtree))
+    assert bool(jnp.all(refresh))  # p=1: every worker fired
+    assert float(extra) == float(w * per_worker)
+
+
+def test_make_shift_rule_rejects_unknown_naming_rules():
+    with pytest.raises(ValueError) as ei:
+        make_shift_rule("carrier_pigeon")
+    msg = str(ei.value)
+    for name in ("fixed", "diana", "rand_diana", "ef21", "efbv", "star"):
+        assert name in msg
+
+
+def test_config_make_rejects_unknown_naming_rules():
+    cfg = CompressionConfig(shift_rule="carrier_pigeon")
+    with pytest.raises(ValueError) as ei:
+        cfg.make()
+    msg = str(ei.value)
+    for name in ("fixed", "diana", "rand_diana", "ef21", "efbv", "vr_gdci"):
+        assert name in msg
+
+
+def test_config_make_vr_gdci_requires_learning_rate():
+    cfg = CompressionConfig(shift_rule="vr_gdci")
+    with pytest.raises(ValueError, match="learning_rate"):
+        cfg.make()
+    from repro.core.iterate_comp import VRGDCI
+
+    _, rule = cfg.make(learning_rate=0.1)
+    assert isinstance(rule, VRGDCI) and rule.gamma == 0.1
+
+
+def test_efbv_comm_mode_config_plumbing():
+    cfg = CompressionConfig(comm_mode="efbv", compressor="topk",
+                            compressor_kwargs=(("q", 0.25),),
+                            efbv_eta=0.5, efbv_nu=0.9)
+    assert cfg.effective_shift_rule == "efbv"
+    assert cfg.aggregation_mode == "dense"
+    q, rule = cfg.make()
+    assert isinstance(rule, EFBVShift)
+    assert rule.eta == 0.5 and rule.nu == 0.9
+    ch = make_channel(cfg)
+    assert isinstance(ch, MeshChannel) and ch.mode == "dense"
+
+    ov = CompressionConfig(comm_mode="efbv_overlap",
+                           overlap_bucket_bytes=12345)
+    assert ov.effective_shift_rule == "efbv"
+    assert ov.aggregation_mode == "q8_ring_fused"
+    ch = make_channel(ov)
+    assert isinstance(ch, AsyncChannel) and ch.bucket_bytes == 12345
+
+    from repro.comm import collective_payload_scale
+
+    scale = collective_payload_scale(cfg)
+    assert 0.0 < scale["all-reduce"] < 1.0
+
+
+def test_efbv_unit_knobs_identical_to_ef21():
+    """eta = nu = 1 is EXACTLY EF21 — same message keys, bitwise-equal
+    estimator, shifts and bits."""
+    key = jax.random.PRNGKey(3)
+    wtree = _wtree(key)
+    c = TopK(0.25)
+    ef, bv = EF21Shift(), EFBVShift(eta=1.0, nu=1.0)
+    h, h_bar = ef.init(wtree), ef.init_bar(wtree)
+    o1 = ef.round(c, key, wtree, h, h_bar)
+    o2 = bv.round(c, key, wtree, h, h_bar)
+    _assert_trees_equal(o1[:3], o2[:3])
+    assert float(o1[3]) == float(o2[3])
+
+
+def test_stepsize_efbv_reduces_to_ef21_and_damps_variance():
+    from repro.core import efbv_params, stepsize_ef21, stepsize_efbv
+
+    assert stepsize_efbv(10.0, 12.0, delta=0.25) == \
+        stepsize_ef21(10.0, 12.0, 0.25)
+    # undamped unbiased recursion has no contraction certificate
+    assert stepsize_efbv(10.0, 12.0, omega=3.0, eta=1.0) == 0.0
+    # the recommended damping restores one
+    eta, nu = efbv_params(omega=3.0)
+    assert eta == pytest.approx(0.25) and nu == 1.0
+    assert stepsize_efbv(10.0, 12.0, omega=3.0, eta=eta, nu=nu) > 0.0
+    # contractive-only compressors keep the EF21 choice
+    assert efbv_params(delta=0.25) == (1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the efbv comm modes through the train CLI (8 fake devices)
+# ---------------------------------------------------------------------------
+
+
+_EFBV_CLI = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.launch.train import main
+    state = main(["--arch", "qwen3-0.6b", "--smoke", "--steps", "2",
+                  "--batch", "8", "--seq", "32",
+                  "--compressor", "topk", "--comm_mode", "efbv",
+                  "--efbv_eta", "0.9", "--efbv_nu", "0.95"])
+    assert np.isfinite(float(state.bits)) and float(state.bits) > 0
+    assert state.h is not None  # EF-BV shift state allocated (8 workers)
+    import jax
+    assert jax.tree_util.tree_leaves(state.h)[0].shape[0] == 8
+    print("EFBV_CLI_OK")
+""")
+
+
+def test_train_cli_efbv_8dev_subprocess():
+    """--comm_mode efbv end-to-end through the train CLI on 8 fake
+    devices (the acceptance path for the EF-BV comm mode)."""
+    r = subprocess.run(
+        [sys.executable, "-c", _EFBV_CLI],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd=_REPO_ROOT,
+    )
+    assert "EFBV_CLI_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]
+
+
+_EFBV_OVERLAP_CLI = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.launch.train import main
+    state = main(["--arch", "qwen3-0.6b", "--smoke", "--steps", "2",
+                  "--batch", "8", "--seq", "32",
+                  "--compressor", "natural", "--comm_mode", "efbv_overlap"])
+    assert np.isfinite(float(state.bits)) and float(state.bits) > 0
+    assert state.h is not None
+    print("EFBV_OVERLAP_CLI_OK")
+""")
+
+
+def test_train_cli_efbv_overlap_8dev_subprocess():
+    """--comm_mode efbv_overlap: a SHIFTED rule riding the bucketed
+    Pallas-fused overlap runtime end-to-end (the capability PR-3 lacked
+    — its overlap mode composed with shift-free aggregation only)."""
+    r = subprocess.run(
+        [sys.executable, "-c", _EFBV_OVERLAP_CLI],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd=_REPO_ROOT,
+    )
+    assert "EFBV_OVERLAP_CLI_OK" in r.stdout, (
+        r.stdout[-2000:] + r.stderr[-3000:]
+    )

@@ -14,6 +14,7 @@ import pytest
 from repro.core import (
     DCGDShift,
     EF21Shift,
+    EFBVShift,
     FixedShift,
     DianaShift,
     GDCI,
@@ -24,11 +25,13 @@ from repro.core import (
     StarShift,
     TopK,
     VRGDCI,
+    efbv_params,
     rand_diana_default_p,
     stepsize_dcgd_fixed,
     stepsize_dcgd_star,
     stepsize_diana,
     stepsize_ef21,
+    stepsize_efbv,
     stepsize_gdci,
     stepsize_rand_diana,
     stepsize_vr_gdci,
@@ -148,6 +151,58 @@ def test_ef21_topk_converges_where_dcgd_topk_stalls(ridge):
     dcgd_tail = float(np.median(tr_dc.rel_err[-1000:]))
     assert dcgd_tail > 1e-4, dcgd_tail      # the bias floor (no feedback)
     assert tr_ef.rel_err[-1] < 1e-3 * dcgd_tail
+
+
+def test_efbv_unit_knobs_trajectory_identical_to_ef21(ridge):
+    """EF-BV with eta = nu = 1 IS EF21: the whole optimization
+    trajectory (errors and bits) matches bitwise."""
+    c = TopK(0.1)
+    gamma = 16.0 * stepsize_ef21(ridge.L, ridge.L_max, c.delta(ridge.d))
+    tr_ef = run_dcgd_shift(ridge, DCGDShift(q=c, rule=EF21Shift()),
+                           gamma, 2000, seed=0)
+    tr_bv = run_dcgd_shift(
+        ridge, DCGDShift(q=c, rule=EFBVShift(eta=1.0, nu=1.0)),
+        gamma, 2000, seed=0,
+    )
+    np.testing.assert_array_equal(tr_ef.rel_err, tr_bv.rel_err)
+    np.testing.assert_array_equal(tr_ef.bits, tr_bv.bits)
+
+
+def test_efbv_biased_topk_converges_exactly(ridge):
+    """The EF21 side of the unification: biased Top-K with the
+    recommended (eta, nu) converges linearly to the exact optimum under
+    the tuned-gamma protocol (same as the EF21 theorem test)."""
+    c = TopK(0.1)
+    eta, nu = efbv_params(delta=c.delta(ridge.d))
+    gamma = 16.0 * stepsize_efbv(ridge.L, ridge.L_max,
+                                 delta=c.delta(ridge.d), eta=eta, nu=nu)
+    tr = run_dcgd_shift(
+        ridge, DCGDShift(q=c, rule=EFBVShift(eta=eta, nu=nu)),
+        gamma, 12000, seed=0,
+    )
+    assert tr.rel_err[-1] < 1e-8, tr.rel_err[-1]
+    assert tr.rel_err[-1] < 0.05 * tr.rel_err[6000]  # still contracting
+
+
+def test_efbv_damped_unbiased_randk_converges_exactly(ridge):
+    """The DIANA side: an UNBIASED non-contractive Rand-K, for which the
+    undamped (EF21) recursion certifies nothing (stepsize_efbv returns
+    0 at eta=1), converges exactly once damped to eta = 1/(1+omega) —
+    the variance-reduction mechanism EF-BV adds over EF21."""
+    u = RandK(0.25)
+    omega = u.omega(ridge.d)
+    assert stepsize_efbv(ridge.L, ridge.L_max, omega=omega, eta=1.0) == 0.0
+    eta, nu = efbv_params(omega=omega)
+    gamma = 16.0 * stepsize_efbv(ridge.L, ridge.L_max, omega=omega,
+                                 eta=eta, nu=nu)
+    tr = run_dcgd_shift(
+        ridge, DCGDShift(q=u, rule=EFBVShift(eta=eta, nu=nu)),
+        gamma, 12000, seed=0,
+    )
+    # exact convergence: through 1e-6 well within budget, down to the
+    # f32 floor by the end (no variance neighborhood anywhere above it)
+    assert tr.steps_to_tol(1e-6) < 4000, tr.rel_err[-1]
+    assert tr.rel_err[-1] < 1e-10, tr.rel_err[-1]
 
 
 def test_theorem5_gdci_neighborhood(ridge):

@@ -2,6 +2,9 @@
 
 from __future__ import annotations
 
+import json
+import os
+
 import numpy as np
 
 from repro.core import (
@@ -58,6 +61,29 @@ def tuned_run(run_fn, multipliers=(1, 2, 4, 8, 16), tol=1e-6):
         if it < best_iters:
             best_bits, best_iters, best_trace = b, it, tr
     return best_bits, best_iters, best_trace
+
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def finite_or_none(x):
+    """inf/nan -> None so bench artifacts stay STRICT JSON (json.dump
+    would happily emit a bare ``Infinity`` token, which RFC 8259
+    parsers — jq, JSON.parse — reject); None means 'no finite value'."""
+    x = float(x)
+    return x if x == x and abs(x) != float("inf") else None
+
+
+def write_bench_json(name: str, results) -> str:
+    """Write one machine-readable ``BENCH_*.json`` next to the repo root
+    (the CI-artifact convention every bench shares).  ``allow_nan=False``:
+    fail loudly HERE rather than shipping a non-JSON artifact if a
+    non-finite value ever slips past ``finite_or_none``."""
+    path = os.path.join(REPO_ROOT, name)
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True, allow_nan=False)
+    print(f"wrote {path}")
+    return path
 
 
 def fmt_bits(b: float) -> str:

@@ -20,10 +20,13 @@ algorithm-quality trajectory is tracked run over run.
 
 from __future__ import annotations
 
-import json
-import os
-
-from benchmarks.common import fmt_bits, print_table, tuned_run
+from benchmarks.common import (
+    finite_or_none as _finite,
+    fmt_bits,
+    print_table,
+    tuned_run,
+    write_bench_json,
+)
 from repro.core import (
     DCGDShift,
     DianaShift,
@@ -41,16 +44,7 @@ from repro.data.problems import make_ridge
 
 TOL = 1e-6
 STEPS = 20_000
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-OUT_JSON = os.path.join(REPO, "BENCH_efbv.json")
-
-
-def _finite(x: float):
-    """inf -> None so the artifact stays STRICT JSON (json.dump would
-    happily emit a bare ``Infinity`` token, which RFC 8259 parsers —
-    jq, JSON.parse — reject); None means 'did not reach tol'."""
-    x = float(x)
-    return x if x == x and abs(x) != float("inf") else None
+OUT_JSON = "BENCH_efbv.json"
 
 
 def main(steps: int = STEPS):
@@ -120,17 +114,13 @@ def main(steps: int = STEPS):
                      f"{it_b:.0f}", fmt_bits(bits_b),
                      f"{it_d:.0f}", fmt_bits(bits_d), "diana"))
 
-    with open(OUT_JSON, "w") as f:
-        # allow_nan=False: fail loudly here rather than shipping a
-        # non-JSON artifact if a non-finite value ever slips through
-        json.dump(results, f, indent=2, sort_keys=True, allow_nan=False)
     print_table(
         "EF-BV vs the mechanisms it unifies (bits/iters to rel_err <= 1e-6)",
         ["compressor", "EF-BV iters", "EF-BV bits",
          "baseline iters", "baseline bits", "baseline"],
         rows,
     )
-    print(f"wrote {OUT_JSON}")
+    write_bench_json(OUT_JSON, results)
     return results
 
 

@@ -27,11 +27,10 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import print_table
+from benchmarks.common import REPO_ROOT as REPO, print_table, write_bench_json
 
 STEPS = 20
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-OUT_JSON = os.path.join(REPO, "BENCH_overlap.json")
+OUT_JSON = "BENCH_overlap.json"
 
 _CHILD = """
 import os
@@ -104,8 +103,7 @@ def main(steps: int = STEPS, smoke: bool = False):
             f"overlap bench child failed:\n{r.stdout}\n{r.stderr[-3000:]}"
         )
     results = json.loads(line[len("BENCH_JSON "):])
-    with open(OUT_JSON, "w") as f:
-        json.dump(results, f, indent=2, sort_keys=True)
+    write_bench_json(OUT_JSON, results)
     rows = [
         (
             mode,
@@ -122,7 +120,6 @@ def main(steps: int = STEPS, smoke: bool = False):
         ["mode", "step", "collective bytes", "vs dense msg", "buckets"],
         rows,
     )
-    print(f"wrote {OUT_JSON}")
     return results
 
 

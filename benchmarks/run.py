@@ -21,11 +21,12 @@ def main(argv=None):
                     help="tiny-config run of every suite (CI smoke)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig2,fig4,table1,"
-                         "gdci,ef21,efbv,kernels,overlap,roofline")
+                         "gdci,ef21,efbv,kernels,overlap,autotune,roofline")
     args = ap.parse_args(argv)
     scale = 50 if args.smoke else (4 if args.fast else 1)
 
     from benchmarks import (
+        autotune_bench,
         ef21_bench,
         efbv_bench,
         fig1_ridge,
@@ -49,6 +50,9 @@ def main(argv=None):
         "kernels": lambda: kernels_bench.main(smoke=args.smoke),
         "overlap": lambda: overlap_bench.main(
             steps=overlap_bench.STEPS // scale, smoke=args.smoke),
+        "autotune": lambda: autotune_bench.main(
+            iters=max(2, autotune_bench.ITERS // (2 if scale > 1 else 1)),
+            smoke=args.smoke),
         "roofline": roofline_report.main,
     }
     only = set(args.only.split(",")) if args.only else set(suites)

@@ -17,6 +17,7 @@ from repro.comm.channel import (
     aggregation_mode_of,
     collective_payload_scale,
     make_channel,
+    resync_h_bar,
 )
 from repro.comm.overlap import (
     DEFAULT_BUCKET_BYTES,
@@ -49,5 +50,6 @@ __all__ = [
     "encode_workers",
     "make_channel",
     "plan_buckets",
+    "resync_h_bar",
     "worker_keys",
 ]

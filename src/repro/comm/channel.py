@@ -163,6 +163,7 @@ class MeshChannel(Channel):
     mesh: Any = None
     randk_q: float = 0.05
     wspecs: Any = None
+    q8_block_rows: Optional[int] = None  # fused-q8 scale block (None=default)
 
     def __post_init__(self):
         if self.mode not in AGGREGATION_MODES:
@@ -177,6 +178,7 @@ class MeshChannel(Channel):
         return compressed_tree_mean(
             wtree, self.mode, key, self.mesh,
             randk_q=self.randk_q, wspecs=self.wspecs,
+            q8_block_rows=self.q8_block_rows,
         )
 
 
@@ -196,7 +198,8 @@ def aggregation_mode_of(mode_or_cfg) -> str:
 
 
 def make_channel(mode_or_cfg="dense", mesh=None, *, randk_q: float = 0.05,
-                 wspecs=None, bucket_bytes: Optional[int] = None) -> Channel:
+                 wspecs=None, bucket_bytes: Optional[int] = None,
+                 q8_block_rows: Optional[int] = None) -> Channel:
     """Build a Channel from a comm-mode string or a CompressionConfig.
 
     ``"sim"`` gives the parameter-server SimChannel; the overlap modes
@@ -209,6 +212,17 @@ def make_channel(mode_or_cfg="dense", mesh=None, *, randk_q: float = 0.05,
     error deep in a collective.
     """
     comm_mode = getattr(mode_or_cfg, "comm_mode", mode_or_cfg)
+    if comm_mode == "auto":
+        if getattr(mode_or_cfg, "enabled", True):
+            raise ValueError(
+                "comm_mode 'auto' is a tuner sentinel, not a transport: "
+                "resolve it to a concrete mode first (repro.tune.autotune "
+                "+ apply_plan, or `train.py --comm_mode auto` which does "
+                "both)"
+            )
+        # a DISABLED config never resolves: its transport is the dense
+        # mean, exactly as CompressionConfig.aggregation_mode reports
+        comm_mode = "dense"
     if isinstance(comm_mode, str) and comm_mode not in CHANNEL_MODES:
         raise ValueError(
             f"unknown comm mode {comm_mode!r}; have channel modes "
@@ -226,6 +240,8 @@ def make_channel(mode_or_cfg="dense", mesh=None, *, randk_q: float = 0.05,
         randk_q = mode_or_cfg.randk_q
         if bucket_bytes is None:
             bucket_bytes = getattr(mode_or_cfg, "overlap_bucket_bytes", None)
+        if q8_block_rows is None:
+            q8_block_rows = getattr(mode_or_cfg, "q8_block_rows", None)
     mode = aggregation_mode_of(mode_or_cfg)
     if comm_mode in OVERLAP_MODES:
         from repro.comm.overlap import DEFAULT_BUCKET_BYTES, AsyncChannel
@@ -234,8 +250,33 @@ def make_channel(mode_or_cfg="dense", mesh=None, *, randk_q: float = 0.05,
             mode=mode, mesh=mesh, randk_q=randk_q, wspecs=wspecs,
             bucket_bytes=(DEFAULT_BUCKET_BYTES if bucket_bytes is None
                           else bucket_bytes),
+            q8_block_rows=q8_block_rows,
         )
-    return MeshChannel(mode=mode, mesh=mesh, randk_q=randk_q, wspecs=wspecs)
+    return MeshChannel(mode=mode, mesh=mesh, randk_q=randk_q, wspecs=wspecs,
+                       q8_block_rows=q8_block_rows)
+
+
+def resync_h_bar(h, h_bar, step, every: int):
+    """Bound the shift-tracking drift of lossy aggregation.
+
+    Stateful rules track the master shift INCREMENTALLY
+    (``h_bar += eta * m_bar``), so lossy aggregation formats
+    (``randk_shared``, the q8 rings) make ``h_bar - mean_i h_i`` a
+    zero-mean random walk of the per-step aggregation noise (see the
+    ARCHITECTURE.md "Algorithm layer" footnote).  Every ``every`` rounds
+    — on steps where ``step % every == every - 1`` — this replaces
+    ``h_bar`` with the DENSE reduce (exact worker mean) of the current
+    shifts, resetting the walk to zero at the cost of one uncompressed
+    collective per window.  ``every <= 0`` (the config default) and
+    stateless rules (``h``/``h_bar`` None) are no-ops; ``lax.cond``
+    keeps the dense reduce off the non-firing steps.
+    """
+    if every <= 0 or h is None or h_bar is None:
+        return h_bar
+    from repro.dist.collectives import dense_mean
+
+    fire = (step % every) == (every - 1)
+    return jax.lax.cond(fire, lambda: dense_mean(h), lambda: h_bar)
 
 
 def collective_payload_scale(cfg, d_nominal: int = 1_000_000) -> dict:

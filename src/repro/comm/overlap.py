@@ -135,6 +135,7 @@ class AsyncChannel(Channel):
     randk_q: float = 0.05
     wspecs: Any = None
     bucket_bytes: int = DEFAULT_BUCKET_BYTES
+    q8_block_rows: Optional[int] = None  # fused-q8 scale block (None=default)
 
     def __post_init__(self):
         if self.mode not in AGGREGATION_MODES:
@@ -171,6 +172,7 @@ class AsyncChannel(Channel):
             sub, self.mode, key, self.mesh,
             randk_q=self.randk_q, wspecs=sub_specs,
             leaf_indices=bucket.indices,
+            q8_block_rows=self.q8_block_rows,
         )
         return Handle(bucket, tuple(outs))
 

@@ -131,7 +131,16 @@ class CompressionConfig:
     densely) and override ``shift_rule``; ``q8_ring_overlap`` /
     ``efbv_overlap`` select the bucketed overlapped AsyncChannel over
     the Pallas-fused q8 ring (``overlap_bucket_bytes`` sets its
-    per-bucket budget, in uncompressed per-worker message bytes).
+    per-bucket budget, in uncompressed per-worker message bytes);
+    ``auto`` is the TUNER sentinel — ``repro.tune.autotune`` resolves
+    it to a concrete mode (and sets ``overlap_bucket_bytes`` /
+    ``randk_q`` / ``q8_block_rows`` / ``efbv_eta``/``efbv_nu``) from a
+    calibrated cost model before any channel is built.
+
+    ``drift_resync_every`` bounds the shift-tracking drift of stateful
+    rules over LOSSY aggregation: every N rounds the trainer replaces
+    the incrementally-tracked ``h_bar`` with a dense reduce of the
+    worker shifts (``repro.comm.resync_h_bar``); 0 disables.
     """
     enabled: bool = True
     compressor: str = "natural"    # see core.compressors.make_compressor
@@ -146,8 +155,11 @@ class CompressionConfig:
     efbv_nu: float = 1.0           # EF-BV estimator mixing
     comm_mode: str = "dense"       # dense | q8_ring | randk_shared | ef21
                                    # | efbv | q8_ring_overlap | efbv_overlap
+                                   # | auto (tuner-resolved; see repro.tune)
     randk_q: float = 0.05          # keep-fraction for randk_shared
     overlap_bucket_bytes: int = 4 << 20  # AsyncChannel bucket budget
+    q8_block_rows: int = 64        # fused-q8 scale-block rows (autotuned)
+    drift_resync_every: int = 0    # dense h_bar resync period (0 = off)
 
     @property
     def effective_shift_rule(self) -> str:
@@ -166,6 +178,11 @@ class CompressionConfig:
         per-worker contractive messages)."""
         if not self.enabled:
             return "dense"
+        if self.comm_mode == "auto":
+            raise ValueError(
+                "comm_mode 'auto' has no aggregation format until the "
+                "tuner resolves it (repro.tune.autotune + apply_plan)"
+            )
         from repro.comm.channel import aggregation_mode_of
 
         return aggregation_mode_of(self.comm_mode)

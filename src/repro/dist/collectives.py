@@ -344,6 +344,7 @@ def compressed_tree_mean(
     randk_q: float = 0.05,
     wspecs=None,
     leaf_indices: Optional[Sequence[int]] = None,
+    q8_block_rows: Optional[int] = None,
 ):
     """Worker-mean of a stacked tree in the configured wire format.
 
@@ -351,7 +352,9 @@ def compressed_tree_mean(
     q8_ring | q8_ring_fused``) or a ``CompressionConfig``, in which case
     its effective aggregation mode and ``randk_q`` fields are used (a
     disabled config and the ``ef21`` comm mode both aggregate densely;
-    ``q8_ring_overlap`` aggregates ``q8_ring_fused``).  Prefer
+    ``q8_ring_overlap`` aggregates ``q8_ring_fused``).
+    ``q8_block_rows`` sets the fused codec's scale-block rows (None =
+    the kernel default) — a knob the autotuner searches.  Prefer
     ``repro.comm.make_channel(...).reduce_mean`` in new code.
     """
     from repro.comm.channel import AGGREGATION_MODES, aggregation_mode_of
@@ -370,7 +373,8 @@ def compressed_tree_mean(
         if mode == "q8_ring_fused":
             from repro.kernels.q8ring.ops import FusedQ8
 
-            codec = FusedQ8()
+            codec = (FusedQ8() if q8_block_rows is None
+                     else FusedQ8(block_rows=q8_block_rows))
         else:
             codec = Int8Stochastic()
         waxes = tuple(a for a in ("data",) if a in mesh.axis_names)

@@ -57,6 +57,39 @@ def skip_reason(arch: str, shape: InputShape) -> str | None:
     return None
 
 
+def tune_preview(cfg: ModelConfig, comp: CompressionConfig, mesh,
+                 analysis: Dict[str, Any], top: int = 5) -> Dict[str, Any]:
+    """Predicted-vs-chosen comm plans for this (arch x mesh) workload.
+
+    AOT-only: the tuner's predictor runs off this dry-run's loop-aware
+    HLO analysis, nominal TPU link/device rates, and structural wire
+    bits (``verify_top=0`` — nothing is timed on the dry-run host).
+    The full measured search belongs to ``--comm_mode auto`` at launch;
+    this preview shows what it WOULD choose next to what is configured.
+    """
+    from repro import tune
+    from repro.launch.mesh import n_workers
+
+    w = n_workers(mesh)
+    params_shapes = jax.eval_shape(
+        lambda k: M.init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    wlike = tmap(
+        lambda p: jax.ShapeDtypeStruct((w, *p.shape), p.dtype), params_shapes
+    )
+    plan = tune.search_plan(
+        comp, wlike, mesh, w, fingerprint="preview", analysis=analysis,
+        link=tune.LinkModel.nominal(), rates=tune.DeviceRates.nominal(),
+        verify_top=0,
+    )
+    return {
+        "configured_comm_mode": comp.comm_mode,
+        "predicted_choice": plan.comm_mode,
+        "predicted_step_s": plan.predicted_step_s,
+        "candidates": list(plan.candidates[:top]),
+    }
+
+
 def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
     """6*N*D for training, 2*N*D forward-only; N = active params."""
     n = M.count_params_analytic(cfg, active_only=True)
@@ -221,6 +254,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             "status": "ok",
             "lower_s": round(t_lower, 1),
             "compile_s": round(t_compile, 1),
+            # cost-model blind spots MUST be visible: a while whose trip
+            # count fell back to 1 silently under-counts that loop in
+            # every roofline/tuner number derived from this analysis
+            "cost_model": {
+                "unresolved_whiles": list(corrected["unresolved_whiles"]),
+                "while_trips": dict(corrected["while_trips"]),
+            },
             "memory": {
                 "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
                 "output_bytes": getattr(mem, "output_size_in_bytes", None),
@@ -230,6 +270,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             "roofline": roof,
             "collective_counts": coll.get("_counts"),
         })
+        if shape.kind == "train" and tcfg.compression.enabled:
+            rec["tune_preview"] = tune_preview(
+                cfg, tcfg.compression, mesh, corrected
+            )
         if save_hlo:
             with open(os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_tag}.hlo"), "w") as f:
                 f.write(hlo)
@@ -297,6 +341,25 @@ def main(argv=None):
                 elif status == "error":
                     extra = " " + rec["error"][:200]
                 print(f"=== {tag}: {status}{extra}", flush=True)
+                unresolved = (rec.get("cost_model") or {}).get(
+                    "unresolved_whiles") or []
+                if unresolved:
+                    print(f"    WARNING: {len(unresolved)} while loop(s) "
+                          f"with unresolved trip counts (fell back to 1): "
+                          f"{', '.join(unresolved[:4])}"
+                          f"{' ...' if len(unresolved) > 4 else ''} — "
+                          f"flops/bytes and tuner predictions under-count "
+                          f"these loops", flush=True)
+                tp = rec.get("tune_preview")
+                if tp:
+                    mark = ("  (matches configured)"
+                            if tp["predicted_choice"]
+                            == tp["configured_comm_mode"] else
+                            f"  (configured: {tp['configured_comm_mode']})")
+                    print(f"    tune preview: predicted choice "
+                          f"{tp['predicted_choice']} "
+                          f"@ {tp['predicted_step_s']:.3e}s/step{mark}",
+                          flush=True)
 
     n_ok = sum(r["status"] == "ok" for r in results)
     n_skip = sum(r["status"] == "skipped" for r in results)

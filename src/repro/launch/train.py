@@ -26,7 +26,17 @@ This is Algorithm 1 (DCGD-SHIFT) mapped onto the TPU mesh:
 
 CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
           [--comm_mode dense|randk_shared|q8_ring|q8_ring_overlap|ef21|\
-           efbv|efbv_overlap] ...
+           efbv|efbv_overlap|auto] [--autotune] [--tune_plan PLAN.json] ...
+
+``--comm_mode auto`` resolves through ``repro.tune``: fingerprint the
+(model x mesh x world-size x compressor) workload, reuse the cached
+``TunePlan`` on a hit, otherwise calibrate an alpha-beta link model by
+timed micro-reduces of the real leaf shapes, rank every candidate plan
+by predicted step time, verify the top few by measurement, and persist
+the winner (strict JSON under ``--tune_cache``).  ``--autotune`` forces
+a fresh search even on a hit; ``--tune_plan`` applies an explicit plan
+file; ``--tune_modes`` restricts the candidate grid (CI keeps measured
+candidates tiny — interpret-mode Pallas is slow on CPU).
 
 ``q8_ring_overlap`` / ``efbv_overlap`` route the round through
 ``comm.AsyncChannel``: reverse-layer byte-budget buckets over the
@@ -46,7 +56,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.comm import CHANNEL_MODES, make_channel
+from repro.comm import CHANNEL_MODES, make_channel, resync_h_bar
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import CompressionConfig, ModelConfig, TrainConfig
 from repro.core import SHIFT_RULES
@@ -176,6 +186,10 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int):
             g_bar, h, h_bar, step_bits = rule.round(
                 q, sub, grads, state.h, state.h_bar, channel
             )
+            # bound the shift-tracking drift of lossy aggregation: every
+            # N rounds h_bar resyncs to the exact worker mean of h
+            h_bar = resync_h_bar(h, h_bar, state.step,
+                                 comp.drift_resync_every)
             new_params, opt = optimizer.update(g_bar, state.opt, state.params)
             bits = state.bits + step_bits
 
@@ -234,6 +248,85 @@ def batch_pspecs(batch_shapes, mesh):
 # ---------------------------------------------------------------------------
 
 
+def dense_step_analysis(cfg: ModelConfig, mesh, w: int, lr: float,
+                        batch: int, seq: int):
+    """Loop-aware HLO cost of THIS run's train step with compression
+    disabled — the compute/memory time every tuner candidate shares, so
+    the overlap candidates' hide credit is charged against the real
+    backward pass (without it, compute_s is 0 and bucketed overlap can
+    never beat its own launch overhead).  Returns None (with a warning)
+    if the step cannot be lowered here — the search then ranks by comm
+    alone, exactly the pre-analysis behavior."""
+    from repro.launch import hlo_cost
+
+    try:
+        tcfg = TrainConfig(learning_rate=lr,
+                           compression=CompressionConfig(enabled=False))
+        step = build_train_step(cfg, tcfg, mesh, w)
+        state_shapes = jax.eval_shape(
+            lambda k: init_state(k, cfg, tcfg, w),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+        batch_shapes = tmap(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+            TokenStream(cfg, seq, batch).batch(0),
+        )
+        hlo = jax.jit(step).lower(state_shapes, batch_shapes).compile().as_text()
+        return hlo_cost.analyze(hlo)
+    except Exception as e:  # noqa: BLE001 — tuning must not kill training
+        print(f"tune: WARNING: dense-step HLO analysis failed "
+              f"({type(e).__name__}: {e}); ranking candidates by comm time "
+              f"only (overlap modes get no compute-hide credit)")
+        return None
+
+
+def resolve_comm_auto(comp: CompressionConfig, cfg: ModelConfig, mesh, w: int,
+                      *, plan_path=None, cache_dir=None, force=False,
+                      tune_modes=None, lr: float = 3e-4, batch: int = 8,
+                      seq: int = 128) -> CompressionConfig:
+    """Resolve ``comm_mode='auto'`` (or an explicit ``--tune_plan`` /
+    ``--autotune`` request) to a concrete CompressionConfig via
+    ``repro.tune``, printing what happened — the fingerprint, whether
+    the plan came from the cache, and the chosen knobs."""
+    from repro import tune
+
+    if plan_path:
+        plan = tune.load_plan(plan_path)
+        source = f"plan file {plan_path}"
+    else:
+        params_shapes = jax.eval_shape(
+            lambda k: M.init_params(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+        modes = (
+            tuple(m for m in tune_modes.split(",") if m)
+            if tune_modes else None
+        )
+        plan, hit = tune.autotune(
+            comp, params_shapes, mesh, w,
+            cache_dir=(cache_dir or tune.DEFAULT_CACHE_DIR),
+            force=force, modes=modes,
+            # evaluated LAZILY on a cache miss only: the HLO analysis
+            # (one dense-step lower+compile) and rate calibration are
+            # what give overlap candidates their compute-hide credit
+            analysis_fn=lambda: dense_step_analysis(
+                cfg, mesh, w, lr, batch, seq
+            ),
+            rates_fn=tune.calibrate_rates,
+        )
+        source = "cache hit" if hit else "searched"
+    resolved = tune.apply_plan(comp, plan)
+    measured = (f"{plan.measured_step_s:.3e}s"
+                if plan.measured_step_s is not None else "n/a")
+    print(f"tune: {source}  fingerprint={plan.fingerprint[:12]}  "
+          f"-> comm_mode={resolved.comm_mode} "
+          f"bucket={resolved.overlap_bucket_bytes} "
+          f"randk_q={resolved.randk_q:g} "
+          f"q8_block={resolved.q8_block_rows} "
+          f"(predicted {plan.predicted_step_s:.3e}s, measured {measured})")
+    return resolved
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -246,11 +339,32 @@ def main(argv=None):
     ap.add_argument("--shift-rule", "--shift_rule", dest="shift_rule",
                     default="diana", choices=list(SHIFT_RULE_CHOICES))
     ap.add_argument("--comm-mode", "--comm_mode", dest="comm_mode",
-                    default="dense", choices=list(COMM_MODES),
+                    default="dense", choices=list(COMM_MODES) + ["auto"],
                     help="Channel aggregation format; ef21/efbv select "
                          "the error-feedback modes (implying their rule); "
                          "the *_overlap modes run the bucketed "
-                         "AsyncChannel over the Pallas-fused q8 ring")
+                         "AsyncChannel over the Pallas-fused q8 ring; "
+                         "'auto' resolves through the repro.tune "
+                         "cost-model search (cached by fingerprint)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="force a fresh tune search even when a cached "
+                         "plan matches this workload's fingerprint")
+    ap.add_argument("--tune-plan", "--tune_plan", dest="tune_plan",
+                    default=None,
+                    help="apply an explicit TunePlan JSON (skips the "
+                         "search and the cache)")
+    ap.add_argument("--tune-cache", "--tune_cache", dest="tune_cache",
+                    default=None,
+                    help="plan-cache directory (default experiments/tune)")
+    ap.add_argument("--tune-modes", "--tune_modes", dest="tune_modes",
+                    default=None,
+                    help="comma-separated subset of tunable comm modes to "
+                         "search (keeps measured candidates tiny in CI)")
+    ap.add_argument("--drift-resync-every", "--drift_resync_every",
+                    dest="drift_resync_every", type=int, default=0,
+                    help="every N rounds resync h_bar from a dense reduce "
+                         "of the worker shifts (bounds shift-tracking "
+                         "drift over lossy aggregation; 0 = off)")
     ap.add_argument("--efbv-eta", "--efbv_eta", dest="efbv_eta",
                     type=float, default=1.0,
                     help="EF-BV shift integration rate (1.0 = EF21)")
@@ -270,14 +384,31 @@ def main(argv=None):
         comm_mode=args.comm_mode,
         efbv_eta=args.efbv_eta,
         efbv_nu=args.efbv_nu,
+        drift_resync_every=args.drift_resync_every,
     )
-    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
-                       warmup_steps=max(1, args.steps // 10),
-                       compression=comp)
     mesh = make_host_mesh()
     w = n_workers(mesh)
     if args.batch % w:
         raise SystemExit(f"--batch must be divisible by {w} workers")
+
+    if (args.autotune or args.tune_plan) and args.comm_mode != "auto":
+        # an explicit concrete --comm_mode would be SILENTLY replaced by
+        # the plan — make overriding it an explicit opt-in
+        raise SystemExit(
+            "--autotune/--tune_plan replace the communication plan; they "
+            "require --comm_mode auto (you passed "
+            f"--comm_mode {args.comm_mode})"
+        )
+    if comp.enabled and comp.comm_mode == "auto":
+        comp = resolve_comm_auto(
+            comp, cfg, mesh, w,
+            plan_path=args.tune_plan, cache_dir=args.tune_cache,
+            force=args.autotune, tune_modes=args.tune_modes,
+            lr=args.lr, batch=args.batch, seq=args.seq,
+        )
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(1, args.steps // 10),
+                       compression=comp)
 
     state = init_state(jax.random.PRNGKey(0), cfg, tcfg, w)
     step_fn = jax.jit(build_train_step(cfg, tcfg, mesh, w))

@@ -1,0 +1,176 @@
+"""repro.tune — the cost-model-driven communication autotuner.
+
+The right compression scheme is workload-dependent (the paper's whole
+point: shift rule x compressor variance x wire width vs. link speed),
+so this layer picks the communication plan instead of asking the user
+to hardcode one:
+
+  ``measure``   alpha-beta link model calibrated by timed micro-reduces
+                of the REAL leaf shapes, plus device compute rates.
+  ``model``     the step-time predictor: ``launch/hlo_cost`` loop-aware
+                entry cost + structural ``wire_bits`` from each comm
+                mode's own codec + ``plan_buckets`` launch counts.
+  ``search``    predict every candidate in {comm mode x bucket grid x
+                codec params (Rand-K keep-fraction, q8 scale block,
+                EF-BV eta/nu from estimated omega)}, verify the top few
+                by measurement, pick the measured winner.
+  ``plan``      the frozen ``TunePlan``: strict-JSON persistence and a
+                fingerprint cache keyed on model leaves x mesh x
+                world size x compressor.
+
+``autotune`` is the one-call entry ``launch/train.py`` uses for
+``--comm_mode auto``: fingerprint, cache lookup, search on miss, save.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+from repro.tune.measure import (
+    DEFAULT_MEASURE_BYTES_CAP,
+    DeviceRates,
+    LinkModel,
+    calibrate_link,
+    calibrate_rates,
+    measure_subtree,
+    synth_wtree,
+    time_fn,
+)
+from repro.tune.model import (
+    Candidate,
+    OVERLAP_HIDE,
+    StepPrediction,
+    TUNABLE_MODES,
+    compose_step_s,
+    comm_time_s,
+    compute_time_s,
+    predict_step,
+    predicted_wire_bits,
+    wire_codec,
+)
+from repro.tune.plan import (
+    PLAN_VERSION,
+    TunePlan,
+    apply_plan,
+    cache_path,
+    load_cached_plan,
+    load_plan,
+    plan_fingerprint,
+    save_plan,
+)
+from repro.tune.search import (
+    DEFAULT_BUCKET_GRID,
+    DEFAULT_RANDK_GRID,
+    default_candidates,
+    estimate_delta,
+    estimate_omega,
+    measure_candidate,
+    search_plan,
+)
+
+tmap = jax.tree_util.tree_map
+
+#: default on-disk home of the fingerprint cache
+DEFAULT_CACHE_DIR = os.path.join("experiments", "tune")
+
+
+def autotune(
+    comp,
+    params_like,
+    mesh,
+    w: int,
+    *,
+    cache_dir: str = DEFAULT_CACHE_DIR,
+    force: bool = False,
+    modes: Optional[Sequence[str]] = None,
+    verify_top: int = 2,
+    analysis: Optional[dict] = None,
+    analysis_fn=None,
+    link: Optional[LinkModel] = None,
+    rates: Optional[DeviceRates] = None,
+    rates_fn=None,
+    cap_bytes: int = DEFAULT_MEASURE_BYTES_CAP,
+    measure_iters: int = 3,
+    **search_kw,
+) -> Tuple[TunePlan, bool]:
+    """Resolve one workload to a ``TunePlan``: ``(plan, cache_hit)``.
+
+    ``params_like`` is the (unstacked) parameter tree — arrays or
+    ``ShapeDtypeStruct`` leaves; everything structural runs AOT off the
+    shapes, only calibration and top-candidate verification touch
+    devices.  ``force=True`` re-searches even on a fingerprint hit (the
+    ``--autotune`` CLI flag); a fresh plan always overwrites the cache
+    entry for its fingerprint.  ``analysis_fn``/``rates_fn`` are LAZY
+    suppliers of the HLO step analysis and device rates, called only on
+    a cache miss — a hit must stay free of lower/compile work.
+    """
+    # the search space is part of the cache key: a plan from a narrowed
+    # --tune_modes/grid run must MISS a later full-grid lookup
+    search_sig = {
+        "modes": "all" if modes is None else tuple(sorted(modes)),
+        "verify_top": verify_top,
+        **{k: search_kw[k] for k in
+           ("bucket_grid", "randk_grid", "q8_block_grid") if k in search_kw},
+    }
+    fp = plan_fingerprint(params_like, mesh, w, comp.compressor,
+                          comp.compressor_kwargs, search=search_sig)
+    if not force:
+        cached = load_cached_plan(cache_dir, fp)
+        if cached is not None:
+            return cached, True
+    if analysis is None and analysis_fn is not None:
+        analysis = analysis_fn()
+    if rates is None and rates_fn is not None and analysis is not None:
+        rates = rates_fn()
+    wlike = tmap(
+        lambda p: jax.ShapeDtypeStruct((w, *p.shape), p.dtype), params_like
+    )
+    plan = search_plan(
+        comp, wlike, mesh, w, fingerprint=fp, analysis=analysis, link=link,
+        rates=rates, modes=modes, verify_top=verify_top,
+        measure_iters=measure_iters, cap_bytes=cap_bytes, **search_kw,
+    )
+    save_plan(plan, cache_path(cache_dir, fp))
+    return plan, False
+
+
+__all__ = [
+    "Candidate",
+    "DEFAULT_BUCKET_GRID",
+    "DEFAULT_CACHE_DIR",
+    "DEFAULT_MEASURE_BYTES_CAP",
+    "DEFAULT_RANDK_GRID",
+    "DeviceRates",
+    "LinkModel",
+    "OVERLAP_HIDE",
+    "PLAN_VERSION",
+    "StepPrediction",
+    "TUNABLE_MODES",
+    "TunePlan",
+    "apply_plan",
+    "autotune",
+    "cache_path",
+    "calibrate_link",
+    "calibrate_rates",
+    "comm_time_s",
+    "compose_step_s",
+    "compute_time_s",
+    "default_candidates",
+    "estimate_delta",
+    "estimate_omega",
+    "load_cached_plan",
+    "load_plan",
+    "measure_candidate",
+    "measure_subtree",
+    "plan_fingerprint",
+    "predict_step",
+    "predicted_wire_bits",
+    "save_plan",
+    "search_plan",
+    "synth_wtree",
+    "time_fn",
+    "wire_codec",
+]

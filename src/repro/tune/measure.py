@@ -1,0 +1,193 @@
+"""Calibration: the alpha-beta link model and device compute rates.
+
+The tuner's comm predictions run on a classic alpha-beta cost model
+(latency + inverse-bandwidth, Hockney): one collective launch over a
+payload of B bytes costs ``alpha + B * beta`` per hop.  Rather than
+quoting datasheet numbers, ``calibrate_link`` FITS alpha and beta from
+timed micro-reduces of the REAL leaf shapes on the REAL mesh: a dense
+``reduce_mean`` of the smallest leaf (latency-dominated) and of the
+whole tree (bandwidth-dominated) give two (bytes, seconds) points; more
+subsets give an overdetermined least-squares fit.  On the CPU test
+meshes the numbers characterize the host's fake-device transport — the
+model's STRUCTURE (rank by payload + launch count) is what transfers to
+hardware, and the top candidates are verified by measurement anyway
+(``repro.tune.search``).
+
+``calibrate_rates`` times a jitted matmul and a big elementwise pass for
+the flops/s and HBM bytes/s the compute half of the predictor divides
+by.  ``LinkModel.nominal()`` / ``DeviceRates.nominal()`` provide
+TPU-scale constants for AOT-only paths (the dryrun preview) where
+nothing can be timed.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+tmap = jax.tree_util.tree_map
+
+#: cap on the worker-stacked bytes any single timed micro-reduce moves —
+#: calibration must stay micro (a 151k-vocab embedding stacked over 8
+#:  workers is not a micro-reduce on a CPU test mesh)
+DEFAULT_MEASURE_BYTES_CAP = 64 << 20
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    """alpha (s per collective launch/hop) + beta (s per byte per hop)."""
+
+    alpha_s: float
+    beta_s_per_byte: float
+
+    @classmethod
+    def nominal(cls) -> "LinkModel":
+        # TPU-pod-scale constants for AOT previews: ~10 us launch,
+        # ~100 GB/s per-link bandwidth
+        return cls(alpha_s=1e-5, beta_s_per_byte=1.0 / 100e9)
+
+
+@dataclass(frozen=True)
+class DeviceRates:
+    flops_per_s: float
+    hbm_bytes_per_s: float
+
+    @classmethod
+    def nominal(cls) -> "DeviceRates":
+        # TPU-scale: ~200 TFLOP/s bf16, ~800 GB/s HBM
+        return cls(flops_per_s=2e14, hbm_bytes_per_s=8e11)
+
+
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-clock seconds of ``fn(*args)`` (blocked until ready).
+
+    ``warmup`` calls absorb compile; the median over ``iters`` resists
+    the scheduler jitter that dominates short CPU timings.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _inner_bytes(leaf) -> int:
+    """Per-worker message bytes of one worker-stacked leaf."""
+    n = 1
+    for s in leaf.shape[1:]:
+        n *= s
+    return n * np.dtype(leaf.dtype).itemsize
+
+
+def synth_wtree(key: jax.Array, wtree_like, mesh=None):
+    """Concrete normal data matching a worker-stacked shape tree,
+    device_put with the leading axis over the mesh's data-like axes (the
+    layout the real gradient stack arrives in)."""
+    leaves, treedef = jax.tree_util.tree_flatten(wtree_like)
+    vals = [
+        jax.random.normal(jax.random.fold_in(key, i), leaf.shape,
+                          jnp.float32).astype(leaf.dtype)
+        for i, leaf in enumerate(leaves)
+    ]
+    tree = jax.tree_util.tree_unflatten(treedef, vals)
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        w = leaves[0].shape[0] if leaves else 0
+        nshards = 1
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for a in axes:
+            nshards *= sizes[a]
+        if axes and w % nshards == 0:
+            tree = jax.device_put(tree, NamedSharding(mesh, P(axes)))
+    return tree
+
+
+def measure_subtree(wtree_like, cap_bytes: int = DEFAULT_MEASURE_BYTES_CAP):
+    """The leaves a micro-reduce may move: reverse-layer order (the
+    bucketer's walk) until the WORKER-STACKED byte cap — real shapes,
+    bounded cost.  Always keeps at least one leaf."""
+    leaves = jax.tree_util.tree_leaves(wtree_like)
+    picked, total = [], 0
+    for leaf in reversed(leaves):
+        b = _inner_bytes(leaf) * leaf.shape[0]
+        if picked and total + b > cap_bytes:
+            break
+        picked.append(leaf)
+        total += b
+    return {f"leaf{i:03d}": l for i, l in enumerate(picked)}
+
+
+def calibrate_link(mesh, wtree_like, *, iters: int = 3,
+                   cap_bytes: int = DEFAULT_MEASURE_BYTES_CAP,
+                   key: Optional[jax.Array] = None) -> LinkModel:
+    """Fit the alpha-beta link model from timed dense micro-reduces of
+    the real leaf shapes (see module docstring).
+
+    Subsets: the single smallest leaf, the measure subtree, and (when
+    distinct) the single largest leaf within the cap — up to three
+    (bytes, seconds) points, least-squares fit, slope clamped >= 0.
+    """
+    from repro.comm import make_channel
+
+    key = jax.random.PRNGKey(7) if key is None else key
+    sub = measure_subtree(wtree_like, cap_bytes)
+    leaves = sorted(sub.values(), key=_inner_bytes)
+    subsets = [{"s": leaves[0]}]
+    if len(leaves) > 1:
+        subsets.append({"l": leaves[-1]})
+    if len(sub) > 1:
+        subsets.append(sub)
+
+    ch = make_channel("dense", mesh)
+    fn = jax.jit(ch.reduce_mean)
+    points = []
+    for subset in subsets:
+        tree = synth_wtree(key, subset, mesh)
+        t = time_fn(fn, key, tree, iters=iters)
+        # per-worker message bytes: the alpha-beta payload unit
+        points.append((float(sum(_inner_bytes(l) for l in subset.values())),
+                       t))
+    return fit_alpha_beta(points)
+
+
+def fit_alpha_beta(points: Sequence[tuple]) -> LinkModel:
+    """Least-squares ``t = alpha + bytes * beta`` over (bytes, seconds)
+    points; beta clamped >= 0 (timing noise on small subsets can invert
+    the slope) and alpha >= 0."""
+    xs = np.array([p[0] for p in points], dtype=np.float64)
+    ts = np.array([p[1] for p in points], dtype=np.float64)
+    if len(points) < 2 or float(xs.max() - xs.min()) == 0.0:
+        return LinkModel(alpha_s=float(ts.mean()), beta_s_per_byte=0.0)
+    a = np.stack([np.ones_like(xs), xs], axis=1)
+    (alpha, beta), *_ = np.linalg.lstsq(a, ts, rcond=None)
+    beta = max(float(beta), 0.0)
+    alpha = max(float(alpha), 0.0)
+    return LinkModel(alpha_s=alpha, beta_s_per_byte=beta)
+
+
+def calibrate_rates(*, n: int = 512, iters: int = 3) -> DeviceRates:
+    """Device compute/memory rates from a timed matmul and a timed
+    elementwise pass (modest sizes — calibration must not dwarf the
+    search it serves)."""
+    key = jax.random.PRNGKey(3)
+    a = jax.random.normal(key, (n, n), jnp.float32)
+    mm = jax.jit(lambda x: x @ x)
+    t_mm = time_fn(mm, a, iters=iters)
+    flops = 2.0 * n**3 / max(t_mm, 1e-9)
+
+    big = jax.random.normal(key, (4 << 20,), jnp.float32)
+    add = jax.jit(lambda x: x + 1.0)
+    t_add = time_fn(add, big, iters=iters)
+    bps = 2.0 * big.size * 4 / max(t_add, 1e-9)  # read + write
+    return DeviceRates(flops_per_s=float(flops), hbm_bytes_per_s=float(bps))

@@ -1,0 +1,212 @@
+"""The step-time predictor: structural wire accounting x alpha-beta link.
+
+One candidate plan's predicted step time combines three structural
+sources — no hand-written byte formulas anywhere:
+
+  * the COMPUTE half comes from ``launch/hlo_cost.analyze``'s loop-aware
+    entry cost (flops / bytes of the lowered train step, while trip
+    counts multiplied through) divided by calibrated device rates;
+  * the WIRE half is each comm mode's per-round payload, computed AOT
+    from the mode's own codec via ``jax.eval_shape`` of the SAME
+    ``encode_workers`` path the live uplink runs — the accounting the
+    drift test in ``tests/test_tune.py`` pins against concrete payloads;
+  * the LAUNCH half counts collective launches from the overlap
+    bucketer's actual ``plan_buckets`` output (one per bucket), so the
+    bucket-size grid trades per-launch alpha against overlap coverage.
+
+Comm cost is the classic ring all-reduce bound over the worker count n:
+
+    t_comm = 2 (n-1) * (n_buckets * alpha  +  (S / n) * beta)
+
+with S the per-worker payload bytes of the mode's wire codec.  The
+``ef21``/``efbv`` modes aggregate densely in HLO but their PROTOCOL
+payload is the contractive message (see
+``repro.comm.collective_payload_scale``) — the predictor charges the
+protocol wire, which is the quantity that transfers to a real
+bandwidth-limited link; ``benchmarks/autotune_bench.py`` reports the
+measured CPU numbers alongside so the gap stays visible.
+
+Overlap modes hide comm under backward compute; the composition charges
+only the un-hidden remainder (``OVERLAP_HIDE`` is the model's one free
+constant, stated here rather than buried in a weight).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.channel import CHANNEL_MODES, OVERLAP_MODES
+from repro.comm.overlap import DEFAULT_BUCKET_BYTES, plan_buckets
+from repro.comm.wire import encode_workers
+from repro.core.compressors import (
+    Identity,
+    Int8Stochastic,
+    RandK,
+    make_compressor,
+)
+from repro.tune.measure import DeviceRates, LinkModel
+
+#: comm modes the tuner searches over — every channel mode except the
+#: reference-only parameter server (same derivation as the train CLI)
+TUNABLE_MODES: Tuple[str, ...] = tuple(
+    m for m in CHANNEL_MODES if m != "sim"
+)
+
+#: fraction of compute time the bucketed overlap runtime is modeled to
+#: hide comm under (reverse-layer buckets overlap the backward pass; the
+#: head of the tree cannot be hidden — it is produced last)
+OVERLAP_HIDE = 0.75
+
+_KEY_SDS = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One point of the search grid: a comm mode plus every codec /
+    runtime knob the plan can set."""
+
+    comm_mode: str
+    bucket_bytes: int = DEFAULT_BUCKET_BYTES
+    randk_q: float = 0.05
+    q8_block_rows: int = 64
+    efbv_eta: float = 1.0
+    efbv_nu: float = 1.0
+    compressor: str = "natural"
+    compressor_kwargs: tuple = ()
+
+    def __post_init__(self):
+        if self.comm_mode not in TUNABLE_MODES:
+            raise ValueError(
+                f"unknown tunable comm mode {self.comm_mode!r}; "
+                f"have {TUNABLE_MODES}"
+            )
+
+    @property
+    def overlap(self) -> bool:
+        return self.comm_mode in OVERLAP_MODES
+
+    @property
+    def label(self) -> str:
+        knobs = []
+        if self.comm_mode == "randk_shared":
+            knobs.append(f"q={self.randk_q:g}")
+        if self.comm_mode in ("q8_ring_fused",) + OVERLAP_MODES:
+            knobs.append(f"block={self.q8_block_rows}")
+        if self.overlap:
+            knobs.append(f"bucket={self.bucket_bytes >> 10}KiB")
+        if self.comm_mode in ("efbv", "efbv_overlap"):
+            knobs.append(f"eta={self.efbv_eta:g},nu={self.efbv_nu:g}")
+        return self.comm_mode + (f"[{','.join(knobs)}]" if knobs else "")
+
+
+def wire_codec(cand: Candidate):
+    """The codec whose payload defines this mode's bytes-on-wire.
+
+    Aggregation-format modes are charged their aggregation codec (that
+    payload is what rides the collective); the error-feedback modes
+    aggregate densely in HLO but their protocol wire is the configured
+    contractive/compressor message (``collective_payload_scale``).
+    """
+    mode = cand.comm_mode
+    if mode == "dense":
+        return Identity()
+    if mode == "randk_shared":
+        return RandK(q=cand.randk_q, shared_pattern=True)
+    if mode == "q8_ring":
+        return Int8Stochastic()
+    if mode in ("q8_ring_fused",) + OVERLAP_MODES:
+        from repro.kernels.q8ring.ops import FusedQ8
+
+        return FusedQ8(block_rows=cand.q8_block_rows)
+    if mode in ("ef21", "efbv"):
+        return make_compressor(cand.compressor,
+                               **dict(cand.compressor_kwargs))
+    raise ValueError(f"no wire codec for comm mode {mode!r}")
+
+
+def predicted_wire_bits(cand: Candidate, wtree_like) -> float:
+    """Total wire bits of one round's worker-stacked messages, AOT.
+
+    ``jax.eval_shape`` over the SAME per-leaf ``encode_workers`` path
+    the live uplink runs, summed with the codec's own structural
+    ``wire_bits`` — so this number cannot drift from the wire protocol
+    without the accounting test catching it.
+    """
+    codec = wire_codec(cand)
+    total = 0.0
+    for leaf in jax.tree_util.tree_leaves(wtree_like):
+        sds = jax.ShapeDtypeStruct(tuple(leaf.shape), leaf.dtype)
+        payload, _ = jax.eval_shape(
+            lambda k, l: encode_workers(codec, k, l), _KEY_SDS, sds
+        )
+        total += float(codec.wire_bits(payload))
+    return total
+
+
+@dataclass(frozen=True)
+class StepPrediction:
+    """One candidate's predicted timing decomposition."""
+
+    step_s: float
+    compute_s: float
+    comm_s: float
+    wire_bytes: float          # per-worker payload bytes per round
+    n_buckets: int
+    candidate: Candidate = field(repr=False, default=None)
+
+
+def compute_time_s(analysis: Optional[dict],
+                   rates: Optional[DeviceRates]) -> float:
+    """Compute half from an ``hlo_cost.analyze`` dict (loop-aware entry
+    cost): roofline max of flops-bound and HBM-bound time.  ``None``
+    analysis (micro-bench ranking) contributes zero."""
+    if analysis is None:
+        return 0.0
+    rates = rates or DeviceRates.nominal()
+    flops_s = float(analysis.get("flops", 0.0)) / rates.flops_per_s
+    mem_s = float(analysis.get("bytes", 0.0)) / rates.hbm_bytes_per_s
+    return max(flops_s, mem_s)
+
+
+def comm_time_s(cand: Candidate, wtree_like, link: LinkModel,
+                w: int) -> Tuple[float, float, int]:
+    """``(comm_s, per_worker_wire_bytes, n_buckets)`` for one candidate
+    (the ring all-reduce bound in the module docstring)."""
+    total_bits = predicted_wire_bits(cand, wtree_like)
+    s_bytes = total_bits / 8.0 / max(w, 1)
+    n_buckets = (
+        len(plan_buckets(wtree_like, cand.bucket_bytes)) if cand.overlap
+        else 1
+    )
+    hops = 2 * (w - 1)
+    comm = hops * (n_buckets * link.alpha_s
+                   + (s_bytes / max(w, 1)) * link.beta_s_per_byte)
+    return float(comm), float(s_bytes), int(n_buckets)
+
+
+def compose_step_s(compute_s: float, comm_s: float, overlap: bool) -> float:
+    """Serial modes pay compute + comm; overlap modes pay only the comm
+    that does not fit under ``OVERLAP_HIDE`` of the compute."""
+    if overlap:
+        return compute_s + max(0.0, comm_s - OVERLAP_HIDE * compute_s)
+    return compute_s + comm_s
+
+
+def predict_step(cand: Candidate, wtree_like, link: LinkModel, w: int, *,
+                 analysis: Optional[dict] = None,
+                 rates: Optional[DeviceRates] = None) -> StepPrediction:
+    """The full prediction for one candidate (see module docstring)."""
+    compute_s = compute_time_s(analysis, rates)
+    comm_s, s_bytes, n_buckets = comm_time_s(cand, wtree_like, link, w)
+    return StepPrediction(
+        step_s=compose_step_s(compute_s, comm_s, cand.overlap),
+        compute_s=compute_s,
+        comm_s=comm_s,
+        wire_bytes=s_bytes,
+        n_buckets=n_buckets,
+        candidate=cand,
+    )

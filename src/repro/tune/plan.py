@@ -1,0 +1,176 @@
+"""The frozen ``TunePlan`` + its persistence and fingerprint cache.
+
+A plan is the tuner's OUTPUT: the concrete communication configuration
+(`comm_mode`, bucket budget, codec parameters) chosen for one
+(model x mesh x world-size) workload, together with the evidence
+(predicted and measured step times per candidate) that picked it.  Plans
+are:
+
+  * strict JSON on disk (``allow_nan=False`` — an artifact a downstream
+    RFC 8259 parser rejects is a bug HERE, not there; non-finite values
+    become ``null``),
+  * cached by FINGERPRINT: a sha256 over the model's leaf signature
+    (shape + dtype per parameter leaf — renaming an arch must not fake
+    a hit, resizing it must miss), the mesh (axis names + sizes), the
+    worker count, and the configured compressor.  Same workload, same
+    plan; ``launch/train.py`` reuses a cached plan without re-measuring.
+
+``apply_plan`` folds a plan back into a ``CompressionConfig``: the ONE
+place the ``comm_mode="auto"`` sentinel becomes a concrete mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+
+#: bump when the plan schema or the search semantics change — a cached
+#: plan from an older tuner must MISS, not silently misconfigure a run
+PLAN_VERSION = 1
+
+
+def plan_fingerprint(params_like, mesh, w: int, compressor: str,
+                     compressor_kwargs=(), search: Optional[dict] = None
+                     ) -> str:
+    """Cache key for one tuning workload.
+
+    ``params_like`` is the (unstacked) parameter tree — arrays or
+    ``ShapeDtypeStruct`` leaves; only shapes/dtypes enter the hash, so
+    the fingerprint is computable AOT and identical across hosts.
+    ``search`` captures the SEARCH SPACE (mode restriction, candidate
+    grids, verify depth): a plan found by a narrowed CI-style search
+    must not satisfy a later full-grid lookup on the same workload.
+    """
+    leaf_sig = [
+        (list(leaf.shape), str(jax.numpy.dtype(leaf.dtype)))
+        for leaf in jax.tree_util.tree_leaves(params_like)
+    ]
+    mesh_sig = {
+        "axes": list(mesh.axis_names),
+        "shape": [int(s) for s in mesh.devices.shape],
+    } if mesh is not None else None
+    blob = json.dumps(
+        {
+            "version": PLAN_VERSION,
+            "leaves": leaf_sig,
+            "mesh": mesh_sig,
+            "workers": int(w),
+            "compressor": compressor,
+            "compressor_kwargs": sorted(
+                (str(k), str(v)) for k, v in dict(compressor_kwargs).items()
+            ),
+            "search": {str(k): str(v)
+                       for k, v in sorted((search or {}).items())},
+        },
+        sort_keys=True,
+    )
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+@dataclass(frozen=True)
+class TunePlan:
+    """The chosen communication plan (see module docstring).
+
+    ``candidates`` keeps the ranked evidence: one dict per candidate
+    with its label, predicted step time, measured step time (None if it
+    was ranked out before verification), and wire bytes — the
+    predicted-vs-measured record ``benchmarks/autotune_bench.py`` and
+    the dryrun preview print.
+    """
+
+    fingerprint: str
+    comm_mode: str
+    overlap_bucket_bytes: int
+    randk_q: float
+    q8_block_rows: int
+    efbv_eta: float
+    efbv_nu: float
+    predicted_step_s: float
+    measured_step_s: Optional[float] = None
+    candidates: Tuple[dict, ...] = field(default_factory=tuple)
+    version: int = PLAN_VERSION
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["candidates"] = list(d["candidates"])
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TunePlan":
+        if int(d.get("version", -1)) != PLAN_VERSION:
+            raise ValueError(
+                f"tune plan version {d.get('version')!r} != {PLAN_VERSION} "
+                "(re-run the tuner; stale plans must not configure a run)"
+            )
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - fields
+        if unknown:
+            raise ValueError(f"unknown TunePlan fields {sorted(unknown)}")
+        d = dict(d)
+        d["candidates"] = tuple(d.get("candidates") or ())
+        return cls(**d)
+
+
+def _finite_tree(obj):
+    """null-out non-finite floats so the artifact stays strict JSON."""
+    if isinstance(obj, float):
+        return obj if obj == obj and abs(obj) != float("inf") else None
+    if isinstance(obj, dict):
+        return {k: _finite_tree(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_finite_tree(v) for v in obj]
+    return obj
+
+
+def save_plan(plan: TunePlan, path: str) -> str:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(_finite_tree(plan.to_dict()), f, indent=2, sort_keys=True,
+                  allow_nan=False)
+    return path
+
+
+def load_plan(path: str) -> TunePlan:
+    with open(path) as f:
+        return TunePlan.from_dict(json.load(f))
+
+
+def cache_path(cache_dir: str, fingerprint: str) -> str:
+    return os.path.join(cache_dir, f"tuneplan_{fingerprint[:16]}.json")
+
+
+def load_cached_plan(cache_dir: str, fingerprint: str) -> Optional[TunePlan]:
+    """The cached plan for this fingerprint, or None.  A plan whose
+    recorded fingerprint disagrees with its filename (hand-edited /
+    copied across workloads) is treated as a miss, not an error."""
+    path = cache_path(cache_dir, fingerprint)
+    if not os.path.exists(path):
+        return None
+    try:
+        plan = load_plan(path)
+    except (ValueError, KeyError, TypeError, json.JSONDecodeError):
+        return None
+    if plan.fingerprint != fingerprint:
+        return None
+    return plan
+
+
+def apply_plan(comp, plan: TunePlan):
+    """Resolve a ``CompressionConfig`` through a plan: the concrete
+    ``comm_mode`` plus every knob the search optimized.  This is the
+    only place ``comm_mode="auto"`` becomes a real mode."""
+    return dataclasses.replace(
+        comp,
+        comm_mode=plan.comm_mode,
+        overlap_bucket_bytes=plan.overlap_bucket_bytes,
+        randk_q=plan.randk_q,
+        q8_block_rows=plan.q8_block_rows,
+        efbv_eta=plan.efbv_eta,
+        efbv_nu=plan.efbv_nu,
+    )

@@ -1,0 +1,254 @@
+"""The plan search: predict every candidate, measure the top few.
+
+The grid covers {comm mode} x {bucket-byte budgets for the overlap
+modes} x {codec parameters}: Rand-K keep-fractions, the fused q8 ring's
+scale-block rows, and EF-BV ``(eta, nu)`` derived from the configured
+compressor's ESTIMATED variance (``estimate_omega``: size-weighted
+``omega(d)`` over the real leaf dimensions — the quantity EF-BV's
+optimal damping ``eta = 1/(1+omega)`` needs, which the user previously
+had to guess).
+
+Ranking is two-stage, mirroring how autotuners earn trust: the
+alpha-beta predictor (``repro.tune.model``) orders ALL candidates
+cheaply and structurally; the top ``verify_top`` are then VERIFIED by
+timed micro-reduces of the real leaf shapes through the real channels
+(``measure_candidate`` jits ``Channel.reduce_mean`` — the overlap
+modes' measured number is therefore the drained pipeline; their
+predicted overlap credit comes from the composition model, and both
+numbers are recorded in the plan so the gap stays visible).  The
+measured winner becomes the ``TunePlan``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+
+from repro.comm import make_channel
+from repro.core.algorithms import efbv_params
+from repro.core.compressors import make_compressor
+from repro.tune.measure import (
+    DEFAULT_MEASURE_BYTES_CAP,
+    DeviceRates,
+    LinkModel,
+    calibrate_link,
+    measure_subtree,
+    synth_wtree,
+    time_fn,
+)
+from repro.tune.model import (
+    Candidate,
+    TUNABLE_MODES,
+    compose_step_s,
+    predict_step,
+)
+from repro.tune.plan import TunePlan
+
+tmap = jax.tree_util.tree_map
+
+#: overlap bucket budgets searched by default (uncompressed per-worker
+#: message bytes — the plan_buckets unit)
+DEFAULT_BUCKET_GRID = (1 << 20, 4 << 20, 16 << 20)
+DEFAULT_RANDK_GRID = (0.01, 0.05, 0.1)
+DEFAULT_Q8_BLOCK_GRID = (64,)
+
+
+def _leaf_d(leaf) -> int:
+    n = 1
+    for s in leaf.shape[1:]:
+        n *= s
+    return n
+
+
+def estimate_omega(codec, wtree_like) -> Optional[float]:
+    """Size-weighted unbiased variance ``omega`` of a codec over the
+    REAL leaf dimensions (per-leaf messages see per-leaf d, so a single
+    ``omega(total_d)`` would be wrong for sparsifiers).  ``None`` when
+    the codec has no unbiased certificate."""
+    if not hasattr(codec, "omega"):
+        return None
+    total, acc = 0, 0.0
+    for leaf in jax.tree_util.tree_leaves(wtree_like):
+        d = _leaf_d(leaf)
+        try:
+            acc += codec.omega(d) * d
+        except NotImplementedError:
+            return None
+        total += d
+    return acc / total if total else None
+
+
+def estimate_delta(codec, wtree_like) -> Optional[float]:
+    """Size-weighted contraction ``delta`` (B-class certificate)."""
+    if not hasattr(codec, "delta"):
+        return None
+    total, acc = 0, 0.0
+    for leaf in jax.tree_util.tree_leaves(wtree_like):
+        d = _leaf_d(leaf)
+        try:
+            acc += codec.delta(d) * d
+        except NotImplementedError:
+            return None
+        total += d
+    return acc / total if total else None
+
+
+def default_candidates(
+    comp,
+    wtree_like,
+    *,
+    modes: Optional[Sequence[str]] = None,
+    bucket_grid: Sequence[int] = DEFAULT_BUCKET_GRID,
+    randk_grid: Sequence[float] = DEFAULT_RANDK_GRID,
+    q8_block_grid: Sequence[int] = DEFAULT_Q8_BLOCK_GRID,
+) -> Tuple[Candidate, ...]:
+    """The search grid for one ``CompressionConfig`` (module docstring).
+
+    ``modes`` restricts the grid to a subset of ``TUNABLE_MODES`` —
+    the knob CI uses to keep measured candidates tiny (interpret-mode
+    Pallas is slow per grid step on CPU).
+    """
+    allowed = set(TUNABLE_MODES if modes is None else modes)
+    unknown = allowed - set(TUNABLE_MODES)
+    if unknown:
+        raise ValueError(
+            f"unknown tune modes {sorted(unknown)}; have {TUNABLE_MODES}"
+        )
+    base = dict(compressor=comp.compressor,
+                compressor_kwargs=tuple(comp.compressor_kwargs))
+    q = make_compressor(comp.compressor, **dict(comp.compressor_kwargs))
+    omega = estimate_omega(q, wtree_like)
+    delta = estimate_delta(q, wtree_like)
+    eta, nu = efbv_params(delta=delta or 0.0, omega=omega)
+
+    out = []
+    if "dense" in allowed:
+        out.append(Candidate("dense", **base))
+    if "randk_shared" in allowed:
+        for rq in dict.fromkeys(tuple(randk_grid) + (comp.randk_q,)):
+            out.append(Candidate("randk_shared", randk_q=rq, **base))
+    if "q8_ring" in allowed:
+        out.append(Candidate("q8_ring", **base))
+    if "q8_ring_fused" in allowed:
+        for br in q8_block_grid:
+            out.append(Candidate("q8_ring_fused", q8_block_rows=br, **base))
+    if "q8_ring_overlap" in allowed:
+        for bb in bucket_grid:
+            for br in q8_block_grid:
+                out.append(Candidate("q8_ring_overlap", bucket_bytes=bb,
+                                     q8_block_rows=br, **base))
+    if "ef21" in allowed and delta is not None and delta > 0.0:
+        out.append(Candidate("ef21", **base))
+    if "efbv" in allowed:
+        out.append(Candidate("efbv", efbv_eta=eta, efbv_nu=nu, **base))
+    if "efbv_overlap" in allowed:
+        for bb in bucket_grid:
+            out.append(Candidate("efbv_overlap", bucket_bytes=bb,
+                                 efbv_eta=eta, efbv_nu=nu, **base))
+    return tuple(out)
+
+
+def measure_candidate(cand: Candidate, mesh, wtree, key, *,
+                      iters: int = 3) -> float:
+    """Median seconds of one drained aggregation round through the REAL
+    channel this candidate configures (micro-reduce of the given
+    worker-stacked data)."""
+    kw = {}
+    if cand.overlap:
+        kw["bucket_bytes"] = cand.bucket_bytes
+    ch = make_channel(cand.comm_mode, mesh, randk_q=cand.randk_q,
+                      q8_block_rows=cand.q8_block_rows, **kw)
+    return time_fn(jax.jit(ch.reduce_mean), key, wtree, iters=iters)
+
+
+def search_plan(
+    comp,
+    wtree_like,
+    mesh,
+    w: int,
+    *,
+    fingerprint: str = "",
+    analysis: Optional[dict] = None,
+    link: Optional[LinkModel] = None,
+    rates: Optional[DeviceRates] = None,
+    modes: Optional[Sequence[str]] = None,
+    bucket_grid: Sequence[int] = DEFAULT_BUCKET_GRID,
+    randk_grid: Sequence[float] = DEFAULT_RANDK_GRID,
+    q8_block_grid: Sequence[int] = DEFAULT_Q8_BLOCK_GRID,
+    verify_top: int = 2,
+    measure_iters: int = 3,
+    cap_bytes: int = DEFAULT_MEASURE_BYTES_CAP,
+    measure_fn: Optional[Callable] = None,
+    key: Optional[jax.Array] = None,
+) -> TunePlan:
+    """Predict-all, measure-top-``verify_top``, pick the measured winner.
+
+    ``measure_fn(candidate, wtree_data, key) -> comm_seconds`` is
+    injectable for tests; the default times the real channel.  With
+    ``verify_top=0`` the predicted ranking alone decides (the dryrun
+    preview path — nothing is timed).
+    """
+    key = jax.random.PRNGKey(0) if key is None else key
+    candidates = default_candidates(
+        comp, wtree_like, modes=modes, bucket_grid=bucket_grid,
+        randk_grid=randk_grid, q8_block_grid=q8_block_grid,
+    )
+    if not candidates:
+        raise ValueError("empty candidate grid (modes filtered everything)")
+    if link is None:
+        link = (calibrate_link(mesh, wtree_like, cap_bytes=cap_bytes,
+                               iters=measure_iters)
+                if verify_top > 0 else LinkModel.nominal())
+    preds = [predict_step(c, wtree_like, link, w, analysis=analysis,
+                          rates=rates) for c in candidates]
+    order = sorted(range(len(candidates)), key=lambda i: preds[i].step_s)
+
+    measured_step = {}
+    measured_comm = {}
+    if verify_top > 0:
+        sub = measure_subtree(wtree_like, cap_bytes)
+        data = synth_wtree(key, sub, mesh)
+        if measure_fn is None:
+            measure_fn = lambda c, t, k: measure_candidate(  # noqa: E731
+                c, mesh, t, k, iters=measure_iters
+            )
+        for i in order[:verify_top]:
+            comm_s = float(measure_fn(candidates[i], data, key))
+            measured_comm[i] = comm_s
+            measured_step[i] = compose_step_s(
+                preds[i].compute_s, comm_s, candidates[i].overlap
+            )
+        chosen_i = min(measured_step, key=lambda i: measured_step[i])
+    else:
+        chosen_i = order[0]
+
+    rows = []
+    for rank, i in enumerate(order):
+        p = preds[i]
+        rows.append({
+            "label": candidates[i].label,
+            "comm_mode": candidates[i].comm_mode,
+            "rank": rank,
+            "predicted_step_s": p.step_s,
+            "predicted_comm_s": p.comm_s,
+            "compute_s": p.compute_s,
+            "wire_bytes": p.wire_bytes,
+            "n_buckets": p.n_buckets,
+            "measured_comm_s": measured_comm.get(i),
+            "measured_step_s": measured_step.get(i),
+            "chosen": i == chosen_i,
+        })
+    c = candidates[chosen_i]
+    return TunePlan(
+        fingerprint=fingerprint,
+        comm_mode=c.comm_mode,
+        overlap_bucket_bytes=c.bucket_bytes,
+        randk_q=c.randk_q,
+        q8_block_rows=c.q8_block_rows,
+        efbv_eta=c.efbv_eta,
+        efbv_nu=c.efbv_nu,
+        predicted_step_s=preds[chosen_i].step_s,
+        measured_step_s=measured_step.get(chosen_i),
+        candidates=tuple(rows),
+    )

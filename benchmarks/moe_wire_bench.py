@@ -1,0 +1,140 @@
+"""MoE-wire benchmark: step time + per-wire bytes with the expert
+dispatch/combine all-to-all (and optionally the pipeline-boundary
+activations) routed through the codec transport.
+
+Runs the REAL train step (``launch/train.build_train_step``) on the
+qwen2-moe smoke config in a subprocess (process isolation, like the
+autotune bench) for a ladder of wire configurations — grad wire only,
+``moe_wire`` at identity width, ``moe_wire`` q8, and q8 on both the moe
+and act wires — and records the median step time, the final loss, and
+the structural per-wire bytes from the same ``Transport.per_wire_bits``
+accounting the dry-run table prints.  The artifact is the wire layer's
+cost record: the q8 rows should show ~4x fewer moe-wire bytes than the
+dense row at a loss within noise of the grad-only row.
+
+Writes the machine-readable ``BENCH_moe_wire.json`` next to the repo
+root (uploaded as a CI artifact alongside ``BENCH_autotune.json``).
+
+NOTE on CPU numbers: with one host device the all-to-all never leaves
+the chip, so step TIME differences mostly reflect codec encode/decode
+compute — the bytes table is the portable signal.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import REPO_ROOT as REPO, print_table, write_bench_json
+
+STEPS = 5
+OUT_JSON = "BENCH_moe_wire.json"
+
+_CHILD = """
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import build_transport
+from repro.configs import get_smoke_config
+from repro.configs.base import CompressionConfig, TrainConfig
+from repro.data.tokens import TokenStream
+from repro.launch.mesh import make_host_mesh, n_workers
+from repro.launch.train import build_train_step, init_state
+from repro.models import model as M
+
+steps = {steps}
+batch, seq = 8, 64
+cfg = get_smoke_config("qwen2-moe-a2.7b").with_(dtype="float32")
+mesh = make_host_mesh()
+w = n_workers(mesh)
+params_shapes = jax.eval_shape(
+    lambda k: M.init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+)
+
+variants = [
+    ("grad-only", "none", "none"),
+    ("moe-dense", "dense", "none"),
+    ("moe-q8", "q8", "none"),
+    ("moe-q8+act-q8", "q8", "q8"),
+]
+rows = {{}}
+for label, mw, aw in variants:
+    comp = CompressionConfig(comm_mode="dense", shift_rule="diana",
+                             moe_wire=mw, act_wire=aw)
+    tcfg = TrainConfig(learning_rate=1e-3, total_steps=steps,
+                      compression=comp)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg, w)
+    step_fn = jax.jit(build_train_step(cfg, tcfg, mesh, w))
+    stream = TokenStream(cfg, seq, batch)
+    state, m = step_fn(state, stream.batch(0))  # compile + warm
+    jax.block_until_ready(m["loss"])
+    times = []
+    for i in range(1, steps + 1):
+        t0 = time.perf_counter()
+        state, m = step_fn(state, stream.batch(i))
+        jax.block_until_ready(m["loss"])
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    transport = build_transport(
+        comp, cfg, None, w=w, params_like=params_shapes,
+        tokens_per_worker=batch * seq // max(w, 1),
+    )
+    rows[label] = {{
+        "moe_wire": mw,
+        "act_wire": aw,
+        "step_s": times[len(times) // 2],
+        "final_loss": float(m["loss"]),
+        "wire_bytes": {{n: b / 8.0
+                        for n, b in transport.per_wire_bits().items()}},
+    }}
+print("BENCH_JSON " + json.dumps(rows))
+"""
+
+
+def main(steps: int = STEPS, smoke: bool = False):
+    steps = max(2, 2 if smoke else steps)
+    r = subprocess.run(
+        [sys.executable, "-c", _CHILD.format(steps=steps)],
+        capture_output=True, text=True, timeout=1800,
+        env={**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"},
+        cwd=REPO,
+    )
+    line = next(
+        (l for l in r.stdout.splitlines() if l.startswith("BENCH_JSON ")),
+        None,
+    )
+    if line is None:
+        raise RuntimeError(
+            f"moe_wire bench child failed:\n{r.stdout}\n{r.stderr[-3000:]}"
+        )
+    results = json.loads(line[len("BENCH_JSON "):])
+    write_bench_json(OUT_JSON, results)
+    rows = [
+        (
+            label,
+            m["moe_wire"],
+            m["act_wire"],
+            f"{m['step_s'] * 1e3:.1f}ms",
+            f"{m['final_loss']:.4f}",
+            f"{m['wire_bytes'].get('moe', 0.0) / 1e6:.3f}MB",
+            f"{m['wire_bytes'].get('act', 0.0) / 1e6:.3f}MB",
+        )
+        for label, m in results.items()
+    ]
+    print_table(
+        "MoE/activation wires through the codec transport (CPU: bytes "
+        "are the portable signal; times reflect codec compute)",
+        ["variant", "moe", "act", "step", "loss", "moe B/step",
+         "act B/step"],
+        rows,
+    )
+    return results
+
+
+if __name__ == "__main__":
+    main()

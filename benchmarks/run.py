@@ -21,7 +21,8 @@ def main(argv=None):
                     help="tiny-config run of every suite (CI smoke)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig2,fig4,table1,"
-                         "gdci,ef21,efbv,kernels,overlap,autotune,roofline")
+                         "gdci,ef21,efbv,kernels,overlap,autotune,"
+                         "moe_wire,roofline")
     args = ap.parse_args(argv)
     scale = 50 if args.smoke else (4 if args.fast else 1)
 
@@ -34,6 +35,7 @@ def main(argv=None):
         fig4_logreg,
         gdci_bench,
         kernels_bench,
+        moe_wire_bench,
         overlap_bench,
         roofline_report,
         table1_rates,
@@ -52,6 +54,9 @@ def main(argv=None):
             steps=overlap_bench.STEPS // scale, smoke=args.smoke),
         "autotune": lambda: autotune_bench.main(
             iters=max(2, autotune_bench.ITERS // (2 if scale > 1 else 1)),
+            smoke=args.smoke),
+        "moe_wire": lambda: moe_wire_bench.main(
+            steps=max(2, moe_wire_bench.STEPS // (2 if scale > 1 else 1)),
             smoke=args.smoke),
         "roofline": roofline_report.main,
     }

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import save
-from repro.configs import get_config
+from repro.configs import get_config, get_smoke_config
 from repro.configs.base import CompressionConfig, TrainConfig
 from repro.data.tokens import TokenStream
 from repro.launch.mesh import make_host_mesh, n_workers
@@ -34,8 +34,8 @@ def make_100m_cfg():
 
 
 def run(comp: CompressionConfig, steps: int, batch: int, seq: int,
-        label: str):
-    cfg = make_100m_cfg()
+        label: str, cfg=None):
+    cfg = make_100m_cfg() if cfg is None else cfg
     tcfg = TrainConfig(learning_rate=1e-3, total_steps=steps,
                        warmup_steps=max(1, steps // 20), compression=comp)
     mesh = make_host_mesh()
@@ -61,27 +61,44 @@ def run(comp: CompressionConfig, steps: int, batch: int, seq: int,
 
 
 def main(argv=None):
+    from repro.comm import WIRE_CODEC_FLAGS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--moe-wire", "--moe_wire", dest="moe_wire",
+                    default="none", choices=list(WIRE_CODEC_FLAGS),
+                    help="also route the MoE dispatch/combine all-to-all "
+                         "through this codec (switches the model to the "
+                         "qwen2-moe smoke config, which has experts)")
+    ap.add_argument("--act-wire", "--act_wire", dest="act_wire",
+                    default="none", choices=list(WIRE_CODEC_FLAGS),
+                    help="compress pipeline-boundary activations with "
+                         "this codec")
     args = ap.parse_args(argv)
+
+    # the moe wire needs experts to dispatch; everything else runs the
+    # ~100M dense config
+    cfg = (get_smoke_config("qwen2-moe-a2.7b").with_(dtype="float32")
+           if args.moe_wire != "none" else make_100m_cfg())
 
     dense_losses, _ = run(
         CompressionConfig(enabled=False), args.steps, args.batch, args.seq,
-        "dense",
+        "dense", cfg=cfg,
     )
     diana_losses, diana_bits = run(
         CompressionConfig(enabled=True, compressor="natural",
-                          shift_rule="diana", shift_alpha=0.5),
-        args.steps, args.batch, args.seq, "diana-natural",
+                          shift_rule="diana", shift_alpha=0.5,
+                          moe_wire=args.moe_wire, act_wire=args.act_wire),
+        args.steps, args.batch, args.seq, "diana-natural", cfg=cfg,
     )
 
     import numpy as np
     k = max(1, args.steps // 10)
     d_tail = float(np.mean(dense_losses[-k:]))
     c_tail = float(np.mean(diana_losses[-k:]))
-    dense_bits_step = 32 * M.count_params_analytic(make_100m_cfg())
+    dense_bits_step = 32 * M.count_params_analytic(cfg)
     comp_bits_step = diana_bits / args.steps / 2  # w=1 host: per worker
     print(f"\nfinal loss: dense {d_tail:.4f} vs diana {c_tail:.4f} "
           f"(gap {c_tail - d_tail:+.4f})")

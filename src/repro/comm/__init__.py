@@ -26,6 +26,16 @@ from repro.comm.overlap import (
     BucketPlan,
     plan_buckets,
 )
+from repro.comm.transport import (
+    WIRE_CODEC_FLAGS,
+    WIRE_TOPOLOGIES,
+    Transport,
+    Wire,
+    aggregation_wire_codec,
+    build_transport,
+    wire_flag_codec,
+    wire_stream,
+)
 from repro.comm.wire import (
     encode_decode_workers,
     encode_meta_free,
@@ -37,13 +47,19 @@ __all__ = [
     "AGGREGATION_MODES",
     "CHANNEL_MODES",
     "DEFAULT_BUCKET_BYTES",
+    "WIRE_CODEC_FLAGS",
+    "WIRE_TOPOLOGIES",
     "AsyncChannel",
     "Bucket",
     "BucketPlan",
     "Channel",
     "MeshChannel",
     "SimChannel",
+    "Transport",
+    "Wire",
     "aggregation_mode_of",
+    "aggregation_wire_codec",
+    "build_transport",
     "collective_payload_scale",
     "encode_decode_workers",
     "encode_meta_free",
@@ -51,5 +67,7 @@ __all__ = [
     "make_channel",
     "plan_buckets",
     "resync_h_bar",
+    "wire_flag_codec",
+    "wire_stream",
     "worker_keys",
 ]

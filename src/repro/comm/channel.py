@@ -54,7 +54,7 @@ from typing import TYPE_CHECKING, Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.comm.wire import encode_decode_workers, leaf_key
+from repro.comm.wire import encode_decode_workers, encode_meta_free, leaf_key
 
 if TYPE_CHECKING:  # import cycle: core.shift_rules routes through Channel
     from repro.core.compressors import Compressor
@@ -124,6 +124,23 @@ class Channel:
         m_bar = self.reduce_mean(k_agg, m)
         g_bar, h_new, hb_new = rule.apply(wgrads, m, m_bar, h, h_bar, aux)
         return g_bar, h_new, hb_new, bits + extra
+
+    def all_to_all(self, q: Compressor, key: jax.Array, x: jax.Array):
+        """Forwarded-payload transport for the non-allreduce wires
+        (MoE dispatch/combine, pipeline-boundary activations).
+
+        Encodes ``x`` with codec ``q`` and returns the receiver-side
+        decode.  The receiver sees ONLY the payload — meta-carrying
+        codecs are rejected (``encode_meta_free``), the same contract as
+        the quantized ring hops.  Under GSPMD the surrounding dispatch
+        einsums lower to the actual all-to-all; what this method pins is
+        that the tensor crossing it is the codec's wire format.  Shared
+        by all channels (the math is placement-independent); the
+        structural accounting for these payloads lives on the ``Wire``
+        (``repro.comm.transport``), not here.
+        """
+        payload = encode_meta_free(q, key, x)
+        return q.decode(payload, {}, jax.ShapeDtypeStruct(x.shape, x.dtype))
 
     def broadcast(self, q: Compressor, key: jax.Array, tree) -> Tuple[Any, jax.Array]:
         """Downlink (model-broadcast): one encoded message per leaf."""
@@ -292,7 +309,7 @@ def collective_payload_scale(cfg, d_nominal: int = 1_000_000) -> dict:
     lowering: its aggregation is an exact mean of DECODED sparse
     messages, so the all-reduce is full-width in HLO while the wire
     carries the contractive codec's payload — scale by that codec's
-    wire fraction, derived structurally (``bits`` shim), not from an
+    wire fraction, derived structurally (``aot_wire_bits``), not from an
     analytic formula.  The same holds for ``efbv`` (EF-BV shares EF21's
     dense aggregation of decoded messages).  Apply it to the
     GRADIENT-MESSAGE share only
@@ -302,8 +319,8 @@ def collective_payload_scale(cfg, d_nominal: int = 1_000_000) -> dict:
     if not getattr(cfg, "enabled", True):
         return {}
     if getattr(cfg, "comm_mode", "dense") in ("ef21", "efbv"):
-        from repro.core.compressors import make_compressor
+        from repro.core.compressors import aot_wire_bits, make_compressor
 
         q = make_compressor(cfg.compressor, **dict(cfg.compressor_kwargs))
-        return {"all-reduce": q.bits(d_nominal) / (32.0 * d_nominal)}
+        return {"all-reduce": aot_wire_bits(q, d_nominal) / (32.0 * d_nominal)}
     return {}

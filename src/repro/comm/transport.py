@@ -1,0 +1,385 @@
+"""The Transport layer: every wire in the system as one registry.
+
+The paper's shifted-compression framework applies to ANY exchanged
+vector, not just gradients.  After the Channel unification the repo
+still had exactly one consumer (the gradient all-reduce); this module
+makes "a thing that moves compressed tensors" a first-class object so
+MoE expert dispatch/combine, pipeline-boundary activations — and later
+arcs (elastic workers, serving deltas) — are a REGISTRATION, not a new
+subsystem:
+
+  ``Wire``       one named traffic stream: a topology
+        (``allreduce | all_to_all | p2p``), the codec whose payload
+        rides it, an optional shift rule + Channel (allreduce wires),
+        and its declared per-step traffic for structural accounting.
+  ``Transport``  the per-step registry of every Wire.  ``per_wire_bits``
+        is the accounting surface the dryrun table, the tune predictor
+        and ``BENCH_moe_wire.json`` all read.
+  ``build_transport``  constructs the standard registry from a
+        ``CompressionConfig`` + ``ModelConfig``: the grad wire always,
+        the ``moe`` / ``act`` wires when their config flags are set.
+
+Keying rule (pinned by tests):
+
+  * The GRAD wire passes its round key VERBATIM to
+    ``rule.round(...)`` — bit-exact with the pre-refactor
+    ``Channel.shift_round`` by construction.
+  * Every OTHER wire derives its key stream with ``wire_stream(key,
+    name)`` (fold a stable hash of the wire name), so no two wires —
+    and no wire and the grad path — ever share an encode key stream.
+  * Error-feedback state is PER WIRE and per step: ``Wire.send``
+    threads a shift ``e`` (zeroed at step start) along the wire's send
+    stream (MoE groups, pipeline layers), so compression noise on one
+    wire never biases another.
+
+``Wire.send`` is the forwarded-payload hop: encode with the wire's
+codec (meta-free — the receiver sees only the payload), decode on the
+receiving side, STRAIGHT-THROUGH on the backward pass (the decode is
+treated as identity by the gradient), classic error feedback when a
+shift is threaded: ``d = Dec(Enc(x + e));  e' = x + e - d``.
+"""
+
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.channel import OVERLAP_MODES
+from repro.comm.wire import encode_meta_free, encode_workers
+
+#: wire topologies the Transport understands.  ``allreduce`` wires run
+#: the shift-rule engine through a Channel; ``all_to_all`` and ``p2p``
+#: wires forward codec payloads point to point (``Wire.send``).
+WIRE_TOPOLOGIES = ("allreduce", "all_to_all", "p2p")
+
+#: per-wire codec flags the config/CLI surface accepts (``--moe_wire``,
+#: ``--act_wire``); "none" disables the wire, "dense" moves full-width
+#: payloads through the transport (bitwise-identical math, real
+#: accounting)
+WIRE_CODEC_FLAGS = ("none", "dense", "q8", "randk", "topk", "sign",
+                    "natural")
+
+_KEY_SDS = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def wire_stream(key: jax.Array, name: str) -> jax.Array:
+    """THE per-wire key derivation: fold a stable hash of the wire name.
+
+    Every non-grad wire derives its keys here, so no two wires share an
+    encode key stream and adding a wire never perturbs another wire's
+    randomness.  The grad wire deliberately does NOT use this — its
+    round key passes verbatim to the rule engine, which is what keeps
+    the refactored grad path bit-exact with ``Channel.shift_round``.
+    """
+    return jax.random.fold_in(key, zlib.crc32(name.encode("utf-8")) & 0x7FFFFFFF)
+
+
+def wire_flag_codec(flag: str, *, randk_q: float = 0.05):
+    """Codec for one per-wire config flag (``None`` for ``"none"``).
+
+    Every codec here is META-FREE (decoder state travels in the payload)
+    because forwarded-payload wires cannot ship shared-seed side
+    information — ``encode_meta_free`` enforces it again at send time.
+    """
+    from repro.core.compressors import (
+        Identity,
+        Int8Stochastic,
+        NaturalCompression,
+        RandK,
+        ScaledSign,
+        TopK,
+    )
+
+    table = {
+        "none": lambda: None,
+        "dense": Identity,
+        "q8": Int8Stochastic,
+        "randk": lambda: RandK(q=randk_q),
+        "topk": lambda: TopK(q=randk_q),
+        "sign": ScaledSign,
+        "natural": NaturalCompression,
+    }
+    if flag not in table:
+        raise ValueError(
+            f"unknown wire codec {flag!r}; have {WIRE_CODEC_FLAGS}"
+        )
+    return table[flag]()
+
+
+def aggregation_wire_codec(comp):
+    """The codec whose payload defines a grad-wire round's bytes-on-wire.
+
+    Accepts anything with ``comm_mode`` / ``randk_q`` / ``q8_block_rows``
+    / ``compressor`` attributes (a ``CompressionConfig`` or a tune
+    ``Candidate``) — the ONE mode->codec map shared by the transport's
+    accounting and the tune predictor, so the two cannot drift.
+    Aggregation-format modes are charged their aggregation codec (that
+    payload rides the collective); the error-feedback modes aggregate
+    densely in HLO but their protocol wire is the configured
+    contractive message (see ``collective_payload_scale``).
+    """
+    from repro.core.compressors import (
+        Identity,
+        Int8Stochastic,
+        RandK,
+        make_compressor,
+    )
+
+    if not getattr(comp, "enabled", True):
+        return Identity()
+    mode = comp.comm_mode
+    if mode in ("dense", "sim"):  # sim: the exact-mean parameter server
+        return Identity()         # forwards dense messages
+
+    if mode == "randk_shared":
+        return RandK(q=comp.randk_q, shared_pattern=True)
+    if mode == "q8_ring":
+        return Int8Stochastic()
+    if mode in ("q8_ring_fused",) + OVERLAP_MODES:
+        from repro.kernels.q8ring.ops import FusedQ8
+
+        return FusedQ8(block_rows=comp.q8_block_rows)
+    if mode in ("ef21", "efbv"):
+        return make_compressor(comp.compressor,
+                               **dict(comp.compressor_kwargs))
+    raise ValueError(f"no wire codec for comm mode {mode!r}")
+
+
+def _aot_payload_bits(codec, sds, topology: str) -> float:
+    """Structural bits of ONE payload of ``sds`` through ``codec``, AOT.
+
+    Allreduce traffic is worker-stacked and runs the SAME
+    ``encode_workers`` path as the live uplink; forwarded topologies run
+    the same meta-free encode as ``Wire.send`` — either way the number
+    cannot drift from the wire protocol without the accounting tests
+    catching it.
+    """
+    if topology == "allreduce":
+        payload, _ = jax.eval_shape(
+            lambda k, l: encode_workers(codec, k, l), _KEY_SDS, sds
+        )
+    else:
+        payload = jax.eval_shape(
+            lambda k, l: encode_meta_free(codec, k, l), _KEY_SDS, sds
+        )
+    return float(codec.wire_bits(payload))
+
+
+@dataclass(eq=False)
+class Wire:
+    """One named traffic stream owned by the Transport.
+
+    ``traffic`` declares the per-STEP payload tensors as
+    ``((ShapeDtypeStruct, count), ...)`` — counts fold repeated sends
+    (scan groups, layers, workers) so accounting stays static instead of
+    accumulating traced bits through ``lax.scan``.
+    """
+
+    name: str
+    topology: str
+    codec: Any                       # accounting / forwarded-hop codec
+    channel: Any = None
+    rule: Any = None                 # allreduce: the phased ShiftRule
+    msg_codec: Any = None            # allreduce: the rule's message compressor
+    traffic: Tuple = ()              # ((sds, count), ...)
+    overlap_hidden: float = 0.0      # fraction of comm hidden under compute
+
+    def __post_init__(self):
+        if self.topology not in WIRE_TOPOLOGIES:
+            raise ValueError(
+                f"unknown wire topology {self.topology!r}; "
+                f"have {WIRE_TOPOLOGIES}"
+            )
+
+    # -- allreduce wires: the shift-rule engine, key passed VERBATIM ----
+
+    def reduce_mean(self, key, wtree):
+        return self.channel.reduce_mean(key, wtree)
+
+    def shift_round(self, key, wgrads, h, h_bar):
+        """One gradient round.  The key goes to ``rule.round`` verbatim
+        — bit-exact with the pre-refactor ``Channel.shift_round`` call
+        (pinned in tests/test_transport.py)."""
+        return self.rule.round(self.msg_codec, key, wgrads, h, h_bar,
+                               self.channel)
+
+    def iterate_round(self, key, params, wgrads, h, h_bar):
+        """Algorithm 2 (VR-GDCI): compressed-iterate round."""
+        return self.rule.round(key, params, wgrads, h, h_bar, self.channel)
+
+    # -- forwarded-payload wires: one compressed hop --------------------
+
+    def send(self, key, x, e=None):
+        """One compressed hop of ``x``: ``(y, e_new)``.
+
+        Forward value is the DECODED payload; the backward pass is
+        straight-through (decode treated as identity, so gradients flow
+        to ``x`` uncompressed).  With a threaded shift ``e`` this is
+        classic within-step error feedback: the error-compensated signal
+        ``x + e`` is what rides the wire, and the residual becomes the
+        next send's shift — routing/quantization noise averages out
+        along the wire's send stream instead of biasing it.
+        """
+        target = x if e is None else x + e.astype(x.dtype)
+        decoded = self.channel.all_to_all(self.codec, key, target)
+        y = x + jax.lax.stop_gradient(decoded - x)
+        e_new = None if e is None else jax.lax.stop_gradient(target - decoded)
+        return y, e_new
+
+    # -- accounting ------------------------------------------------------
+
+    def wire_bits(self) -> float:
+        """Per-step wire bits of this wire's declared traffic, AOT."""
+        total = 0.0
+        cache: Dict[Tuple, float] = {}
+        for sds, count in self.traffic:
+            sig = (tuple(sds.shape), str(jnp.dtype(sds.dtype)))
+            if sig not in cache:
+                cache[sig] = _aot_payload_bits(self.codec, sds, self.topology)
+            total += count * cache[sig]
+        return total
+
+
+class Transport:
+    """Per-step registry of every Wire.  Dict-like: ``transport["grad"]``,
+    ``"moe" in transport``, ``transport.get("act")``."""
+
+    def __init__(self, wires=()):
+        self._wires: Dict[str, Wire] = {}
+        for wire in wires:
+            self.register(wire)
+
+    def register(self, wire: Wire) -> Wire:
+        if wire.name in self._wires:
+            raise ValueError(
+                f"wire {wire.name!r} already registered "
+                f"(have {sorted(self._wires)})"
+            )
+        self._wires[wire.name] = wire
+        return wire
+
+    def __contains__(self, name) -> bool:
+        return name in self._wires
+
+    def __getitem__(self, name) -> Wire:
+        if name not in self._wires:
+            raise KeyError(
+                f"no wire {name!r} registered; have {sorted(self._wires)}"
+            )
+        return self._wires[name]
+
+    def get(self, name, default=None) -> Optional[Wire]:
+        return self._wires.get(name, default)
+
+    def __iter__(self):
+        return iter(self._wires.values())
+
+    def __len__(self) -> int:
+        return len(self._wires)
+
+    def names(self):
+        return tuple(self._wires)
+
+    def per_wire_bits(self) -> Dict[str, float]:
+        """{wire name: per-step wire bits} — the accounting table the
+        dryrun, tune predictor and moe_wire bench all surface."""
+        return {name: wire.wire_bits() for name, wire in self._wires.items()}
+
+    def extra_traffic(self) -> Dict[str, Tuple]:
+        """Declared traffic of every NON-grad wire, keyed by name — the
+        ``wire_traffic`` dict the tune predictor charges."""
+        return {
+            name: wire.traffic
+            for name, wire in self._wires.items()
+            if name != "grad" and wire.traffic
+        }
+
+
+def build_transport(comp, cfg, channel, *, rule=None, msg_codec=None,
+                    w: int = 1, params_like=None,
+                    tokens_per_worker: int = 0) -> Transport:
+    """The standard per-step Transport for one run.
+
+    Registers the ``grad`` wire always (its accounting codec is the
+    aggregation wire codec of ``comp.comm_mode`` — the same convention
+    the tune predictor charges; its engine objects ``rule``/``msg_codec``
+    come from ``comp.make()`` and may be None for accounting-only
+    transports such as the dryrun's).  The ``moe`` and ``act`` wires are
+    registered when their config flags are set, with declared traffic
+    when ``tokens_per_worker`` is known:
+
+      * ``moe``  — ``all_to_all``: 2 sends (dispatch + combine) of the
+        ``(E, C, D)`` expert buffers per GShard group per MoE layer per
+        worker (``repro.models.moe.moe_wire_traffic``).
+      * ``act``  — ``p2p``: one ``(tokens, d_model)`` pipeline-boundary
+        send per scanned layer per worker.
+
+    ``params_like`` (unstacked parameter tree) declares the grad wire's
+    traffic as worker-stacked leaves; omit it for transports that never
+    read ``per_wire_bits`` for grad.
+    """
+    wires = []
+    hidden = 0.0
+    if getattr(comp, "enabled", False) and comp.comm_mode in OVERLAP_MODES:
+        from repro.tune.model import OVERLAP_HIDE
+
+        hidden = OVERLAP_HIDE
+    grad_traffic = ()
+    if params_like is not None:
+        grad_traffic = tuple(
+            (jax.ShapeDtypeStruct((w, *leaf.shape), leaf.dtype), 1)
+            for leaf in jax.tree_util.tree_leaves(params_like)
+        )
+    wires.append(Wire(
+        name="grad", topology="allreduce",
+        codec=aggregation_wire_codec(comp), channel=channel,
+        rule=rule, msg_codec=msg_codec, traffic=grad_traffic,
+        overlap_hidden=hidden,
+    ))
+
+    moe_flag = getattr(comp, "moe_wire", "none")
+    if moe_flag != "none":
+        if not cfg.is_moe:
+            raise ValueError(
+                f"moe_wire {moe_flag!r} needs a MoE architecture; "
+                f"{cfg.name!r} has n_experts={cfg.n_experts}"
+            )
+        from repro.models.moe import moe_wire_traffic
+
+        traffic = ()
+        if tokens_per_worker > 0:
+            n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+            traffic = tuple(
+                (sds, count * n_moe_layers * w)
+                for sds, count in moe_wire_traffic(cfg, tokens_per_worker)
+            )
+        wires.append(Wire(
+            name="moe", topology="all_to_all",
+            codec=wire_flag_codec(moe_flag, randk_q=comp.randk_q),
+            channel=channel, traffic=traffic,
+        ))
+
+    act_flag = getattr(comp, "act_wire", "none")
+    if act_flag != "none":
+        if cfg.arch_type not in ("dense", "vlm", "moe"):
+            raise ValueError(
+                f"act_wire {act_flag!r} supports arch_type dense|vlm|moe "
+                f"(scanned residual-stream blocks); {cfg.name!r} is "
+                f"{cfg.arch_type!r}"
+            )
+        traffic = ()
+        if tokens_per_worker > 0:
+            sds = jax.ShapeDtypeStruct(
+                (tokens_per_worker, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+            traffic = ((sds, cfg.n_layers * w),)
+        wires.append(Wire(
+            name="act", topology="p2p",
+            codec=wire_flag_codec(act_flag, randk_q=comp.randk_q),
+            channel=channel, traffic=traffic,
+        ))
+    return Transport(wires)

@@ -141,6 +141,17 @@ class CompressionConfig:
     rules over LOSSY aggregation: every N rounds the trainer replaces
     the incrementally-tracked ``h_bar`` with a dense reduce of the
     worker shifts (``repro.comm.resync_h_bar``); 0 disables.
+
+    ``moe_wire`` / ``act_wire`` compress the NON-gradient wires through
+    the same codec transport (``repro.comm.transport``): the MoE expert
+    dispatch/combine all-to-all and the pipeline-boundary activations
+    respectively.  Values are ``repro.comm.WIRE_CODEC_FLAGS``
+    (``none | dense | q8 | randk | topk | sign | natural``); ``none``
+    leaves the wire out of the transport entirely, ``dense`` routes it
+    through the transport at full width (bitwise-identical math, real
+    accounting).  Both run straight-through on the backward pass with a
+    per-wire, per-step error-feedback shift (see the Transport-layer
+    section of ARCHITECTURE.md).
     """
     enabled: bool = True
     compressor: str = "natural"    # see core.compressors.make_compressor
@@ -160,6 +171,8 @@ class CompressionConfig:
     overlap_bucket_bytes: int = 4 << 20  # AsyncChannel bucket budget
     q8_block_rows: int = 64        # fused-q8 scale-block rows (autotuned)
     drift_resync_every: int = 0    # dense h_bar resync period (0 = off)
+    moe_wire: str = "none"         # MoE dispatch/combine wire codec flag
+    act_wire: str = "none"         # pipeline-boundary activation wire flag
 
     @property
     def effective_shift_rule(self) -> str:

@@ -31,12 +31,11 @@ is an explicit codec:
         ``jax.eval_shape`` outputs alike.
   ``omega(d)`` / ``delta(d)``
         variance constants for step-size rules.
-  ``bits(d)``
-        DEPRECATED shim: wire size of one compressed f32 d-vector,
-        now derived structurally (``wire_bits`` of the eval_shape'd
-        payload) instead of a hand-written formula.  Kept because the
-        step-size/benchmark layers still quote per-message costs by
-        dimension; tests pin it against ``wire_bits``.
+
+There is ONE accounting path: ``wire_bits`` on actual payloads for live
+traffic, and the free function ``aot_wire_bits(q, shape)`` — the same
+``wire_bits`` over the ``jax.eval_shape``'d payload — for ahead-of-time
+cost quotes.  No analytic per-dimension formulas anywhere.
 
 Every operator works on arrays of arbitrary shape (treated as flattened
 vectors where ordering matters) and is a hashable frozen dataclass so it
@@ -61,7 +60,7 @@ import numpy as np
 
 FLOAT_BITS = 32  # wire width of an uncompressed scalar
 
-# ShapeDtypeStruct stand-in for a PRNG key, used by the bits(d) shim.
+# ShapeDtypeStruct stand-in for a PRNG key, used by aot_wire_bits.
 _KEY_SDS = jax.ShapeDtypeStruct((2,), jnp.uint32)
 
 
@@ -147,8 +146,8 @@ class Compressor:
     """Base codec.  Subclasses are frozen dataclasses => hashable/static.
 
     Subclasses implement ``encode``/``decode`` (the wire protocol); the
-    dense round trip ``__call__`` and the accounting (``wire_bits``,
-    ``bits``) are derived here.
+    dense round trip ``__call__`` and the accounting (``wire_bits``)
+    are derived here.
     """
 
     def encode(self, key: jax.Array, x: jax.Array) -> Tuple[Any, Any]:
@@ -171,18 +170,6 @@ class Compressor:
         override this with a traced, data-dependent count.
         """
         return wire_bits(payload)
-
-    def bits(self, d: int) -> float:
-        """DEPRECATED: analytic-style wire size of one f32 d-vector.
-
-        Derived structurally from the encoded payload shapes via
-        ``jax.eval_shape`` — no hand-written formulas.  Prefer
-        ``wire_bits(payload)`` on actual payloads.
-        """
-        payload, _ = jax.eval_shape(
-            self.encode, _KEY_SDS, jax.ShapeDtypeStruct((d,), jnp.float32)
-        )
-        return self.wire_bits(payload)
 
     @property
     def stochastic(self) -> bool:
@@ -338,7 +325,7 @@ class BernoulliP(Unbiased):
 
         Handles worker-stacked payloads (``sent`` shaped ``(W,)``) the
         same way: each message is charged independently.  On
-        ``eval_shape`` payloads (AOT costing, the ``bits(d)`` shim) the
+        ``eval_shape`` payloads (AOT costing, ``aot_wire_bits``) the
         flag has no value, so the EXPECTATION p * full + flag is
         returned instead.
         """
@@ -650,15 +637,32 @@ def tree_shifted_compress(q: Compressor, key: jax.Array, tree, shift_tree):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def tree_bits(q: Compressor, tree) -> float:
-    """Total wire bits for one compressed message of this pytree.
+def aot_wire_bits(q: Compressor, shape, dtype=jnp.float32) -> float:
+    """Structural wire bits of ONE compressed message, ahead of time.
 
-    DEPRECATED shim over the per-leaf ``bits(d)`` shim — accounting on
-    live paths is structural (``wire_bits`` of the actual payloads, see
-    ``repro.comm``); this remains for by-dimension cost quotes.
+    ``jax.eval_shape`` of the codec's own ``encode`` over a
+    ``ShapeDtypeStruct`` — the exact payload shapes of the live wire,
+    with zero FLOPs.  ``shape`` may be an int ``d`` (a flat d-vector) or
+    a full shape tuple.  Codecs whose payload size is a random variable
+    (``BernoulliP``) report their expectation, as documented on their
+    ``wire_bits`` override.
     """
+    if isinstance(shape, int):
+        shape = (shape,)
+    payload, _ = jax.eval_shape(
+        q.encode, _KEY_SDS, jax.ShapeDtypeStruct(tuple(shape), dtype)
+    )
+    return float(q.wire_bits(payload))
+
+
+def tree_bits(q: Compressor, tree) -> float:
+    """Total AOT wire bits for one compressed message of this pytree:
+    ``aot_wire_bits`` summed over the leaves (flattened, f32 — the wire
+    treats each leaf as a flat message; see ``repro.comm`` for the live
+    structural accounting on actual payloads)."""
     return float(
-        sum(q.bits(int(leaf.size)) for leaf in jax.tree_util.tree_leaves(tree))
+        sum(aot_wire_bits(q, int(leaf.size))
+            for leaf in jax.tree_util.tree_leaves(tree))
     )
 
 

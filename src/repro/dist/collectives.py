@@ -359,6 +359,7 @@ def compressed_tree_mean(
     """
     from repro.comm.channel import AGGREGATION_MODES, aggregation_mode_of
 
+    given = getattr(mode, "comm_mode", mode)  # pre-normalization, for errors
     if hasattr(mode, "comm_mode"):  # CompressionConfig
         randk_q = mode.randk_q
     mode = aggregation_mode_of(mode)  # ef21/disabled normalize to dense
@@ -384,5 +385,6 @@ def compressed_tree_mean(
             codec=codec, leaf_indices=leaf_indices,
         )
     raise ValueError(
-        f"unknown aggregation mode {mode!r}; have {AGGREGATION_MODES}"
+        f"unknown aggregation mode {mode!r} (given: {given!r}); "
+        f"have {AGGREGATION_MODES}"
     )

@@ -15,6 +15,7 @@ Outputs one JSON per combination under experiments/dryrun/.
 """
 
 import argparse
+import dataclasses
 import json
 import time
 import traceback
@@ -58,7 +59,8 @@ def skip_reason(arch: str, shape: InputShape) -> str | None:
 
 
 def tune_preview(cfg: ModelConfig, comp: CompressionConfig, mesh,
-                 analysis: Dict[str, Any], top: int = 5) -> Dict[str, Any]:
+                 analysis: Dict[str, Any], top: int = 5,
+                 wire_traffic=None) -> Dict[str, Any]:
     """Predicted-vs-chosen comm plans for this (arch x mesh) workload.
 
     AOT-only: the tuner's predictor runs off this dry-run's loop-aware
@@ -66,6 +68,9 @@ def tune_preview(cfg: ModelConfig, comp: CompressionConfig, mesh,
     bits (``verify_top=0`` — nothing is timed on the dry-run host).
     The full measured search belongs to ``--comm_mode auto`` at launch;
     this preview shows what it WOULD choose next to what is configured.
+    With registered non-grad wires (``wire_traffic``) the grid also
+    crosses each configured wire flag against ``"none"`` so the preview
+    shows whether compressing that wire pays off.
     """
     from repro import tune
     from repro.launch.mesh import n_workers
@@ -77,17 +82,41 @@ def tune_preview(cfg: ModelConfig, comp: CompressionConfig, mesh,
     wlike = tmap(
         lambda p: jax.ShapeDtypeStruct((w, *p.shape), p.dtype), params_shapes
     )
+    grids = {}
+    if comp.moe_wire != "none":
+        grids["moe_wire_grid"] = tuple(dict.fromkeys(("none", comp.moe_wire)))
+    if comp.act_wire != "none":
+        grids["act_wire_grid"] = tuple(dict.fromkeys(("none", comp.act_wire)))
     plan = tune.search_plan(
         comp, wlike, mesh, w, fingerprint="preview", analysis=analysis,
         link=tune.LinkModel.nominal(), rates=tune.DeviceRates.nominal(),
-        verify_top=0,
+        verify_top=0, wire_traffic=wire_traffic, **grids,
     )
     return {
         "configured_comm_mode": comp.comm_mode,
         "predicted_choice": plan.comm_mode,
+        "predicted_moe_wire": plan.moe_wire,
+        "predicted_act_wire": plan.act_wire,
         "predicted_step_s": plan.predicted_step_s,
         "candidates": list(plan.candidates[:top]),
     }
+
+
+def accounting_transport(cfg: ModelConfig, comp: CompressionConfig, mesh,
+                         shape: InputShape):
+    """The Transport this run registers, channel-free (accounting only):
+    grad traffic from the parameter tree, moe/act traffic from the input
+    shape's per-worker token count."""
+    from repro.comm import build_transport
+
+    w = n_workers(mesh)
+    params_shapes = jax.eval_shape(
+        lambda k: M.init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    return build_transport(
+        comp, cfg, None, w=w, params_like=params_shapes,
+        tokens_per_worker=shape.global_batch * shape.seq_len // max(w, 1),
+    )
 
 
 def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
@@ -197,6 +226,20 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         return rec
 
     cfg = get_config(arch)
+    # per-arch wire sanitization: under --all a moe/act wire flag only
+    # applies to the archs that have that wire (a dense model has no
+    # expert all-to-all) — drop it rather than failing the combination
+    comp = tcfg.compression
+    drop = {}
+    if comp.moe_wire != "none" and not cfg.is_moe:
+        drop["moe_wire"] = "none"
+    if comp.act_wire != "none" and cfg.arch_type not in ("dense", "vlm",
+                                                         "moe"):
+        drop["act_wire"] = "none"
+    if drop:
+        tcfg = dataclasses.replace(
+            tcfg, compression=dataclasses.replace(comp, **drop)
+        )
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     try:
@@ -270,10 +313,24 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             "roofline": roof,
             "collective_counts": coll.get("_counts"),
         })
-        if shape.kind == "train" and tcfg.compression.enabled:
-            rec["tune_preview"] = tune_preview(
-                cfg, tcfg.compression, mesh, corrected
-            )
+        if shape.kind == "train":
+            transport = accounting_transport(cfg, tcfg.compression, mesh,
+                                             shape)
+            rec["wires"] = [
+                {
+                    "name": wire.name,
+                    "topology": wire.topology,
+                    "codec": type(wire.codec).__name__,
+                    "bytes_per_step": wire.wire_bits() / 8.0,
+                    "overlap_hidden": wire.overlap_hidden,
+                }
+                for wire in transport
+            ]
+            if tcfg.compression.enabled:
+                rec["tune_preview"] = tune_preview(
+                    cfg, tcfg.compression, mesh, corrected,
+                    wire_traffic=transport.extra_traffic(),
+                )
         if save_hlo:
             with open(os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_tag}.hlo"), "w") as f:
                 f.write(hlo)
@@ -298,6 +355,11 @@ def main(argv=None):
     ap.add_argument("--compressor", default="natural")
     ap.add_argument("--shift-rule", "--shift_rule", dest="shift_rule",
                     default="diana")
+    from repro.comm import WIRE_CODEC_FLAGS
+    ap.add_argument("--moe-wire", "--moe_wire", dest="moe_wire",
+                    default="none", choices=list(WIRE_CODEC_FLAGS))
+    ap.add_argument("--act-wire", "--act_wire", dest="act_wire",
+                    default="none", choices=list(WIRE_CODEC_FLAGS))
     ap.add_argument("--no-compression", action="store_true")
     args = ap.parse_args(argv)
 
@@ -308,6 +370,8 @@ def main(argv=None):
             compressor=args.compressor,
             shift_rule=args.shift_rule,
             comm_mode=args.comm_mode,
+            moe_wire=args.moe_wire,
+            act_wire=args.act_wire,
         )
     )
 
@@ -350,6 +414,11 @@ def main(argv=None):
                           f"{' ...' if len(unresolved) > 4 else ''} — "
                           f"flops/bytes and tuner predictions under-count "
                           f"these loops", flush=True)
+                for wrow in rec.get("wires") or ():
+                    print(f"    wire {wrow['name']:<5} "
+                          f"{wrow['topology']:<10} {wrow['codec']:<18} "
+                          f"{wrow['bytes_per_step']:.3e} B/step  "
+                          f"hidden={wrow['overlap_hidden']:.0%}", flush=True)
                 tp = rec.get("tune_preview")
                 if tp:
                     mark = ("  (matches configured)"

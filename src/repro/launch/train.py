@@ -49,6 +49,7 @@ EVERY rule of the engine, shifted ones included.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 from typing import Any, NamedTuple
 
@@ -56,7 +57,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.comm import CHANNEL_MODES, make_channel, resync_h_bar
+from repro.comm import (
+    CHANNEL_MODES,
+    WIRE_CODEC_FLAGS,
+    build_transport,
+    make_channel,
+    resync_h_bar,
+    wire_stream,
+)
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import CompressionConfig, ModelConfig, TrainConfig
 from repro.core import SHIFT_RULES
@@ -162,29 +170,48 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int):
         iterate_rule = isinstance(rule, VRGDCI)
     else:
         q, rule, iterate_rule = None, None, False
+    # ALL of this step's traffic is registered on the transport: the
+    # grad wire wraps the channel+rule above (bit-exact — Wire passes
+    # the round key through verbatim), and any configured moe/act wires
+    # ride into the forward pass
+    transport = build_transport(comp, cfg, channel, rule=rule, msg_codec=q,
+                                w=w)
+    grad_wire = transport["grad"]
+    wired = ("moe" in transport) or ("act" in transport)
 
     def loss_fn(params, batch):
+        if wired:
+            batch = dict(batch)
+            wire_key = batch.pop("wire_key")
+            return M.train_loss(params, cfg, batch, wires=transport,
+                                wire_key=wire_key)
         return M.train_loss(params, cfg, batch)
 
     def train_step(state: TrainState, batch):
         wbatch = split_batch(batch, w)
+        if wired:
+            # per-worker wire keys, derived from a stream disjoint from
+            # the round key below (which stays byte-identical to the
+            # unwired step)
+            kw = wire_stream(state.key, "transport")
+            wbatch = dict(wbatch, wire_key=jax.random.split(kw, w))
         grads, loss, metrics = per_worker_grads(loss_fn, state.params, wbatch)
         key, sub = jax.random.split(state.key)
 
         if not comp.enabled:
-            g_bar = channel.reduce_mean(sub, grads)
+            g_bar = grad_wire.reduce_mean(sub, grads)
             new_params, opt = optimizer.update(g_bar, state.opt, state.params)
             h, h_bar, bits = state.h, state.h_bar, state.bits
         elif iterate_rule:
             # Algorithm 2: the round returns the mixed iterate directly
-            new_params, h, h_bar, step_bits = rule.round(
-                sub, state.params, grads, state.h, state.h_bar, channel
+            new_params, h, h_bar, step_bits = grad_wire.iterate_round(
+                sub, state.params, grads, state.h, state.h_bar
             )
             opt = state.opt
             bits = state.bits + step_bits
         else:
-            g_bar, h, h_bar, step_bits = rule.round(
-                q, sub, grads, state.h, state.h_bar, channel
+            g_bar, h, h_bar, step_bits = grad_wire.shift_round(
+                sub, grads, state.h, state.h_bar
             )
             # bound the shift-tracking drift of lossy aggregation: every
             # N rounds h_bar resyncs to the exact worker mean of h
@@ -360,6 +387,16 @@ def main(argv=None):
                     default=None,
                     help="comma-separated subset of tunable comm modes to "
                          "search (keeps measured candidates tiny in CI)")
+    ap.add_argument("--moe-wire", "--moe_wire", dest="moe_wire",
+                    default="none", choices=list(WIRE_CODEC_FLAGS),
+                    help="codec for the MoE dispatch/combine all-to-all "
+                         "wire ('none' leaves it off the transport; "
+                         "'dense' routes it uncompressed)")
+    ap.add_argument("--act-wire", "--act_wire", dest="act_wire",
+                    default="none", choices=list(WIRE_CODEC_FLAGS),
+                    help="codec for the pipeline-boundary activation "
+                         "wire (block-boundary residuals, straight-"
+                         "through backward)")
     ap.add_argument("--drift-resync-every", "--drift_resync_every",
                     dest="drift_resync_every", type=int, default=0,
                     help="every N rounds resync h_bar from a dense reduce "
@@ -385,6 +422,8 @@ def main(argv=None):
         efbv_eta=args.efbv_eta,
         efbv_nu=args.efbv_nu,
         drift_resync_every=args.drift_resync_every,
+        moe_wire=args.moe_wire,
+        act_wire=args.act_wire,
     )
     mesh = make_host_mesh()
     w = n_workers(mesh)
@@ -406,6 +445,12 @@ def main(argv=None):
             force=args.autotune, tune_modes=args.tune_modes,
             lr=args.lr, batch=args.batch, seq=args.seq,
         )
+        # an explicit CLI wire flag beats the plan's (plans searched
+        # with the default grids pin both wires to 'none')
+        if args.moe_wire != "none":
+            comp = dataclasses.replace(comp, moe_wire=args.moe_wire)
+        if args.act_wire != "none":
+            comp = dataclasses.replace(comp, act_wire=args.act_wire)
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        warmup_steps=max(1, args.steps // 10),
                        compression=comp)
@@ -416,7 +461,8 @@ def main(argv=None):
 
     print(f"arch={args.arch} params={M.count_params_analytic(cfg):,} "
           f"workers={w} compression={comp.enabled} "
-          f"rule={comp.effective_shift_rule} comm={comp.comm_mode}")
+          f"rule={comp.effective_shift_rule} comm={comp.comm_mode} "
+          f"moe_wire={comp.moe_wire} act_wire={comp.act_wire}")
     t0 = time.time()
     for i in range(args.steps):
         state, metrics = step_fn(state, stream.batch(i))

@@ -59,6 +59,17 @@ def shard_hint(x, *spec):
         return x
 
 
+def wire_boundary(wire, key, x, e):
+    """Pipeline-boundary activation compression: pass a block output
+    through a transport wire (codec round-trip, straight-through on the
+    backward pass), threading the per-wire error-feedback shift ``e``.
+    Thin indirection so layer code never imports the comm package —
+    ``wire`` is a ``repro.comm.transport.Wire`` (anything with ``.send``).
+    Returns ``(y, e_new)``.
+    """
+    return wire.send(key, x, e)
+
+
 # --------------------------------------------------------------------------
 # Norms
 # --------------------------------------------------------------------------

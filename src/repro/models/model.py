@@ -97,9 +97,12 @@ def _dense_block_fwd(p, x, cfg):
     return _seqshard(x), jnp.zeros((), jnp.float32)
 
 
-def _moe_block_fwd(p, x, cfg):
+def _moe_block_fwd(p, x, cfg, wire=None, key=None):
     x = x + _attn_apply(p["attn"], L.rmsnorm(p["attn_norm"], x, cfg.norm_eps), cfg)
-    y, aux = MOE.moe_apply(p["moe"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps), cfg)
+    y, aux = MOE.moe_apply(
+        p["moe"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps), cfg,
+        wire=wire, key=key,
+    )
     return _seqshard(x + y), aux
 
 
@@ -220,6 +223,37 @@ def _scan_blocks(fwd, stacked, x, cfg, remat: bool = True):
     return x, jnp.sum(auxs)
 
 
+def _scan_blocks_wired(fwd, stacked, x, cfg, *, act_wire=None, act_key=None,
+                       layer_offset: int = 0, remat: bool = True):
+    """``_scan_blocks`` for transport-wired stacks: ``fwd`` also receives
+    the global layer index (for per-layer wire keys), and with an
+    ``act_wire`` each block boundary rides the activation wire.  The
+    act-wire error-feedback shift is part of the scan carry — zeroed at
+    step start, threaded across layers; ``layer_offset`` keeps layer
+    indices (hence wire keys) globally unique across split stacks.
+    """
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+
+    def body(carry, inp):
+        lp, li = inp
+        if act_wire is None:
+            y, aux = fwd(lp, carry, cfg, li)
+            return y, aux
+        h, e = carry
+        y, aux = fwd(lp, h, cfg, li)
+        y, e = L.wire_boundary(act_wire, jax.random.fold_in(act_key, li), y, e)
+        return (y, e), aux
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs = (stacked, jnp.arange(layer_offset, layer_offset + n))
+    if act_wire is None:
+        x, auxs = jax.lax.scan(body, x, xs)
+    else:
+        (x, _), auxs = jax.lax.scan(body, (x, jnp.zeros_like(x)), xs)
+    return x, jnp.sum(auxs)
+
+
 def _embed_inputs(params, cfg: ModelConfig, batch) -> jax.Array:
     x = L.embed(params["embed"], batch["tokens"])
     if cfg.modality == "vision_prefix":
@@ -254,10 +288,26 @@ def _bidir_attn(p, x, cfg: ModelConfig):
     return L._out_proj(out, p["wo"])
 
 
-def forward_train(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array]:
-    """Returns (logits over text positions, aux_loss)."""
+def forward_train(params, cfg: ModelConfig, batch, wires=None,
+                  wire_key=None) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits over text positions, aux_loss).
+
+    ``wires`` / ``wire_key``: optional transport (``repro.comm.Transport``
+    or any mapping with ``.get``) carrying the non-gradient wires — the
+    ``act`` wire compresses each block-boundary residual, the ``moe``
+    wire the expert dispatch/combine buffers (see ARCHITECTURE.md,
+    Transport layer).  ``wires=None`` (default) is the unwired path,
+    bitwise-identical to before the transport existed.
+    """
     at = cfg.arch_type
     aux = jnp.zeros((), jnp.float32)
+    act_wire = wires.get("act") if wires is not None else None
+    moe_wire = wires.get("moe") if wires is not None else None
+    if act_wire is not None or moe_wire is not None:
+        from repro.comm.transport import wire_stream
+
+        k_act = wire_stream(wire_key, "act")
+        k_moe = wire_stream(wire_key, "moe")
 
     if at == "audio":
         enc_out = _encoder(params, cfg, batch["frames"])
@@ -276,15 +326,40 @@ def forward_train(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array
 
     elif at in ("dense", "vlm"):
         x = _embed_inputs(params, cfg, batch)
-        x, _ = _scan_blocks(_dense_block_fwd, params["blocks"], x, cfg)
+        if act_wire is None:
+            x, _ = _scan_blocks(_dense_block_fwd, params["blocks"], x, cfg)
+        else:
+            x, _ = _scan_blocks_wired(
+                lambda p, h, c, li: _dense_block_fwd(p, h, c),
+                params["blocks"], x, cfg,
+                act_wire=act_wire, act_key=k_act,
+            )
         if at == "vlm":
             x = x[:, batch["prefix"].shape[1]:]
 
     elif at == "moe":
         x = _embed_inputs(params, cfg, batch)
-        if params.get("dense_blocks") is not None:
-            x, _ = _scan_blocks(_dense_block_fwd, params["dense_blocks"], x, cfg)
-        x, aux = _scan_blocks(_moe_block_fwd, params["moe_blocks"], x, cfg)
+        if act_wire is None and moe_wire is None:
+            if params.get("dense_blocks") is not None:
+                x, _ = _scan_blocks(_dense_block_fwd, params["dense_blocks"], x, cfg)
+            x, aux = _scan_blocks(_moe_block_fwd, params["moe_blocks"], x, cfg)
+        else:
+            nd = cfg.first_dense_layers
+            if params.get("dense_blocks") is not None:
+                x, _ = _scan_blocks_wired(
+                    lambda p, h, c, li: _dense_block_fwd(p, h, c),
+                    params["dense_blocks"], x, cfg,
+                    act_wire=act_wire, act_key=k_act,
+                )
+
+            def moe_fwd(p, h, c, li):
+                k = None if moe_wire is None else jax.random.fold_in(k_moe, li)
+                return _moe_block_fwd(p, h, c, wire=moe_wire, key=k)
+
+            x, aux = _scan_blocks_wired(
+                moe_fwd, params["moe_blocks"], x, cfg,
+                act_wire=act_wire, act_key=k_act, layer_offset=nd,
+            )
 
     elif at == "ssm":
         x = _embed_inputs(params, cfg, batch)
@@ -312,8 +387,9 @@ def forward_train(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array
     return logits, aux
 
 
-def train_loss(params, cfg: ModelConfig, batch):
-    logits, aux = forward_train(params, cfg, batch)
+def train_loss(params, cfg: ModelConfig, batch, wires=None, wire_key=None):
+    logits, aux = forward_train(params, cfg, batch, wires=wires,
+                                wire_key=wire_key)
     loss = L.softmax_xent(logits[:, :-1], batch["tokens"][:, 1:])
     metrics = {"xent": loss, "aux": aux}
     return loss + aux, metrics

@@ -99,24 +99,68 @@ def route(p: Params, x, cfg: ModelConfig):
     return dispatch, combine, aux
 
 
-def _moe_group(p: Params, xf, cfg: ModelConfig):
-    """Route + dispatch + expert FFN + combine for one token group."""
+def _moe_group(p: Params, xf, cfg: ModelConfig, wire=None, key=None,
+               shift=None):
+    """Route + dispatch + expert FFN + combine for one token group.
+
+    With a ``wire`` (``repro.comm.transport.Wire``), the two expert
+    buffers that cross the all-to-all — the dispatched ``xe`` and the
+    expert outputs ``ye`` — ride the wire's codec, straight-through on
+    the backward pass.  ``shift`` is the per-wire error-feedback pair
+    ``(e_dispatch, e_combine)`` threaded along the group scan so
+    compression noise on the expert buffers averages out over the step
+    instead of biasing expert outputs.  Returns ``(y, aux, shift)``;
+    with ``wire=None`` the math is bitwise-identical to before and
+    ``shift`` passes through untouched.
+    """
     dispatch, combine, aux = route(p, xf, cfg)
 
     # Dispatch tokens to expert buffers: (E, C, D) — einsum, not gather;
     # with experts sharded over "model" this lowers to the all-to-all.
     xe = jnp.einsum("nec,nd->ecd", dispatch.astype(xf.dtype), xf)
+    if wire is not None:
+        k_disp, k_comb = jax.random.split(key)
+        e_disp, e_comb = shift
+        xe, e_disp = wire.send(k_disp, xe, e_disp)
     xe = shard_hint(xe, "model", None, None)
 
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
     h = h * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
     ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    if wire is not None:
+        ye, e_comb = wire.send(k_comb, ye, e_comb)
+        shift = (e_disp, e_comb)
 
     y = jnp.einsum("nec,ecd->nd", combine.astype(xf.dtype), ye)
-    return y, aux
+    return y, aux, shift
 
 
-def moe_apply(p: Params, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+def _wire_shift_zero(cfg: ModelConfig, g: int, d: int, dtype):
+    """Zero EF shift pair for one group's (E, C, D) expert buffers."""
+    z = jnp.zeros((cfg.n_experts, _capacity(g, cfg), d), dtype)
+    return (z, z)
+
+
+def moe_wire_traffic(cfg: ModelConfig, n_tokens: int, dtype=None):
+    """Declared per-worker ``moe``-wire traffic of ONE MoE layer:
+    ``((ShapeDtypeStruct, count), ...)`` for the transport's structural
+    accounting.  Two sends (dispatch + combine) of the ``(E, C, D)``
+    expert buffer per GShard group — the SAME group/capacity math as
+    ``moe_apply``, so the accounting cannot drift from the live path.
+    """
+    if n_tokens <= 0:
+        return ()
+    g = min(cfg.moe_group_size, n_tokens)
+    n_groups = (n_tokens + ((-n_tokens) % g)) // g
+    sds = jax.ShapeDtypeStruct(
+        (cfg.n_experts, _capacity(g, cfg), cfg.d_model),
+        jnp.dtype(dtype or cfg.dtype),
+    )
+    return ((sds, 2 * n_groups),)
+
+
+def moe_apply(p: Params, x, cfg: ModelConfig, wire=None,
+              key=None) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (out (B,S,D), aux_loss scalar).
 
     Tokens are processed in groups of ``cfg.moe_group_size`` (GShard
@@ -124,6 +168,11 @@ def moe_apply(p: Params, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
     instead of O(N * E * C) for the whole shard, which is what keeps the
     1M-token train_4k batch from materializing terabyte dispatch masks.
     Groups run under ``lax.scan`` (sequential, rematerialized).
+
+    ``wire``/``key`` route the dispatch/combine expert buffers through a
+    transport Wire (``--moe_wire``): every group shares the ``(E, C, D)``
+    buffer shape, so the per-wire error-feedback shift is the scan carry
+    — zeroed at step start, threaded across the layer's groups.
     """
     b, s, d = x.shape
     xf = x.reshape(b * s, d)
@@ -135,15 +184,35 @@ def moe_apply(p: Params, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
     n_groups = (n + pad) // g
 
     if n_groups == 1:
-        y, aux = _moe_group(p, xf, cfg)
+        if wire is None:
+            y, aux, _ = _moe_group(p, xf, cfg)
+        else:
+            y, aux, _ = _moe_group(
+                p, xf, cfg, wire=wire, key=jax.random.fold_in(key, 0),
+                shift=_wire_shift_zero(cfg, xf.shape[0], d, xf.dtype),
+            )
     else:
         xg = xf.reshape(n_groups, g, d)
 
-        def body(_, xf_g):
-            y_g, aux_g = _moe_group(p, xf_g, cfg)
-            return None, (y_g, aux_g)
+        if wire is None:
+            def body(_, xf_g):
+                y_g, aux_g, _ = _moe_group(p, xf_g, cfg)
+                return None, (y_g, aux_g)
 
-        _, (y, auxs) = jax.lax.scan(jax.checkpoint(body), None, xg)
+            carry0, xs = None, xg
+        else:
+            def body(e, inp):
+                xf_g, gi = inp
+                y_g, aux_g, e = _moe_group(
+                    p, xf_g, cfg, wire=wire,
+                    key=jax.random.fold_in(key, gi), shift=e,
+                )
+                return e, (y_g, aux_g)
+
+            carry0 = _wire_shift_zero(cfg, g, d, xf.dtype)
+            xs = (xg, jnp.arange(n_groups))
+
+        _, (y, auxs) = jax.lax.scan(jax.checkpoint(body), carry0, xs)
         y = y.reshape(n_groups * g, d)
         aux = jnp.mean(auxs)
 

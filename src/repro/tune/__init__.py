@@ -47,6 +47,7 @@ from repro.tune.model import (
     compose_step_s,
     comm_time_s,
     compute_time_s,
+    extra_wire_bits,
     predict_step,
     predicted_wire_bits,
     wire_codec,
@@ -62,7 +63,9 @@ from repro.tune.plan import (
     save_plan,
 )
 from repro.tune.search import (
+    DEFAULT_ACT_WIRE_GRID,
     DEFAULT_BUCKET_GRID,
+    DEFAULT_MOE_WIRE_GRID,
     DEFAULT_RANDK_GRID,
     default_candidates,
     estimate_delta,
@@ -113,7 +116,8 @@ def autotune(
         "modes": "all" if modes is None else tuple(sorted(modes)),
         "verify_top": verify_top,
         **{k: search_kw[k] for k in
-           ("bucket_grid", "randk_grid", "q8_block_grid") if k in search_kw},
+           ("bucket_grid", "randk_grid", "q8_block_grid",
+            "moe_wire_grid", "act_wire_grid") if k in search_kw},
     }
     fp = plan_fingerprint(params_like, mesh, w, comp.compressor,
                           comp.compressor_kwargs, search=search_sig)
@@ -139,9 +143,11 @@ def autotune(
 
 __all__ = [
     "Candidate",
+    "DEFAULT_ACT_WIRE_GRID",
     "DEFAULT_BUCKET_GRID",
     "DEFAULT_CACHE_DIR",
     "DEFAULT_MEASURE_BYTES_CAP",
+    "DEFAULT_MOE_WIRE_GRID",
     "DEFAULT_RANDK_GRID",
     "DeviceRates",
     "LinkModel",
@@ -161,6 +167,7 @@ __all__ = [
     "default_candidates",
     "estimate_delta",
     "estimate_omega",
+    "extra_wire_bits",
     "load_cached_plan",
     "load_plan",
     "measure_candidate",

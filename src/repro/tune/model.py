@@ -41,13 +41,13 @@ import jax.numpy as jnp
 
 from repro.comm.channel import CHANNEL_MODES, OVERLAP_MODES
 from repro.comm.overlap import DEFAULT_BUCKET_BYTES, plan_buckets
-from repro.comm.wire import encode_workers
-from repro.core.compressors import (
-    Identity,
-    Int8Stochastic,
-    RandK,
-    make_compressor,
+from repro.comm.transport import (
+    WIRE_CODEC_FLAGS,
+    aggregation_wire_codec,
+    wire_flag_codec,
 )
+from repro.comm.wire import encode_meta_free, encode_workers
+from repro.core.compressors import Identity
 from repro.tune.measure import DeviceRates, LinkModel
 
 #: comm modes the tuner searches over — every channel mode except the
@@ -77,6 +77,8 @@ class Candidate:
     efbv_nu: float = 1.0
     compressor: str = "natural"
     compressor_kwargs: tuple = ()
+    moe_wire: str = "none"
+    act_wire: str = "none"
 
     def __post_init__(self):
         if self.comm_mode not in TUNABLE_MODES:
@@ -84,6 +86,12 @@ class Candidate:
                 f"unknown tunable comm mode {self.comm_mode!r}; "
                 f"have {TUNABLE_MODES}"
             )
+        for flag in (self.moe_wire, self.act_wire):
+            if flag not in WIRE_CODEC_FLAGS:
+                raise ValueError(
+                    f"unknown wire codec flag {flag!r}; "
+                    f"have {WIRE_CODEC_FLAGS}"
+                )
 
     @property
     def overlap(self) -> bool:
@@ -100,32 +108,19 @@ class Candidate:
             knobs.append(f"bucket={self.bucket_bytes >> 10}KiB")
         if self.comm_mode in ("efbv", "efbv_overlap"):
             knobs.append(f"eta={self.efbv_eta:g},nu={self.efbv_nu:g}")
+        if self.moe_wire != "none":
+            knobs.append(f"moe={self.moe_wire}")
+        if self.act_wire != "none":
+            knobs.append(f"act={self.act_wire}")
         return self.comm_mode + (f"[{','.join(knobs)}]" if knobs else "")
 
 
 def wire_codec(cand: Candidate):
-    """The codec whose payload defines this mode's bytes-on-wire.
-
-    Aggregation-format modes are charged their aggregation codec (that
-    payload is what rides the collective); the error-feedback modes
-    aggregate densely in HLO but their protocol wire is the configured
-    contractive/compressor message (``collective_payload_scale``).
-    """
-    mode = cand.comm_mode
-    if mode == "dense":
-        return Identity()
-    if mode == "randk_shared":
-        return RandK(q=cand.randk_q, shared_pattern=True)
-    if mode == "q8_ring":
-        return Int8Stochastic()
-    if mode in ("q8_ring_fused",) + OVERLAP_MODES:
-        from repro.kernels.q8ring.ops import FusedQ8
-
-        return FusedQ8(block_rows=cand.q8_block_rows)
-    if mode in ("ef21", "efbv"):
-        return make_compressor(cand.compressor,
-                               **dict(cand.compressor_kwargs))
-    raise ValueError(f"no wire codec for comm mode {mode!r}")
+    """The codec whose payload defines this mode's bytes-on-wire —
+    delegates to the transport's ONE mode->codec map
+    (``repro.comm.transport.aggregation_wire_codec``), so the predictor
+    and the live grad wire cannot drift."""
+    return aggregation_wire_codec(cand)
 
 
 def predicted_wire_bits(cand: Candidate, wtree_like) -> float:
@@ -172,10 +167,46 @@ def compute_time_s(analysis: Optional[dict],
     return max(flops_s, mem_s)
 
 
+def extra_wire_bits(cand: Candidate, wire_traffic) -> float:
+    """Structural per-step bits of every registered NON-grad wire under
+    this candidate's per-wire codec flags.
+
+    ``wire_traffic`` is ``Transport.extra_traffic()``: ``{wire name:
+    ((sds, count), ...)}``.  A wire whose flag is ``"none"`` still moves
+    its payload — uncompressed — so it is charged at identity width; the
+    grid can therefore trade a codec's variance against the bytes it
+    removes from the wire.  Same meta-free encode path as ``Wire.send``.
+    """
+    if not wire_traffic:
+        return 0.0
+    total = 0.0
+    for name, traffic in wire_traffic.items():
+        flag = getattr(cand, f"{name}_wire", "none")
+        codec = (Identity() if flag == "none"
+                 else wire_flag_codec(flag, randk_q=cand.randk_q))
+        cache = {}
+        for sds, count in traffic:
+            sig = (tuple(sds.shape), str(jnp.dtype(sds.dtype)))
+            if sig not in cache:
+                payload = jax.eval_shape(
+                    lambda k, l: encode_meta_free(codec, k, l),
+                    _KEY_SDS, sds,
+                )
+                cache[sig] = float(codec.wire_bits(payload))
+            total += count * cache[sig]
+    return total
+
+
 def comm_time_s(cand: Candidate, wtree_like, link: LinkModel,
-                w: int) -> Tuple[float, float, int]:
+                w: int, *, wire_traffic=None) -> Tuple[float, float, int]:
     """``(comm_s, per_worker_wire_bytes, n_buckets)`` for one candidate
-    (the ring all-reduce bound in the module docstring)."""
+    (the ring all-reduce bound in the module docstring).
+
+    Registered non-grad wires (``wire_traffic``) add their bytes at one
+    link traversal each — all-to-all / p2p payloads cross the bisection
+    once, not 2(w-1) ring hops — so every wire the transport owns is
+    charged, under the codec flags this candidate sets.
+    """
     total_bits = predicted_wire_bits(cand, wtree_like)
     s_bytes = total_bits / 8.0 / max(w, 1)
     n_buckets = (
@@ -185,6 +216,9 @@ def comm_time_s(cand: Candidate, wtree_like, link: LinkModel,
     hops = 2 * (w - 1)
     comm = hops * (n_buckets * link.alpha_s
                    + (s_bytes / max(w, 1)) * link.beta_s_per_byte)
+    extra_bytes = extra_wire_bits(cand, wire_traffic) / 8.0 / max(w, 1)
+    comm += extra_bytes * link.beta_s_per_byte
+    s_bytes += extra_bytes
     return float(comm), float(s_bytes), int(n_buckets)
 
 
@@ -198,10 +232,12 @@ def compose_step_s(compute_s: float, comm_s: float, overlap: bool) -> float:
 
 def predict_step(cand: Candidate, wtree_like, link: LinkModel, w: int, *,
                  analysis: Optional[dict] = None,
-                 rates: Optional[DeviceRates] = None) -> StepPrediction:
+                 rates: Optional[DeviceRates] = None,
+                 wire_traffic=None) -> StepPrediction:
     """The full prediction for one candidate (see module docstring)."""
     compute_s = compute_time_s(analysis, rates)
-    comm_s, s_bytes, n_buckets = comm_time_s(cand, wtree_like, link, w)
+    comm_s, s_bytes, n_buckets = comm_time_s(cand, wtree_like, link, w,
+                                             wire_traffic=wire_traffic)
     return StepPrediction(
         step_s=compose_step_s(compute_s, comm_s, cand.overlap),
         compute_s=compute_s,

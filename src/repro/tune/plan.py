@@ -32,7 +32,8 @@ import jax
 
 #: bump when the plan schema or the search semantics change — a cached
 #: plan from an older tuner must MISS, not silently misconfigure a run
-PLAN_VERSION = 1
+#: (v2: per-wire codec flags moe_wire/act_wire joined the plan schema)
+PLAN_VERSION = 2
 
 
 def plan_fingerprint(params_like, mesh, w: int, compressor: str,
@@ -93,6 +94,8 @@ class TunePlan:
     efbv_nu: float
     predicted_step_s: float
     measured_step_s: Optional[float] = None
+    moe_wire: str = "none"
+    act_wire: str = "none"
     candidates: Tuple[dict, ...] = field(default_factory=tuple)
     version: int = PLAN_VERSION
 
@@ -173,4 +176,6 @@ def apply_plan(comp, plan: TunePlan):
         q8_block_rows=plan.q8_block_rows,
         efbv_eta=plan.efbv_eta,
         efbv_nu=plan.efbv_nu,
+        moe_wire=plan.moe_wire,
+        act_wire=plan.act_wire,
     )

@@ -21,6 +21,7 @@ measured winner becomes the ``TunePlan``.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
@@ -52,6 +53,11 @@ tmap = jax.tree_util.tree_map
 DEFAULT_BUCKET_GRID = (1 << 20, 4 << 20, 16 << 20)
 DEFAULT_RANDK_GRID = (0.01, 0.05, 0.1)
 DEFAULT_Q8_BLOCK_GRID = (64,)
+#: per-wire codec-flag grids — ("none",) keeps non-grad wires out of the
+#: search (and the grid size unchanged) unless the caller has registered
+#: wire traffic to trade against
+DEFAULT_MOE_WIRE_GRID = ("none",)
+DEFAULT_ACT_WIRE_GRID = ("none",)
 
 
 def _leaf_d(leaf) -> int:
@@ -102,12 +108,17 @@ def default_candidates(
     bucket_grid: Sequence[int] = DEFAULT_BUCKET_GRID,
     randk_grid: Sequence[float] = DEFAULT_RANDK_GRID,
     q8_block_grid: Sequence[int] = DEFAULT_Q8_BLOCK_GRID,
+    moe_wire_grid: Sequence[str] = DEFAULT_MOE_WIRE_GRID,
+    act_wire_grid: Sequence[str] = DEFAULT_ACT_WIRE_GRID,
 ) -> Tuple[Candidate, ...]:
     """The search grid for one ``CompressionConfig`` (module docstring).
 
     ``modes`` restricts the grid to a subset of ``TUNABLE_MODES`` —
     the knob CI uses to keep measured candidates tiny (interpret-mode
-    Pallas is slow per grid step on CPU).
+    Pallas is slow per grid step on CPU).  ``moe_wire_grid`` /
+    ``act_wire_grid`` cross every mode candidate with per-wire codec
+    flags (``WIRE_CODEC_FLAGS``), letting the search pick a DIFFERENT
+    codec per registered wire.
     """
     allowed = set(TUNABLE_MODES if modes is None else modes)
     unknown = allowed - set(TUNABLE_MODES)
@@ -146,6 +157,17 @@ def default_candidates(
         for bb in bucket_grid:
             out.append(Candidate("efbv_overlap", bucket_bytes=bb,
                                  efbv_eta=eta, efbv_nu=nu, **base))
+    wire_points = [
+        (mw, aw)
+        for mw in dict.fromkeys(moe_wire_grid)
+        for aw in dict.fromkeys(act_wire_grid)
+    ]
+    if wire_points != [("none", "none")]:
+        out = [
+            dataclasses.replace(c, moe_wire=mw, act_wire=aw)
+            for c in out
+            for mw, aw in wire_points
+        ]
     return tuple(out)
 
 
@@ -176,6 +198,9 @@ def search_plan(
     bucket_grid: Sequence[int] = DEFAULT_BUCKET_GRID,
     randk_grid: Sequence[float] = DEFAULT_RANDK_GRID,
     q8_block_grid: Sequence[int] = DEFAULT_Q8_BLOCK_GRID,
+    moe_wire_grid: Sequence[str] = DEFAULT_MOE_WIRE_GRID,
+    act_wire_grid: Sequence[str] = DEFAULT_ACT_WIRE_GRID,
+    wire_traffic=None,
     verify_top: int = 2,
     measure_iters: int = 3,
     cap_bytes: int = DEFAULT_MEASURE_BYTES_CAP,
@@ -187,12 +212,15 @@ def search_plan(
     ``measure_fn(candidate, wtree_data, key) -> comm_seconds`` is
     injectable for tests; the default times the real channel.  With
     ``verify_top=0`` the predicted ranking alone decides (the dryrun
-    preview path — nothing is timed).
+    preview path — nothing is timed).  ``wire_traffic`` is
+    ``Transport.extra_traffic()`` — the predictor charges every
+    registered non-grad wire under each candidate's wire flags.
     """
     key = jax.random.PRNGKey(0) if key is None else key
     candidates = default_candidates(
         comp, wtree_like, modes=modes, bucket_grid=bucket_grid,
         randk_grid=randk_grid, q8_block_grid=q8_block_grid,
+        moe_wire_grid=moe_wire_grid, act_wire_grid=act_wire_grid,
     )
     if not candidates:
         raise ValueError("empty candidate grid (modes filtered everything)")
@@ -201,7 +229,8 @@ def search_plan(
                                iters=measure_iters)
                 if verify_top > 0 else LinkModel.nominal())
     preds = [predict_step(c, wtree_like, link, w, analysis=analysis,
-                          rates=rates) for c in candidates]
+                          rates=rates, wire_traffic=wire_traffic)
+             for c in candidates]
     order = sorted(range(len(candidates)), key=lambda i: preds[i].step_s)
 
     measured_step = {}
@@ -229,6 +258,8 @@ def search_plan(
         rows.append({
             "label": candidates[i].label,
             "comm_mode": candidates[i].comm_mode,
+            "moe_wire": candidates[i].moe_wire,
+            "act_wire": candidates[i].act_wire,
             "rank": rank,
             "predicted_step_s": p.step_s,
             "predicted_comm_s": p.comm_s,
@@ -248,6 +279,8 @@ def search_plan(
         q8_block_rows=c.q8_block_rows,
         efbv_eta=c.efbv_eta,
         efbv_nu=c.efbv_nu,
+        moe_wire=c.moe_wire,
+        act_wire=c.act_wire,
         predicted_step_s=preds[chosen_i].step_s,
         measured_step_s=measured_step.get(chosen_i),
         candidates=tuple(rows),

@@ -21,6 +21,7 @@ from repro.core.compressors import (
     TernGrad,
     TopK,
     Zero,
+    aot_wire_bits,
     make_compressor,
     shifted,
     tree_bits,
@@ -205,12 +206,12 @@ def test_natural_compression_within_factor2(x, seed):
 
 def test_bits_accounting():
     d = 1000
-    assert RandK(0.1).bits(d) == 100 * (32 + 10)
-    assert RandK(0.1, shared_pattern=True).bits(d) == 100 * 32
-    assert TopK(0.1).bits(d) == 100 * (32 + 10)
-    assert Identity().bits(d) == 32 * d
-    assert Zero().bits(d) == 0
-    assert Int8Stochastic().bits(d) == 8 * d + 32
+    assert aot_wire_bits(RandK(0.1), d) == 100 * (32 + 10)
+    assert aot_wire_bits(RandK(0.1, shared_pattern=True), d) == 100 * 32
+    assert aot_wire_bits(TopK(0.1), d) == 100 * (32 + 10)
+    assert aot_wire_bits(Identity(), d) == 32 * d
+    assert aot_wire_bits(Zero(), d) == 0
+    assert aot_wire_bits(Int8Stochastic(), d) == 8 * d + 32
     tree = {"a": jnp.zeros(10), "b": jnp.zeros((5, 2))}
     assert tree_bits(Identity(), tree) == 32 * 20
 

@@ -1,0 +1,390 @@
+"""Transport-layer tests (the Wire/Transport refactor contract):
+
+  * grad wire: ``Wire.shift_round`` is bit-exact with the pre-refactor
+    ``Channel.shift_round`` for every shift rule x {SimChannel, dense
+    MeshChannel, drained AsyncChannel} — the refactor moved the call
+    site, never the math or the key derivation.
+  * moe wire: dispatch/combine through the dense (identity) codec is
+    value-identical to the uncompressed einsum path, single-group AND
+    grouped-scan; q8 stays within a small relative error of it.
+  * forwarded sends: ``Wire.send`` obeys the codec's unbiased variance
+    contract, and the threaded shift is classic error feedback
+    (``y + e_new == x + e``).
+  * accounting: structural ``wire_bits`` of every registered wire equals
+    the wire_bits of the CONCRETE payloads its codec emits.
+  * registry/config errors name the offending string verbatim next to
+    the accepted list (wire topology, wire codec flag, comm mode,
+    duplicate registration, moe_wire on an expert-free arch).
+  * end to end: the production train step runs with the moe and act
+    wires compressed, and dense wires reproduce the unwired forward
+    exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (
+    AsyncChannel,
+    MeshChannel,
+    SimChannel,
+    Transport,
+    Wire,
+    WIRE_CODEC_FLAGS,
+    WIRE_TOPOLOGIES,
+    aggregation_wire_codec,
+    build_transport,
+    make_channel,
+    wire_flag_codec,
+    wire_stream,
+)
+from repro.comm.channel import Channel
+from repro.comm.wire import encode_workers, leaf_key
+from repro.configs import get_smoke_config
+from repro.configs.base import CompressionConfig, TrainConfig
+from repro.core.compressors import Identity, Int8Stochastic, RandK
+from repro.models import model as M
+from repro.models import moe as MOE
+
+tmap = jax.tree_util.tree_map
+
+RULE_CONFIGS = {
+    "fixed": CompressionConfig(enabled=True, compressor="natural",
+                               shift_rule="fixed"),
+    "diana": CompressionConfig(enabled=True, compressor="natural",
+                               shift_rule="diana", shift_alpha=0.25),
+    "rand_diana": CompressionConfig(enabled=True, compressor="natural",
+                                    shift_rule="rand_diana", shift_p=0.5),
+    "ef21": CompressionConfig(enabled=True, compressor="topk",
+                              compressor_kwargs=(("q", 0.25),),
+                              shift_rule="ef21"),
+    "efbv": CompressionConfig(enabled=True, compressor="natural",
+                              shift_rule="efbv", efbv_eta=0.5, efbv_nu=0.9),
+}
+
+CHANNELS = {
+    "sim": lambda: SimChannel(),
+    "mesh_dense": lambda: MeshChannel(mode="dense"),
+    "async_drained": lambda: AsyncChannel(mode="dense", bucket_bytes=64),
+}
+
+
+def _wtree(key, w=4):
+    return {
+        "a": jax.random.normal(key, (w, 40)),
+        "b": {
+            "c": jax.random.normal(jax.random.fold_in(key, 1), (w, 3, 5)),
+            "d": jax.random.normal(jax.random.fold_in(key, 2), (w,)),
+        },
+    }
+
+
+def _assert_trees_equal(a, b):
+    tmap(lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                    np.asarray(y)), a, b)
+
+
+# ---------------------------------------------------------------------------
+# Grad wire: the refactor is bit-exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chan", sorted(CHANNELS))
+@pytest.mark.parametrize("name", sorted(RULE_CONFIGS))
+def test_grad_wire_shift_round_bit_exact(name, chan):
+    """``transport["grad"].shift_round(key, ...)`` == the pre-refactor
+    ``Channel.shift_round(rule, q, key, ...)`` — same key, verbatim, for
+    every rule x channel.  THE pin that lets the trainer route grads
+    through the Transport without a bitwise behavior change."""
+    comp = RULE_CONFIGS[name]
+    q, rule = comp.make()
+    ch = CHANNELS[chan]()
+    transport = build_transport(comp, None, ch, rule=rule, msg_codec=q, w=4)
+    wire = transport["grad"]
+    assert wire.topology == "allreduce"
+
+    key = jax.random.PRNGKey(17)
+    wtree = _wtree(key)
+    h, h_bar = rule.init(wtree), rule.init_bar(wtree)
+    ref = ch.shift_round(rule, q, key, wtree, h, h_bar)
+    out = wire.shift_round(key, wtree, h, h_bar)
+    _assert_trees_equal(ref[:3], out[:3])
+    assert float(ref[3]) == float(out[3])
+
+
+def test_grad_wire_reduce_mean_matches_channel():
+    comp = CompressionConfig(comm_mode="dense", shift_rule="diana")
+    ch = MeshChannel(mode="dense")
+    wire = build_transport(comp, None, ch, w=4)["grad"]
+    key = jax.random.PRNGKey(3)
+    wtree = _wtree(key)
+    _assert_trees_equal(wire.reduce_mean(key, wtree),
+                        ch.reduce_mean(key, wtree))
+
+
+# ---------------------------------------------------------------------------
+# MoE wire: dense codec == uncompressed einsum path; q8 stays close
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = get_smoke_config("qwen2-moe-a2.7b").with_(dtype="float32")
+    p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    return cfg, p, x
+
+
+def _moe_wire(codec):
+    return Wire(name="moe", topology="all_to_all", codec=codec,
+                channel=make_channel("dense"))
+
+
+@pytest.mark.parametrize("group_size", [64, 16])
+def test_moe_dense_wire_identical_to_uncompressed(moe_setup, group_size):
+    """Identity-codec dispatch/combine through the wire reproduce the
+    plain einsum path VALUE-exactly, single-group and grouped-scan.
+    (array_equal, not bit comparison: the straight-through estimator
+    ``x + stop_gradient(d - x)`` maps -0.0 to +0.0.)"""
+    cfg, p, x = moe_setup
+    cfg = cfg.with_(moe_group_size=group_size)
+    y0, aux0 = MOE.moe_apply(p, x, cfg)
+    y1, aux1 = MOE.moe_apply(p, x, cfg, wire=_moe_wire(Identity()),
+                             key=jax.random.PRNGKey(5))
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    np.testing.assert_array_equal(np.asarray(aux0), np.asarray(aux1))
+
+
+def test_moe_q8_wire_bounded_error(moe_setup):
+    """q8 dispatch/combine stays within a small relative error of the
+    uncompressed path — the int8 codec's resolution, not a routing
+    change (the same tokens reach the same experts)."""
+    cfg, p, x = moe_setup
+    y0, _ = MOE.moe_apply(p, x, cfg)
+    y8, _ = MOE.moe_apply(p, x, cfg, wire=_moe_wire(Int8Stochastic()),
+                          key=jax.random.PRNGKey(5))
+    err = float(jnp.linalg.norm(y8 - y0))
+    ref = float(jnp.linalg.norm(y0))
+    assert np.isfinite(err) and err < 0.2 * ref, (err, ref)
+
+
+def test_moe_wire_traffic_matches_apply_grouping():
+    """The declared traffic reproduces moe_apply's group math: 2 sends
+    (dispatch + combine) of the (E, C, D) buffer per GShard group."""
+    cfg = get_smoke_config("qwen2-moe-a2.7b").with_(dtype="float32")
+    n = 64
+    g = min(cfg.moe_group_size, n)
+    n_groups = (n + (-n) % g) // g
+    ((sds, count),) = MOE.moe_wire_traffic(cfg, n)
+    assert count == 2 * n_groups
+    e, c, d = sds.shape
+    assert e == cfg.n_experts and d == cfg.d_model
+    assert c == MOE._capacity(g, cfg)
+    assert MOE.moe_wire_traffic(cfg, 0) == ()
+
+
+# ---------------------------------------------------------------------------
+# Forwarded sends: variance contract + error feedback
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", [Int8Stochastic(), RandK(0.25)],
+                         ids=["q8", "randk"])
+def test_wire_send_variance_contract(codec):
+    """E||send(x) - x||^2 <= omega(d) ||x||^2 — the send path IS the
+    codec (encode -> forwarded payload -> decode), so it inherits the
+    codec's unbiased variance certificate."""
+    d = 48
+    x = jax.random.normal(jax.random.PRNGKey(2), (d,)) * 2.0 + 0.5
+    wire = _moe_wire(codec)
+    keys = jax.random.split(jax.random.PRNGKey(4), 2000)
+    ys = jax.vmap(lambda k: wire.send(k, x)[0])(keys)
+    var = float(jnp.mean(jnp.sum((ys - x) ** 2, axis=1)))
+    bound = codec.omega(d) * float(jnp.sum(x**2))
+    assert var <= bound * 1.05 + 1e-6, (var, bound)
+
+
+def test_wire_send_error_feedback_identity():
+    """With a threaded shift the send is classic error feedback: the
+    compensated signal x + e rides the wire and y + e_new == x + e."""
+    x = jax.random.normal(jax.random.PRNGKey(6), (32,))
+    e = jax.random.normal(jax.random.PRNGKey(7), (32,)) * 0.1
+    wire = _moe_wire(Int8Stochastic())
+    y, e_new = wire.send(jax.random.PRNGKey(8), x, e)
+    np.testing.assert_allclose(np.asarray(y + e_new), np.asarray(x + e),
+                               rtol=1e-5, atol=1e-6)
+    # no shift threaded -> no residual tracked
+    y2, e2 = wire.send(jax.random.PRNGKey(8), x)
+    assert e2 is None
+
+
+# ---------------------------------------------------------------------------
+# Accounting: structural wire_bits == concrete payload bits, every wire
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["dense", "q8_ring"])
+def test_grad_wire_bits_match_concrete_payloads(mode):
+    """Grad-wire accounting charges the worker-stacked uplink payloads
+    the channel actually emits (same encode_workers path)."""
+    comp = CompressionConfig(comm_mode=mode, shift_rule="diana")
+    w = 4
+    key = jax.random.PRNGKey(11)
+    wtree = _wtree(key, w=w)
+    params_like = tmap(lambda a: a[0], wtree)
+    transport = build_transport(comp, None, make_channel(mode), w=w,
+                                params_like=params_like)
+    codec = aggregation_wire_codec(comp)
+    live = 0.0
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(wtree)):
+        payload, _ = encode_workers(codec, leaf_key(key, i), leaf)
+        live += float(codec.wire_bits(payload))
+    assert transport.per_wire_bits()["grad"] == live, mode
+
+
+def test_all_wires_bits_match_concrete_payloads():
+    """For EVERY registered wire of a fully-wired MoE transport, the
+    structural per-step wire_bits equals count x the concrete payload's
+    wire_bits on the declared shapes."""
+    from repro.comm.wire import encode_meta_free
+
+    cfg = get_smoke_config("qwen2-moe-a2.7b").with_(dtype="float32")
+    comp = CompressionConfig(comm_mode="q8_ring", shift_rule="diana",
+                             moe_wire="q8", act_wire="natural")
+    w = 2
+    params_like = jax.eval_shape(
+        lambda k: M.init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    transport = build_transport(comp, cfg, make_channel(comp), w=w,
+                                params_like=params_like,
+                                tokens_per_worker=64)
+    assert transport.names() == ("grad", "moe", "act")
+    table = transport.per_wire_bits()
+    key = jax.random.PRNGKey(13)
+    for wire in transport:
+        live = 0.0
+        for sds, count in wire.traffic:
+            x = jax.random.normal(key, sds.shape, dtype=jnp.float32).astype(
+                sds.dtype)
+            if wire.topology == "allreduce":
+                payload, _ = encode_workers(wire.codec, key, x)
+            else:
+                payload = encode_meta_free(wire.codec, key, x)
+            live += count * float(wire.codec.wire_bits(payload))
+        assert table[wire.name] == live, wire.name
+        assert table[wire.name] > 0.0
+
+
+def test_wire_stream_is_name_keyed_and_stable():
+    key = jax.random.PRNGKey(0)
+    a, b = wire_stream(key, "moe"), wire_stream(key, "act")
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a),
+                                  np.asarray(wire_stream(key, "moe")))
+
+
+# ---------------------------------------------------------------------------
+# Errors name the offending string verbatim
+# ---------------------------------------------------------------------------
+
+
+def test_wire_rejects_unknown_topology_verbatim():
+    with pytest.raises(ValueError) as ei:
+        Wire(name="x", topology="carrier_pigeon", codec=Identity())
+    msg = str(ei.value)
+    assert "carrier_pigeon" in msg
+    for t in WIRE_TOPOLOGIES:
+        assert t in msg
+
+
+def test_wire_flag_codec_rejects_unknown_flag_verbatim():
+    with pytest.raises(ValueError) as ei:
+        wire_flag_codec("carrier_pigeon")
+    msg = str(ei.value)
+    assert "carrier_pigeon" in msg
+    for f in WIRE_CODEC_FLAGS:
+        assert f in msg
+
+
+def test_build_transport_moe_wire_needs_experts():
+    cfg = get_smoke_config("qwen3-0.6b")
+    comp = CompressionConfig(comm_mode="dense", moe_wire="q8")
+    with pytest.raises(ValueError, match="q8.*MoE|MoE.*q8"):
+        build_transport(comp, cfg, None)
+
+
+def test_transport_duplicate_and_missing_wires():
+    t = Transport([Wire(name="grad", topology="allreduce", codec=Identity())])
+    with pytest.raises(ValueError, match="already registered"):
+        t.register(Wire(name="grad", topology="allreduce", codec=Identity()))
+    with pytest.raises(KeyError, match="nope"):
+        t["nope"]
+    assert t.get("nope") is None and "grad" in t
+
+
+def test_make_channel_names_mode_verbatim():
+    with pytest.raises(ValueError) as ei:
+        make_channel("carrier_pigeon")
+    msg = str(ei.value)
+    assert "carrier_pigeon" in msg
+    for m in ("dense", "randk_shared", "q8_ring"):
+        assert m in msg
+
+
+def test_compressed_tree_mean_names_mode_verbatim():
+    from repro.dist.collectives import compressed_tree_mean
+
+    wtree = {"a": jnp.ones((2, 4))}
+    with pytest.raises(ValueError) as ei:
+        compressed_tree_mean(wtree, "carrier_pigeon", jax.random.PRNGKey(0))
+    msg = str(ei.value)
+    assert "carrier_pigeon" in msg and "dense" in msg
+
+
+# ---------------------------------------------------------------------------
+# End to end: wired forward + the production train step
+# ---------------------------------------------------------------------------
+
+
+def test_dense_wires_reproduce_unwired_forward(moe_setup):
+    """Identity codecs on BOTH non-grad wires reproduce the unwired
+    forward value-exactly — the wires are pure pass-throughs at
+    identity width."""
+    cfg, _, _ = moe_setup
+    comp = CompressionConfig(comm_mode="dense", shift_rule="diana",
+                             moe_wire="dense", act_wire="dense")
+    transport = build_transport(comp, cfg, make_channel("dense"), w=1)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    from repro.data.tokens import synth_batch
+
+    batch = synth_batch(jax.random.PRNGKey(1), cfg, 32, 2)
+    loss0, _ = M.train_loss(params, cfg, batch)
+    loss1, _ = M.train_loss(params, cfg, batch, wires=transport,
+                            wire_key=jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.asarray(loss0), np.asarray(loss1))
+
+
+def test_train_step_with_wires_end_to_end():
+    """The production train step with moe_wire=q8 / act_wire=q8: loses
+    nothing structural (finite loss, positive grad bits) and perturbs
+    the unwired trajectory only through codec noise."""
+    from repro.data.tokens import TokenStream
+    from repro.launch.mesh import make_host_mesh, n_workers
+    from repro.launch.train import build_train_step, init_state
+
+    cfg = get_smoke_config("qwen2-moe-a2.7b").with_(dtype="float32")
+    comp = CompressionConfig(enabled=True, compressor="natural",
+                             shift_rule="diana", comm_mode="dense",
+                             moe_wire="q8", act_wire="q8")
+    tcfg = TrainConfig(learning_rate=1e-3, total_steps=2, warmup_steps=1,
+                       compression=comp)
+    mesh = make_host_mesh()
+    w = n_workers(mesh)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg, w)
+    step = jax.jit(build_train_step(cfg, tcfg, mesh, w))
+    stream = TokenStream(cfg, 32, 4)
+    for i in range(2):
+        state, metrics = step(state, stream.batch(i))
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(state.bits) > 0.0

@@ -73,6 +73,60 @@ def test_candidate_rejects_unknown_mode_naming_modes():
         assert m in str(ei.value)
 
 
+def test_extra_wire_bits_match_live_payloads():
+    """The grad-wire invariant above, extended to EVERY registered wire:
+    the tuner's per-wire AOT charge (``extra_wire_bits``) must equal the
+    structural wire_bits of the CONCRETE payloads each wire's codec
+    emits on its declared traffic — and both must equal the Transport's
+    own ``per_wire_bits`` accounting table."""
+    from repro.comm import build_transport, wire_flag_codec
+    from repro.comm.wire import encode_meta_free
+    from repro.configs import get_smoke_config
+    from repro.tune.model import extra_wire_bits
+
+    cfg = get_smoke_config("qwen2-moe-a2.7b").with_(dtype="float32")
+    comp = CompressionConfig(comm_mode="dense", shift_rule="diana",
+                             moe_wire="q8", act_wire="q8")
+    transport = build_transport(comp, cfg, None, w=2, tokens_per_worker=64)
+    traffic = transport.extra_traffic()
+    assert set(traffic) == {"moe", "act"}
+
+    key = jax.random.PRNGKey(9)
+    live = {}
+    for name, decl in traffic.items():
+        codec = wire_flag_codec("q8")
+        bits = 0.0
+        for sds, count in decl:
+            x = jax.random.normal(key, sds.shape, dtype=sds.dtype)
+            payload = encode_meta_free(codec, key, x)
+            bits += count * float(codec.wire_bits(payload))
+        live[name] = bits
+        # structural accounting on the Transport agrees per wire
+        assert transport.per_wire_bits()[name] == bits, name
+
+    cand = Candidate("dense", moe_wire="q8", act_wire="q8")
+    assert extra_wire_bits(cand, traffic) == sum(live.values())
+    # a "none" flag still moves the payload — at identity width
+    cand_none = Candidate("dense")
+    dense_transport = build_transport(
+        CompressionConfig(comm_mode="dense", shift_rule="diana",
+                          moe_wire="dense", act_wire="dense"),
+        cfg, None, w=2, tokens_per_worker=64)
+    assert extra_wire_bits(cand_none, traffic) == pytest.approx(
+        sum(dense_transport.per_wire_bits()[n] for n in ("moe", "act")))
+
+
+def test_candidate_rejects_unknown_wire_flag_verbatim():
+    from repro.comm import WIRE_CODEC_FLAGS
+
+    for field in ("moe_wire", "act_wire"):
+        with pytest.raises(ValueError) as ei:
+            Candidate("dense", **{field: "carrier_pigeon"})
+        assert "carrier_pigeon" in str(ei.value)
+        for f in WIRE_CODEC_FLAGS:
+            assert f in str(ei.value)
+
+
 # ---------------------------------------------------------------------------
 # TunePlan persistence + fingerprint cache
 # ---------------------------------------------------------------------------
@@ -239,6 +293,41 @@ def test_default_candidates_grid_and_filters():
         tune.default_candidates(comp, wtree, modes=("carrier_pigeon",))
 
 
+def test_search_plan_wire_grids_cross_product():
+    """Wire grids cross the comm-mode grid: the search can pick a
+    DIFFERENT codec per wire, the plan records the winning flags, and
+    the per-wire bytes show up in the candidates' wire_bytes charge."""
+    from repro.comm import build_transport
+    from repro.configs import get_smoke_config
+
+    cfg = get_smoke_config("qwen2-moe-a2.7b").with_(dtype="float32")
+    comp = CompressionConfig(comm_mode="auto", moe_wire="q8", act_wire="q8")
+    traffic = build_transport(
+        CompressionConfig(comm_mode="dense", shift_rule="diana",
+                          moe_wire="q8", act_wire="q8"),
+        cfg, None, w=4, tokens_per_worker=64,
+    ).extra_traffic()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    wtree = _wtree(jax.random.PRNGKey(0), w=4)
+    plan = tune.search_plan(
+        comp, wtree, mesh, 4, modes=("dense", "randk_shared"),
+        randk_grid=(0.05,), link=tune.LinkModel.nominal(), verify_top=0,
+        moe_wire_grid=("none", "q8"), act_wire_grid=("none", "q8"),
+        wire_traffic=traffic,
+    )
+    rows = plan.candidates
+    # 2 modes x 2 moe flags x 2 act flags
+    assert len(rows) == 8
+    assert {(r["moe_wire"], r["act_wire"]) for r in rows} == {
+        ("none", "none"), ("none", "q8"), ("q8", "none"), ("q8", "q8")}
+    # q8 wires strictly beat identity-width wires on a bandwidth link
+    by = {(r["comm_mode"], r["moe_wire"], r["act_wire"]):
+          r["predicted_step_s"] for r in rows}
+    assert by[("randk_shared", "q8", "q8")] < by[("randk_shared", "none",
+                                                  "none")]
+    assert (plan.moe_wire, plan.act_wire) == ("q8", "q8")
+
+
 def test_autotune_cache_hit_skips_search(tmp_path):
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     comp = CompressionConfig(comm_mode="auto")
@@ -284,11 +373,13 @@ def test_auto_mode_must_be_resolved_before_channels():
 def test_apply_plan_sets_every_searched_knob():
     comp = CompressionConfig(comm_mode="auto")
     plan = _plan(mode="q8_ring_overlap", overlap_bucket_bytes=123456,
-                 randk_q=0.02, q8_block_rows=32, efbv_eta=0.5, efbv_nu=0.9)
+                 randk_q=0.02, q8_block_rows=32, efbv_eta=0.5, efbv_nu=0.9,
+                 moe_wire="q8", act_wire="dense")
     r = tune.apply_plan(comp, plan)
     assert (r.comm_mode, r.overlap_bucket_bytes, r.randk_q,
             r.q8_block_rows, r.efbv_eta, r.efbv_nu) == (
         "q8_ring_overlap", 123456, 0.02, 32, 0.5, 0.9)
+    assert (r.moe_wire, r.act_wire) == ("q8", "dense")
     ch = make_channel(r)
     assert ch.bucket_bytes == 123456 and ch.q8_block_rows == 32
 

@@ -1,7 +1,7 @@
 """Wire-codec layer tests: encode/decode round-trip identity against the
-derived ``__call__``, structural bits accounting (``wire_bits`` vs the
-deprecated ``bits(d)`` shim), SimChannel vs MeshChannel agreement, and
-payload-size pins for the codec-driven collectives."""
+derived ``__call__``, structural bits accounting (runtime ``wire_bits``
+vs the AOT ``aot_wire_bits`` eval_shape path), SimChannel vs MeshChannel
+agreement, and payload-size pins for the codec-driven collectives."""
 
 import math
 
@@ -31,6 +31,7 @@ from repro.core.compressors import (
     TernGrad,
     TopK,
     Zero,
+    aot_wire_bits,
     make_compressor,
     wire_bits,
 )
@@ -100,57 +101,61 @@ def test_payload_dtypes_honest(xvec):
 
 
 @pytest.mark.parametrize("op", OPS, ids=IDS)
-def test_wire_bits_agrees_with_bits_shim(op, xvec):
-    """The deprecated analytic-style ``bits(d)`` shim must equal the
-    structural ``wire_bits`` of a real payload (BernoulliP's payload is
-    a random variable; its shim reports the expectation)."""
+def test_wire_bits_agrees_with_aot(op, xvec):
+    """The AOT ``aot_wire_bits`` (eval_shape of the codec's own encode)
+    must equal the structural ``wire_bits`` of a real payload
+    (BernoulliP's payload is a random variable; its AOT size is the
+    expectation)."""
     d = int(xvec.size)
     payload, _ = op.encode(jax.random.PRNGKey(1), xvec)
     wb = op.wire_bits(payload)
+    aot = aot_wire_bits(op, d)
     if isinstance(op, BernoulliP):
-        # traced count: either just the flag, or flag + full vector
+        # concrete count: either just the flag, or flag + full vector
         assert float(wb) in (1.0, 1.0 + 32 * d)
-        assert op.bits(d) == op.p * 32 * d + 1.0
+        assert aot == op.p * 32 * d + 1.0
     else:
-        assert float(wb) == op.bits(d), (float(wb), op.bits(d))
+        assert float(wb) == aot, (float(wb), aot)
 
 
 def test_wire_bits_pins_legacy_formulas():
-    """Shim test: wire_bits ≡ the legacy hand-written bits(d) formulas
-    for the identity / Rand-K / int8 wire formats."""
+    """wire_bits / aot_wire_bits ≡ the legacy hand-written per-format
+    size formulas for the identity / Rand-K / int8 wire formats."""
     d = 1000
     x = jax.random.normal(jax.random.PRNGKey(2), (d,))
     key = jax.random.PRNGKey(3)
 
     p, _ = Identity().encode(key, x)
-    assert Identity().wire_bits(p) == 32 * d == Identity().bits(d)
+    assert Identity().wire_bits(p) == 32 * d == aot_wire_bits(Identity(), d)
 
     p, _ = RandK(0.1).encode(key, x)
-    assert RandK(0.1).wire_bits(p) == 100 * (32 + 10) == RandK(0.1).bits(d)
+    assert (RandK(0.1).wire_bits(p) == 100 * (32 + 10)
+            == aot_wire_bits(RandK(0.1), d))
     p, _ = RandK(0.1, shared_pattern=True).encode(key, x)
     assert RandK(0.1, shared_pattern=True).wire_bits(p) == 100 * 32
 
     p, _ = Int8Stochastic().encode(key, x)
     assert Int8Stochastic().wire_bits(p) == 8 * d + 32
 
-    # and the other analytic formats keep their legacy sizes too
-    assert TopK(0.1).bits(d) == 100 * (32 + 10)
-    assert ScaledSign().bits(d) == d + 32
-    assert TernGrad().bits(d) == 2 * d + 32
-    assert NaturalCompression().bits(d) == 9 * d
-    assert NaturalDithering(8).bits(d) == d * (1 + 4) + 32
-    assert Zero().bits(d) == 0
+    # and the other wire formats keep their legacy sizes too
+    assert aot_wire_bits(TopK(0.1), d) == 100 * (32 + 10)
+    assert aot_wire_bits(ScaledSign(), d) == d + 32
+    assert aot_wire_bits(TernGrad(), d) == 2 * d + 32
+    assert aot_wire_bits(NaturalCompression(), d) == 9 * d
+    assert aot_wire_bits(NaturalDithering(8), d) == d * (1 + 4) + 32
+    assert aot_wire_bits(Zero(), d) == 0
 
 
-def test_bernoulli_composite_bits_shim():
-    """Regression: the bits(d) shim must survive codecs whose wire size
-    is a random variable, including nested inside Induced — eval_shape
+def test_bernoulli_composite_aot_bits():
+    """Regression: AOT costing must survive codecs whose wire size is a
+    random variable, including nested inside Induced — eval_shape
     payloads report the EXPECTED bits."""
     d = 1000
     b = BernoulliP(0.1)
-    assert b.bits(d) == b.p * 32 * d + 1.0
+    assert aot_wire_bits(b, d) == b.p * 32 * d + 1.0
     ind = Induced(c=TopK(0.1), q=b)
-    assert ind.bits(d) == TopK(0.1).bits(d) + b.bits(d)
+    assert aot_wire_bits(ind, d) == (aot_wire_bits(TopK(0.1), d)
+                                     + aot_wire_bits(b, d))
 
 
 def test_ring_stages_reject_meta_codecs():
@@ -219,7 +224,7 @@ def test_uplink_bits_are_structural():
     wtree = {"a": jax.random.normal(key, (w, 40))}
     q = RandK(0.25)
     _, bits = SimChannel().uplink(q, key, wtree)
-    assert float(bits) == w * q.bits(40)
+    assert float(bits) == w * aot_wire_bits(q, 40)
 
 
 def test_mesh_channel_randk_shared_is_codec_driven():

@@ -22,7 +22,7 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig2,fig4,table1,"
                          "gdci,ef21,efbv,kernels,overlap,autotune,"
-                         "moe_wire,roofline")
+                         "moe_wire,serve_delta,roofline")
     args = ap.parse_args(argv)
     scale = 50 if args.smoke else (4 if args.fast else 1)
 
@@ -38,6 +38,7 @@ def main(argv=None):
         moe_wire_bench,
         overlap_bench,
         roofline_report,
+        serve_delta_bench,
         table1_rates,
     )
 
@@ -57,6 +58,9 @@ def main(argv=None):
             smoke=args.smoke),
         "moe_wire": lambda: moe_wire_bench.main(
             steps=max(2, moe_wire_bench.STEPS // (2 if scale > 1 else 1)),
+            smoke=args.smoke),
+        "serve_delta": lambda: serve_delta_bench.main(
+            steps=max(4, serve_delta_bench.STEPS // (2 if scale > 1 else 1)),
             smoke=args.smoke),
         "roofline": roofline_report.main,
     }

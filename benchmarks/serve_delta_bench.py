@@ -1,0 +1,91 @@
+"""Serve-delta benchmark: N serving replicas kept fresh off the shifted
+model-delta stream while a REAL smoke trainer runs.
+
+Runs ``repro.serving.run_fleet_demo`` in a subprocess (process
+isolation, like the other benches) for a ladder of model-wire codecs —
+the lossless ``dense`` bit-pattern delta stream, ``q8`` and ``natural``
+— and records per variant the delta bytes per publish/step against the
+dense-broadcast baseline (``bytes_fraction``), the per-publish
+``err_rel`` series (the shrinking-delta effect: error falls as training
+converges), the max staleness seen against the bound K, resync count,
+and the tokens the fleet actually served.  The artifact is the serving
+layer's cost record: every variant must sustain the decode traffic at
+staleness <= K, with the compressed rows moving a small fraction of the
+dense broadcast bytes.
+
+Writes the machine-readable ``BENCH_serve_delta.json`` next to the repo
+root (uploaded as a CI artifact alongside the other BENCH files).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import REPO_ROOT as REPO, print_table, write_bench_json
+
+STEPS = 8
+OUT_JSON = "BENCH_serve_delta.json"
+
+_CHILD = """
+import json
+
+from repro.serving import run_fleet_demo
+
+rows = {{}}
+for flag in ("dense", "q8", "natural"):
+    rows[flag] = run_fleet_demo(
+        "qwen3-0.6b", n_replicas=2, model_wire=flag, publish_every=2,
+        stale_k=4, steps={steps}, n_requests=4, gen_len=8,
+    )
+print("BENCH_JSON " + json.dumps(rows))
+"""
+
+
+def main(steps: int = STEPS, smoke: bool = False):
+    steps = max(4, 4 if smoke else steps)
+    r = subprocess.run(
+        [sys.executable, "-c", _CHILD.format(steps=steps)],
+        capture_output=True, text=True, timeout=1800,
+        env={**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"},
+        cwd=REPO,
+    )
+    line = next(
+        (l for l in r.stdout.splitlines() if l.startswith("BENCH_JSON ")),
+        None,
+    )
+    if line is None:
+        raise RuntimeError(
+            f"serve_delta bench child failed:\n{r.stdout}\n{r.stderr[-3000:]}"
+        )
+    results = json.loads(line[len("BENCH_JSON "):])
+    write_bench_json(OUT_JSON, results)
+    rows = [
+        (
+            flag,
+            f"{m['delta_bytes_per_publish'] / 1e6:.3f}MB",
+            f"{m['dense_bytes_per_publish'] / 1e6:.3f}MB",
+            f"{m['bytes_fraction']:.3f}",
+            f"{m['err_rel'][0]:.1e}->{m['err_rel'][-1]:.1e}"
+            if m["err_rel"] else "n/a",
+            f"{m['max_staleness']}/{m['stale_k']}",
+            str(m["resyncs"]),
+            str(m["tokens_served"]),
+        )
+        for flag, m in results.items()
+    ]
+    print_table(
+        "model-delta downlink: 2 replicas off one shifted stream "
+        "(publish_every=2; err column is first->last publish — the "
+        "shrinking-delta effect)",
+        ["wire", "delta B/pub", "dense B/pub", "fraction", "err_rel",
+         "stale/K", "resyncs", "tokens"],
+        rows,
+    )
+    return results
+
+
+if __name__ == "__main__":
+    main()

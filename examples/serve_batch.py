@@ -2,9 +2,14 @@
 decode against rolling KV caches / recurrent state, across three arch
 families (dense GQA, MLA+MoE, RWKV) through the same serve_step API.
 
-Run:  PYTHONPATH=src python examples/serve_batch.py
+Run:  PYTHONPATH=src python examples/serve_batch.py [--model_wire q8]
+
+``--model_wire`` also prints the trainer->serving downlink accounting:
+the structural bytes/step of a ``Wire("model", broadcast, ...)`` that
+would keep these replicas fresh (see repro.serving.delta).
 """
 
+import argparse
 import time
 
 import jax
@@ -66,12 +71,46 @@ def continuous_batching_demo():
         print(f"  req {r.uid}: prompt {r.prompt} -> {r.output[:8]}...")
 
 
-def main():
+def downlink_accounting(arch: str, model_wire: str, publish_every: int):
+    """Structural bytes of the model-delta downlink for this arch —
+    from the transport's registered ``model`` wire (``wire_bits``), the
+    same accounting the dryrun table and the tune predictor charge."""
+    from repro.comm import build_transport
+    from repro.configs.base import CompressionConfig
+
+    cfg = get_smoke_config(arch).with_(dtype="float32")
+    params_shapes = jax.eval_shape(
+        lambda k: M.init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    comp = CompressionConfig(enabled=False, model_wire=model_wire,
+                             publish_every=publish_every)
+    transport = build_transport(comp, cfg, None, params_like=params_shapes)
+    wire = transport["model"]
+    print(f"\nmodel downlink [{arch}] wire={model_wire} "
+          f"publish_every={publish_every}: "
+          f"{wire.wire_bits() / 8e6:.3f} MB/step on the wire "
+          f"(codec {type(wire.codec).__name__}, "
+          f"topology {wire.topology})")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model_wire", "--model-wire", dest="model_wire",
+                    default="none",
+                    help="print downlink wire accounting for this codec "
+                         "flag (q8/natural/dense/...)")
+    ap.add_argument("--publish_every", "--publish-every",
+                    dest="publish_every", type=int, default=2)
+    args = ap.parse_args(argv)
+
     print("batched serving across architecture families:")
     for arch in ("qwen3-0.6b", "deepseek-v2-lite-16b", "rwkv6-3b",
                  "zamba2-1.2b"):
         serve(arch)
     continuous_batching_demo()
+    if args.model_wire != "none":
+        downlink_accounting("qwen3-0.6b", args.model_wire,
+                            args.publish_every)
 
 
 if __name__ == "__main__":

@@ -53,13 +53,15 @@ from repro.comm.wire import encode_meta_free, encode_workers
 
 #: wire topologies the Transport understands.  ``allreduce`` wires run
 #: the shift-rule engine through a Channel; ``all_to_all`` and ``p2p``
-#: wires forward codec payloads point to point (``Wire.send``).
-WIRE_TOPOLOGIES = ("allreduce", "all_to_all", "p2p")
+#: wires forward codec payloads point to point (``Wire.send``);
+#: ``broadcast`` wires fan one sender's payload out to every subscriber
+#: (``Wire.broadcast`` — the trainer->serving-fleet model downlink).
+WIRE_TOPOLOGIES = ("allreduce", "all_to_all", "p2p", "broadcast")
 
 #: per-wire codec flags the config/CLI surface accepts (``--moe_wire``,
-#: ``--act_wire``); "none" disables the wire, "dense" moves full-width
-#: payloads through the transport (bitwise-identical math, real
-#: accounting)
+#: ``--act_wire``, ``--model_wire``); "none" disables the wire, "dense"
+#: moves full-width payloads through the transport (bitwise-identical
+#: math, real accounting)
 WIRE_CODEC_FLAGS = ("none", "dense", "q8", "randk", "topk", "sign",
                     "natural")
 
@@ -230,6 +232,18 @@ class Wire:
         e_new = None if e is None else jax.lax.stop_gradient(target - decoded)
         return y, e_new
 
+    def broadcast(self, key, tree):
+        """One downlink fan-out of a whole pytree: ``(decoded, bits)``.
+
+        The sender encodes each leaf once with the wire's codec and
+        every subscriber decodes the same payload — bits are counted
+        once (a broadcast tree sends each byte per LINK, not per
+        subscriber).  This is the model-delta hop of
+        ``repro.serving.delta``; the accounting codec is the same object
+        ``wire_bits`` charges.
+        """
+        return self.channel.broadcast(self.codec, key, tree)
+
     # -- accounting ------------------------------------------------------
 
     def wire_bits(self) -> float:
@@ -317,10 +331,15 @@ def build_transport(comp, cfg, channel, *, rule=None, msg_codec=None,
         worker (``repro.models.moe.moe_wire_traffic``).
       * ``act``  — ``p2p``: one ``(tokens, d_model)`` pipeline-boundary
         send per scanned layer per worker.
+      * ``model`` — ``broadcast``: the trainer->serving-fleet model-delta
+        downlink (``repro.serving.delta``).  One params-shaped payload
+        per publish; declared traffic is scaled by ``1/publish_every``
+        so ``per_wire_bits`` stays per-STEP like every other wire.
 
     ``params_like`` (unstacked parameter tree) declares the grad wire's
-    traffic as worker-stacked leaves; omit it for transports that never
-    read ``per_wire_bits`` for grad.
+    traffic as worker-stacked leaves (and the model wire's as unstacked
+    leaves); omit it for transports that never read ``per_wire_bits``
+    for those wires.
     """
     wires = []
     hidden = 0.0
@@ -380,6 +399,21 @@ def build_transport(comp, cfg, channel, *, rule=None, msg_codec=None,
         wires.append(Wire(
             name="act", topology="p2p",
             codec=wire_flag_codec(act_flag, randk_q=comp.randk_q),
+            channel=channel, traffic=traffic,
+        ))
+
+    model_flag = getattr(comp, "model_wire", "none")
+    if model_flag != "none":
+        traffic = ()
+        if params_like is not None:
+            every = max(1, int(getattr(comp, "publish_every", 1)))
+            traffic = tuple(
+                (jax.ShapeDtypeStruct(leaf.shape, leaf.dtype), 1.0 / every)
+                for leaf in jax.tree_util.tree_leaves(params_like)
+            )
+        wires.append(Wire(
+            name="model", topology="broadcast",
+            codec=wire_flag_codec(model_flag, randk_q=comp.randk_q),
             channel=channel, traffic=traffic,
         ))
     return Transport(wires)

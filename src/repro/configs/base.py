@@ -152,6 +152,16 @@ class CompressionConfig:
     accounting).  Both run straight-through on the backward pass with a
     per-wire, per-step error-feedback shift (see the Transport-layer
     section of ARCHITECTURE.md).
+
+    ``model_wire`` is the trainer->serving-fleet model-delta DOWNLINK
+    (``repro.serving.delta``): every ``publish_every`` steps the
+    publisher ships a shifted-compressed params delta through
+    ``Wire("model", broadcast, ...)``.  Same flag vocabulary; ``dense``
+    is the LOSSLESS stream (integer bit-pattern deltas — exact
+    reconstruction, full width), the lossy flags ride the EF-BV shift
+    recursion over params.  ``publish_every`` scales the wire's declared
+    per-step traffic, so ``per_wire_bits`` and the tune predictor charge
+    the amortized downlink.
     """
     enabled: bool = True
     compressor: str = "natural"    # see core.compressors.make_compressor
@@ -173,6 +183,8 @@ class CompressionConfig:
     drift_resync_every: int = 0    # dense h_bar resync period (0 = off)
     moe_wire: str = "none"         # MoE dispatch/combine wire codec flag
     act_wire: str = "none"         # pipeline-boundary activation wire flag
+    model_wire: str = "none"       # trainer->fleet model-delta downlink flag
+    publish_every: int = 1         # trainer steps between delta publishes
 
     @property
     def effective_shift_rule(self) -> str:

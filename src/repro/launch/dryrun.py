@@ -87,6 +87,10 @@ def tune_preview(cfg: ModelConfig, comp: CompressionConfig, mesh,
         grids["moe_wire_grid"] = tuple(dict.fromkeys(("none", comp.moe_wire)))
     if comp.act_wire != "none":
         grids["act_wire_grid"] = tuple(dict.fromkeys(("none", comp.act_wire)))
+    if comp.model_wire != "none":
+        grids["model_wire_grid"] = tuple(
+            dict.fromkeys(("none", comp.model_wire))
+        )
     plan = tune.search_plan(
         comp, wlike, mesh, w, fingerprint="preview", analysis=analysis,
         link=tune.LinkModel.nominal(), rates=tune.DeviceRates.nominal(),
@@ -97,6 +101,7 @@ def tune_preview(cfg: ModelConfig, comp: CompressionConfig, mesh,
         "predicted_choice": plan.comm_mode,
         "predicted_moe_wire": plan.moe_wire,
         "predicted_act_wire": plan.act_wire,
+        "predicted_model_wire": plan.model_wire,
         "predicted_step_s": plan.predicted_step_s,
         "candidates": list(plan.candidates[:top]),
     }
@@ -360,6 +365,13 @@ def main(argv=None):
                     default="none", choices=list(WIRE_CODEC_FLAGS))
     ap.add_argument("--act-wire", "--act_wire", dest="act_wire",
                     default="none", choices=list(WIRE_CODEC_FLAGS))
+    ap.add_argument("--model-wire", "--model_wire", dest="model_wire",
+                    default="none", choices=list(WIRE_CODEC_FLAGS),
+                    help="trainer->serving model-delta downlink codec")
+    ap.add_argument("--publish_every", "--publish-every",
+                    dest="publish_every", type=int, default=1,
+                    help="steps between downlink publishes (amortizes "
+                         "the model wire's bytes/step)")
     ap.add_argument("--no-compression", action="store_true")
     args = ap.parse_args(argv)
 
@@ -372,6 +384,8 @@ def main(argv=None):
             comm_mode=args.comm_mode,
             moe_wire=args.moe_wire,
             act_wire=args.act_wire,
+            model_wire=args.model_wire,
+            publish_every=args.publish_every,
         )
     )
 

@@ -65,7 +65,8 @@ def build_serve_step(cfg: ModelConfig):
 
 
 def broadcast_params(params, compressor: str = "identity", *,
-                     key: Optional[jax.Array] = None, channel=None):
+                     key: Optional[jax.Array] = None, channel=None,
+                     comm_mode: str = "sim"):
     """Model-broadcast through the Channel downlink.
 
     The params pytree is encoded leaf-wise with the named codec and
@@ -73,11 +74,17 @@ def broadcast_params(params, compressor: str = "identity", *,
     broadcast, ``int8`` / ``natural`` give a quantized weight broadcast
     at 8-9 bits/scalar.  Returns ``(params_received, wire_bits)`` with
     bits computed structurally from the actual payloads.
+
+    ``comm_mode`` builds the channel when none is passed — through
+    ``make_channel``, so an unresolved ``"auto"`` sentinel or a typo'd
+    mode fails HERE with the same named-accepted-modes error every
+    other channel boundary raises, not as a confusing shape error
+    downstream.
     """
-    from repro.comm import SimChannel
+    from repro.comm import make_channel
     from repro.core.compressors import make_compressor
 
-    channel = channel if channel is not None else SimChannel()
+    channel = channel if channel is not None else make_channel(comm_mode)
     q = make_compressor(compressor)
     key = jax.random.PRNGKey(0) if key is None else key
     return channel.broadcast(q, key, params)
@@ -150,7 +157,44 @@ def main(argv=None):
                     dest="broadcast_compressor", default="identity",
                     help="codec for the model-broadcast downlink "
                          "(identity = exact, int8/natural = quantized)")
+    ap.add_argument("--serve_fleet", "--serve-fleet", dest="serve_fleet",
+                    type=int, default=0,
+                    help="N > 0: run the trainer->fleet delta-stream demo "
+                         "with N continuous-batching replicas instead of "
+                         "the single-host greedy loop")
+    ap.add_argument("--model_wire", "--model-wire", dest="model_wire",
+                    default="q8",
+                    help="model-downlink codec flag for the fleet demo "
+                         "(dense = lossless bit-delta, q8/natural/topk/...)")
+    ap.add_argument("--publish_every", "--publish-every",
+                    dest="publish_every", type=int, default=2,
+                    help="trainer steps between delta publishes")
+    ap.add_argument("--stale_k", "--stale-k", dest="stale_k", type=int,
+                    default=4, help="staleness bound K (steps behind the "
+                                    "trainer) before a dense resync")
+    ap.add_argument("--trainer_steps", "--trainer-steps",
+                    dest="trainer_steps", type=int, default=6,
+                    help="trainer steps to run in the fleet demo")
     args = ap.parse_args(argv)
+
+    if args.serve_fleet > 0:
+        import json
+
+        from repro.serving import run_fleet_demo
+
+        stats = run_fleet_demo(
+            args.arch, n_replicas=args.serve_fleet,
+            model_wire=args.model_wire, publish_every=args.publish_every,
+            stale_k=args.stale_k, steps=args.trainer_steps,
+            n_requests=2 * args.serve_fleet, gen_len=args.gen_len,
+        )
+        print(json.dumps(stats, indent=2, default=float))
+        print(f"fleet[{args.serve_fleet}x {args.arch}] wire={args.model_wire}:"
+              f" {stats['bytes_fraction']:.3f} of dense bytes/publish,"
+              f" max staleness {stats['max_staleness']} (K={args.stale_k}),"
+              f" {stats['resyncs']} resyncs,"
+              f" {stats['tokens_served']} tokens served")
+        return stats
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     cfg = cfg.with_(dtype="float32")

@@ -397,6 +397,25 @@ def main(argv=None):
                     help="codec for the pipeline-boundary activation "
                          "wire (block-boundary residuals, straight-"
                          "through backward)")
+    ap.add_argument("--model-wire", "--model_wire", dest="model_wire",
+                    default="none", choices=list(WIRE_CODEC_FLAGS),
+                    help="codec for the trainer->serving model-delta "
+                         "downlink ('none' leaves it off the transport; "
+                         "'dense' is the lossless bit-pattern delta "
+                         "stream)")
+    ap.add_argument("--publish_every", "--publish-every",
+                    dest="publish_every", type=int, default=1,
+                    help="trainer steps between model-delta publishes on "
+                         "the downlink")
+    ap.add_argument("--serve_fleet", "--serve-fleet", dest="serve_fleet",
+                    type=int, default=0,
+                    help="N > 0: co-run N continuous-batching serving "
+                         "replicas off the model-delta stream while "
+                         "training")
+    ap.add_argument("--stale_k", "--stale-k", dest="stale_k", type=int,
+                    default=4,
+                    help="fleet staleness bound K (trainer steps behind) "
+                         "before a dense resync")
     ap.add_argument("--drift-resync-every", "--drift_resync_every",
                     dest="drift_resync_every", type=int, default=0,
                     help="every N rounds resync h_bar from a dense reduce "
@@ -424,7 +443,12 @@ def main(argv=None):
         drift_resync_every=args.drift_resync_every,
         moe_wire=args.moe_wire,
         act_wire=args.act_wire,
+        model_wire=args.model_wire,
+        publish_every=args.publish_every,
     )
+    if args.serve_fleet > 0 and args.model_wire == "none":
+        raise SystemExit("--serve_fleet needs a model downlink; pass "
+                         "--model_wire (dense/q8/natural/...)")
     mesh = make_host_mesh()
     w = n_workers(mesh)
     if args.batch % w:
@@ -451,6 +475,8 @@ def main(argv=None):
             comp = dataclasses.replace(comp, moe_wire=args.moe_wire)
         if args.act_wire != "none":
             comp = dataclasses.replace(comp, act_wire=args.act_wire)
+        if args.model_wire != "none":
+            comp = dataclasses.replace(comp, model_wire=args.model_wire)
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        warmup_steps=max(1, args.steps // 10),
                        compression=comp)
@@ -459,17 +485,45 @@ def main(argv=None):
     step_fn = jax.jit(build_train_step(cfg, tcfg, mesh, w))
     stream = TokenStream(cfg, args.seq, args.batch)
 
+    bridge = None
+    if args.serve_fleet > 0:
+        from repro.comm import SimChannel, build_transport
+        from repro.serving import TrainerFleetBridge
+
+        params_shapes = jax.eval_shape(
+            lambda k: M.init_params(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+        downlink = build_transport(comp, cfg, SimChannel(), w=w,
+                                   params_like=params_shapes)
+        bridge = TrainerFleetBridge(
+            cfg, state.params, downlink["model"],
+            n_replicas=args.serve_fleet, publish_every=comp.publish_every,
+            stale_k=args.stale_k, key=jax.random.PRNGKey(1),
+        )
+
     print(f"arch={args.arch} params={M.count_params_analytic(cfg):,} "
           f"workers={w} compression={comp.enabled} "
           f"rule={comp.effective_shift_rule} comm={comp.comm_mode} "
-          f"moe_wire={comp.moe_wire} act_wire={comp.act_wire}")
+          f"moe_wire={comp.moe_wire} act_wire={comp.act_wire} "
+          f"model_wire={comp.model_wire}")
     t0 = time.time()
     for i in range(args.steps):
         state, metrics = step_fn(state, stream.batch(i))
+        if bridge is not None:
+            bridge.on_step(state.params, i + 1)
         if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
             print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
                   f"bits {float(metrics['bits']):.3e}  "
                   f"({time.time()-t0:.1f}s)")
+    if bridge is not None:
+        bridge.drain()
+        s = bridge.stats()
+        print(f"fleet[{args.serve_fleet}] wire={comp.model_wire}: "
+              f"{s['publishes']} publishes, {s['resyncs']} resyncs, "
+              f"{s['bytes_fraction']:.3f} of dense bytes/publish, "
+              f"max staleness {s['max_staleness']} (K={args.stale_k}), "
+              f"{s['tokens_served']} tokens served")
     return state
 
 

@@ -1,4 +1,33 @@
-"""Serving engine: slot-based continuous batching over the unified
-decode API."""
+"""Serving layer: slot-based continuous batching over the unified
+decode API, plus the trainer->fleet shifted model-delta stream
+(``repro.serving.delta`` publisher, ``repro.serving.fleet``
+subscribers)."""
 
+from repro.serving.delta import (
+    DeltaMsg,
+    DeltaPublisher,
+    apply_msg,
+    dense_tree_bits,
+    tree_rel_err,
+)
 from repro.serving.engine import Engine, Request
+from repro.serving.fleet import (
+    Replica,
+    ServingFleet,
+    TrainerFleetBridge,
+    run_fleet_demo,
+)
+
+__all__ = [
+    "DeltaMsg",
+    "DeltaPublisher",
+    "Engine",
+    "Replica",
+    "Request",
+    "ServingFleet",
+    "TrainerFleetBridge",
+    "apply_msg",
+    "dense_tree_bits",
+    "run_fleet_demo",
+    "tree_rel_err",
+]

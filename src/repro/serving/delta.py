@@ -1,0 +1,258 @@
+"""The model-delta publisher: shifted compression of the DOWNLINK.
+
+The paper's framework compresses the difference against a shifting
+auxiliary vector; nothing in it says the vector must be a gradient.
+Here the published vector is the TRAINER'S PARAMS and the shift is the
+serving fleet's current reconstruction: every ``publish_every`` steps
+the publisher emits ``Q(params - h_bar)`` through the transport's
+``Wire("model", broadcast, ...)`` and integrates the decoded message
+into ``h_bar`` with the SAME phased ``EFBVShift`` rule the grad wire
+runs — the publisher's shift state is just another rule instance over
+params instead of grads (W = 1: the trainer is the only "worker" on
+this wire).  As training converges the deltas shrink, so keeping N
+replicas fresh costs a vanishing fraction of dense broadcast bytes —
+the one regime where compression is free (ROADMAP Open item 5).
+
+Subscriber lockstep is the load-bearing invariant: a replica that has
+applied every message holds EXACTLY the publisher's ``h_bar``, because
+both sides run the bitwise-identical update expression
+``p + eta * m_bar`` (``apply_msg`` mirrors ``EFBVShift.apply``'s
+``h_bar`` line).  The publisher therefore KNOWS each in-sync replica's
+reconstruction error — it is ``||params - h_bar||``, attached to every
+message as ``err_rel`` — and the fleet can trigger a dense ``resync``
+on an error budget without ever reading replica state.
+
+Two wire formats:
+
+  * LOSSY flags (q8 / natural / topk / sign / randk): the EF-BV stream
+    above.  Error is bounded (the shift recursion contracts it) and
+    resets to ZERO at resync.
+  * The ``dense`` flag is the LOSSLESS stream — and it is NOT the
+    float delta ``p - h`` with an identity codec, because
+    ``fl(h + fl(p - h)) != p`` in general (adam-scale updates on
+    small-magnitude params break the Sterbenz exactness condition).
+    Instead the payload is the INTEGER BIT-PATTERN delta
+    ``bitcast_int(p) - bitcast_int(h)`` (wrapping arithmetic), applied
+    as ``bitcast_float(bitcast_int(h) + d)`` — exact reconstruction
+    for ALL values at identity width, and genuinely delta-shaped (the
+    int difference of nearby floats is small, shrinking as training
+    converges).  One exact publish makes a replica bit-identical to
+    the trainer even after a lossy initial sync.
+
+``resync`` is a full-params REPLACEMENT message (never additive), so a
+replica's error after applying it is exactly zero and a lagging
+replica can fast-forward to it, discarding older deltas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.channel import SimChannel
+from repro.comm.transport import wire_stream
+from repro.core.compressors import Identity, wire_bits
+from repro.core.shift_rules import EFBVShift
+
+tmap = jax.tree_util.tree_map
+
+#: bit-pattern integer dtype per float itemsize (the lossless wire)
+_INT_OF_ITEMSIZE = {2: jnp.int16, 4: jnp.int32, 8: jnp.int64}
+
+
+def _int_dtype(leaf):
+    itemsize = jnp.dtype(leaf.dtype).itemsize
+    if itemsize not in _INT_OF_ITEMSIZE:
+        raise ValueError(
+            f"no bit-pattern integer dtype for {jnp.dtype(leaf.dtype)} "
+            f"(itemsize {itemsize}); have widths "
+            f"{sorted(_INT_OF_ITEMSIZE)}"
+        )
+    return _INT_OF_ITEMSIZE[itemsize]
+
+
+def _int_delta_leaf(p, h):
+    """Wrapping bit-pattern delta: exact for all values, small for
+    nearby ones."""
+    it = _int_dtype(p)
+    return (jax.lax.bitcast_convert_type(p, it)
+            - jax.lax.bitcast_convert_type(h, it))
+
+
+def _int_apply_leaf(h, d):
+    """Exact inverse of ``_int_delta_leaf``: recovers ``p`` bitwise."""
+    return jax.lax.bitcast_convert_type(
+        jax.lax.bitcast_convert_type(h, d.dtype) + d, h.dtype
+    )
+
+
+@jax.jit
+def _rel_err(a, b):
+    """``||a - b|| / ||a||`` over whole pytrees (f32 accumulation)."""
+    num = sum(
+        jnp.sum(jnp.square((x - y).astype(jnp.float32)))
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b))
+    )
+    den = sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(a)
+    )
+    return jnp.sqrt(num) / (jnp.sqrt(den) + 1e-12)
+
+
+def tree_rel_err(a, b) -> float:
+    return float(_rel_err(a, b))
+
+
+def dense_tree_bits(tree_like) -> float:
+    """Structural bits of one full-width broadcast of ``tree_like`` —
+    per-leaf numel at the leaf's TRUE dtype width (the identity payload),
+    the baseline every delta publish is measured against."""
+    return float(sum(
+        wire_bits(jax.ShapeDtypeStruct(leaf.shape, leaf.dtype))
+        for leaf in jax.tree_util.tree_leaves(tree_like)
+    ))
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaMsg:
+    """One downlink message.  ``payload`` is the DECODED tree (the wire
+    would carry the codec payload; ``bits`` charges it structurally,
+    the same convention as ``Wire.send``)."""
+
+    kind: str          # "delta" | "resync"
+    seq: int           # stream sequence number (applies strictly in order)
+    step: int          # trainer step this message brings a subscriber to
+    payload: Any       # delta: decoded m_bar (or int bit-delta); resync: params
+    scale: float       # delta integration rate (the rule's eta; 1.0 exact)
+    exact: bool        # True: integer bit-pattern delta (lossless stream)
+    bits: float        # structural wire bits of the payload
+    err_rel: float     # publisher-side ||params - h_bar|| / ||params|| AFTER
+                       # this message (an in-sync replica's exact error)
+
+
+def apply_msg(params, msg: DeltaMsg):
+    """Subscriber-side apply: the bitwise mirror of the publisher.
+
+    ``resync`` REPLACES (error becomes exactly zero); exact deltas add
+    in bit-pattern space; lossy deltas run the same ``p + eta * m_bar``
+    expression as ``EFBVShift.apply``'s ``h_bar`` update — identical
+    values through identical ops keep replica and publisher in bitwise
+    lockstep.
+    """
+    if msg.kind == "resync":
+        return msg.payload
+    if msg.exact:
+        return tmap(_int_apply_leaf, params, msg.payload)
+    return tmap(lambda p, d: p + msg.scale * d, params, msg.payload)
+
+
+class DeltaPublisher:
+    """Trainer-side end of the model wire (see module docstring).
+
+    ``wire`` is the transport's ``Wire("model", broadcast, ...)``; its
+    codec defines the stream (``Identity`` selects the exact bit-delta
+    path).  ``rule`` must be an ``EFBVShift`` instance — the downlink
+    uses its shift integration (``h_bar += eta * m_bar``); the
+    estimator knob ``nu`` is a training-side concept and is unused
+    here.
+    """
+
+    def __init__(self, wire, *, rule: Optional[EFBVShift] = None,
+                 key: Optional[jax.Array] = None, track_error: bool = True):
+        self.wire = wire
+        self.codec = wire.codec
+        self.channel = wire.channel if wire.channel is not None else SimChannel()
+        self.rule = EFBVShift() if rule is None else rule
+        if not isinstance(self.rule, EFBVShift):
+            raise ValueError(
+                "DeltaPublisher runs the EF-BV shift recursion over "
+                f"params; got rule {type(self.rule).__name__} (use "
+                "EFBVShift — eta=nu=1 is EF21)"
+            )
+        self.exact = isinstance(self.codec, Identity)
+        self.track_error = track_error
+        key = jax.random.PRNGKey(0) if key is None else key
+        self._base = wire_stream(key, wire.name)
+        self.h_bar = None       # the fleet's reconstruction (= replica params)
+        self.seq = 0
+        self.step = 0
+        self.published_bits = 0.0   # cumulative, deltas + resyncs
+        self.delta_bits = []        # per-delta-publish structural bits
+        self.err_history = []       # err_rel after each delta publish
+
+    def _emit(self, kind, step, payload, scale, exact, bits, params):
+        self.seq += 1
+        self.step = int(step)
+        self.published_bits += float(bits)
+        # err is vs the stream state AFTER this message — exactly 0.0
+        # for a snapshot resync (h_bar IS params), the sync-codec error
+        # for a lossy initial sync
+        err = tree_rel_err(params, self.h_bar) if self.track_error else 0.0
+        return DeltaMsg(kind=kind, seq=self.seq, step=int(step),
+                        payload=payload, scale=float(scale),
+                        exact=bool(exact), bits=float(bits), err_rel=err)
+
+    def initial_sync(self, params, *, step: int = 0,
+                     sync_codec=None) -> DeltaMsg:
+        """Bootstrap the stream: one full-model broadcast.
+
+        ``sync_codec`` is a ``Compressor`` (default the wire's own
+        codec) — Natural Compression makes the bootstrap cheap (~9
+        bits/scalar) because the shifted stream corrects its error:
+        the publisher's ``h_bar`` is the DECODED sync, so replica and
+        publisher start in lockstep regardless of sync fidelity.
+        """
+        q = self.codec if sync_codec is None else sync_codec
+        decoded, bits = self.channel.broadcast(
+            q, jax.random.fold_in(self._base, 0), params
+        )
+        self.h_bar = decoded
+        return self._emit("resync", step, decoded, 1.0, False,
+                          float(bits), params)
+
+    def publish(self, params, *, step: int) -> DeltaMsg:
+        """One shifted-compressed delta publish at trainer ``step``."""
+        if self.h_bar is None:
+            raise ValueError("publish before initial_sync — the stream "
+                             "has no shift state yet")
+        if self.exact:
+            delta = tmap(_int_delta_leaf, params, self.h_bar)
+            self.h_bar = tmap(_int_apply_leaf, self.h_bar, delta)
+            bits = dense_tree_bits(delta)
+            msg = self._emit("delta", step, delta, 1.0, True, bits, params)
+        else:
+            # the phased schedule of Channel.shift_round, W = 1: the
+            # trainer is the only worker on this wire, h == h_bar
+            k = jax.random.fold_in(self._base, self.seq + 1)
+            k_msg, _, k_agg = jax.random.split(k, 3)
+            wp = tmap(lambda p: p[None], params)
+            wh = tmap(lambda hb: hb[None], self.h_bar)
+            m, bits = self.rule.message(self.codec, k_msg, wp, wh)
+            m_bar = self.channel.reduce_mean(k_agg, m)
+            _, _, hb_new = self.rule.apply(wp, m, m_bar, wh, self.h_bar,
+                                           None)
+            self.h_bar = hb_new
+            msg = self._emit("delta", step, m_bar, self.rule.eta, False,
+                             float(bits), params)
+        self.delta_bits.append(msg.bits)
+        self.err_history.append(msg.err_rel)
+        return msg
+
+    def snapshot(self, params, *, step: int) -> DeltaMsg:
+        """Dense resync: full params at identity width, REPLACEMENT
+        semantics.  Resets the stream — ``h_bar`` becomes ``params``
+        bitwise, so every subscriber's error returns to exactly zero."""
+        self.h_bar = params
+        return self._emit("resync", step, params, 1.0, False,
+                          dense_tree_bits(params), params)
+
+    def dense_bits_per_publish(self) -> float:
+        """The dense-broadcast baseline this stream is measured against."""
+        if self.h_bar is None:
+            raise ValueError("no shift state yet (initial_sync first)")
+        return dense_tree_bits(self.h_bar)

@@ -82,12 +82,39 @@ class Engine:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def update_params(self, params) -> None:
+        """Swap the served weights BETWEEN decode ticks.
+
+        Params are an argument of the jitted tick, so swapping values
+        never recompiles — this is the delta-application point of the
+        serving fleet (``repro.serving.fleet``): a replica applies
+        queued model-delta messages here, then keeps decoding.
+        """
+        self.params = params
+
+    def idle(self) -> bool:
+        """No queued requests and every slot free."""
+        return all(s.free for s in self.slots) and not self.queue
+
+    def step_tick(self) -> List[Request]:
+        """One admission pass + one shared-clock decode tick.
+
+        The externally-driven unit of ``run``: callers that interleave
+        work between ticks (delta application, mid-run submission) call
+        this directly.  Returns requests finished this tick (empty when
+        idle — the clock does not advance on an empty engine).
+        """
+        self._admit()
+        if self.idle():
+            return []
+        return self._tick()
+
     def run(self, max_ticks: int = 10_000) -> List[Request]:
         """Drive until queue and slots drain; returns finished requests."""
         finished: List[Request] = []
         for _ in range(max_ticks):
             self._admit()
-            if all(s.free for s in self.slots) and not self.queue:
+            if self.idle():
                 break
             finished.extend(self._tick())
         return finished

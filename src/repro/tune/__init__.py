@@ -65,6 +65,7 @@ from repro.tune.plan import (
 from repro.tune.search import (
     DEFAULT_ACT_WIRE_GRID,
     DEFAULT_BUCKET_GRID,
+    DEFAULT_MODEL_WIRE_GRID,
     DEFAULT_MOE_WIRE_GRID,
     DEFAULT_RANDK_GRID,
     default_candidates,
@@ -117,7 +118,8 @@ def autotune(
         "verify_top": verify_top,
         **{k: search_kw[k] for k in
            ("bucket_grid", "randk_grid", "q8_block_grid",
-            "moe_wire_grid", "act_wire_grid") if k in search_kw},
+            "moe_wire_grid", "act_wire_grid", "model_wire_grid")
+           if k in search_kw},
     }
     fp = plan_fingerprint(params_like, mesh, w, comp.compressor,
                           comp.compressor_kwargs, search=search_sig)
@@ -147,6 +149,7 @@ __all__ = [
     "DEFAULT_BUCKET_GRID",
     "DEFAULT_CACHE_DIR",
     "DEFAULT_MEASURE_BYTES_CAP",
+    "DEFAULT_MODEL_WIRE_GRID",
     "DEFAULT_MOE_WIRE_GRID",
     "DEFAULT_RANDK_GRID",
     "DeviceRates",

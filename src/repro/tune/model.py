@@ -79,6 +79,7 @@ class Candidate:
     compressor_kwargs: tuple = ()
     moe_wire: str = "none"
     act_wire: str = "none"
+    model_wire: str = "none"
 
     def __post_init__(self):
         if self.comm_mode not in TUNABLE_MODES:
@@ -86,7 +87,7 @@ class Candidate:
                 f"unknown tunable comm mode {self.comm_mode!r}; "
                 f"have {TUNABLE_MODES}"
             )
-        for flag in (self.moe_wire, self.act_wire):
+        for flag in (self.moe_wire, self.act_wire, self.model_wire):
             if flag not in WIRE_CODEC_FLAGS:
                 raise ValueError(
                     f"unknown wire codec flag {flag!r}; "
@@ -112,6 +113,8 @@ class Candidate:
             knobs.append(f"moe={self.moe_wire}")
         if self.act_wire != "none":
             knobs.append(f"act={self.act_wire}")
+        if self.model_wire != "none":
+            knobs.append(f"model={self.model_wire}")
         return self.comm_mode + (f"[{','.join(knobs)}]" if knobs else "")
 
 

@@ -32,8 +32,9 @@ import jax
 
 #: bump when the plan schema or the search semantics change — a cached
 #: plan from an older tuner must MISS, not silently misconfigure a run
-#: (v2: per-wire codec flags moe_wire/act_wire joined the plan schema)
-PLAN_VERSION = 2
+#: (v2: per-wire codec flags moe_wire/act_wire joined the plan schema;
+#:  v3: model_wire — the trainer->serving downlink — joined)
+PLAN_VERSION = 3
 
 
 def plan_fingerprint(params_like, mesh, w: int, compressor: str,
@@ -96,6 +97,7 @@ class TunePlan:
     measured_step_s: Optional[float] = None
     moe_wire: str = "none"
     act_wire: str = "none"
+    model_wire: str = "none"
     candidates: Tuple[dict, ...] = field(default_factory=tuple)
     version: int = PLAN_VERSION
 
@@ -178,4 +180,5 @@ def apply_plan(comp, plan: TunePlan):
         efbv_nu=plan.efbv_nu,
         moe_wire=plan.moe_wire,
         act_wire=plan.act_wire,
+        model_wire=plan.model_wire,
     )

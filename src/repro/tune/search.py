@@ -58,6 +58,7 @@ DEFAULT_Q8_BLOCK_GRID = (64,)
 #: wire traffic to trade against
 DEFAULT_MOE_WIRE_GRID = ("none",)
 DEFAULT_ACT_WIRE_GRID = ("none",)
+DEFAULT_MODEL_WIRE_GRID = ("none",)
 
 
 def _leaf_d(leaf) -> int:
@@ -110,15 +111,17 @@ def default_candidates(
     q8_block_grid: Sequence[int] = DEFAULT_Q8_BLOCK_GRID,
     moe_wire_grid: Sequence[str] = DEFAULT_MOE_WIRE_GRID,
     act_wire_grid: Sequence[str] = DEFAULT_ACT_WIRE_GRID,
+    model_wire_grid: Sequence[str] = DEFAULT_MODEL_WIRE_GRID,
 ) -> Tuple[Candidate, ...]:
     """The search grid for one ``CompressionConfig`` (module docstring).
 
     ``modes`` restricts the grid to a subset of ``TUNABLE_MODES`` —
     the knob CI uses to keep measured candidates tiny (interpret-mode
     Pallas is slow per grid step on CPU).  ``moe_wire_grid`` /
-    ``act_wire_grid`` cross every mode candidate with per-wire codec
-    flags (``WIRE_CODEC_FLAGS``), letting the search pick a DIFFERENT
-    codec per registered wire.
+    ``act_wire_grid`` / ``model_wire_grid`` cross every mode candidate
+    with per-wire codec flags (``WIRE_CODEC_FLAGS``), letting the
+    search pick a DIFFERENT codec per registered wire (the model wire
+    is the trainer->serving downlink).
     """
     allowed = set(TUNABLE_MODES if modes is None else modes)
     unknown = allowed - set(TUNABLE_MODES)
@@ -158,15 +161,16 @@ def default_candidates(
             out.append(Candidate("efbv_overlap", bucket_bytes=bb,
                                  efbv_eta=eta, efbv_nu=nu, **base))
     wire_points = [
-        (mw, aw)
+        (mw, aw, dw)
         for mw in dict.fromkeys(moe_wire_grid)
         for aw in dict.fromkeys(act_wire_grid)
+        for dw in dict.fromkeys(model_wire_grid)
     ]
-    if wire_points != [("none", "none")]:
+    if wire_points != [("none", "none", "none")]:
         out = [
-            dataclasses.replace(c, moe_wire=mw, act_wire=aw)
+            dataclasses.replace(c, moe_wire=mw, act_wire=aw, model_wire=dw)
             for c in out
-            for mw, aw in wire_points
+            for mw, aw, dw in wire_points
         ]
     return tuple(out)
 
@@ -200,6 +204,7 @@ def search_plan(
     q8_block_grid: Sequence[int] = DEFAULT_Q8_BLOCK_GRID,
     moe_wire_grid: Sequence[str] = DEFAULT_MOE_WIRE_GRID,
     act_wire_grid: Sequence[str] = DEFAULT_ACT_WIRE_GRID,
+    model_wire_grid: Sequence[str] = DEFAULT_MODEL_WIRE_GRID,
     wire_traffic=None,
     verify_top: int = 2,
     measure_iters: int = 3,
@@ -221,6 +226,7 @@ def search_plan(
         comp, wtree_like, modes=modes, bucket_grid=bucket_grid,
         randk_grid=randk_grid, q8_block_grid=q8_block_grid,
         moe_wire_grid=moe_wire_grid, act_wire_grid=act_wire_grid,
+        model_wire_grid=model_wire_grid,
     )
     if not candidates:
         raise ValueError("empty candidate grid (modes filtered everything)")
@@ -260,6 +266,7 @@ def search_plan(
             "comm_mode": candidates[i].comm_mode,
             "moe_wire": candidates[i].moe_wire,
             "act_wire": candidates[i].act_wire,
+            "model_wire": candidates[i].model_wire,
             "rank": rank,
             "predicted_step_s": p.step_s,
             "predicted_comm_s": p.comm_s,
@@ -281,6 +288,7 @@ def search_plan(
         efbv_nu=c.efbv_nu,
         moe_wire=c.moe_wire,
         act_wire=c.act_wire,
+        model_wire=c.model_wire,
         predicted_step_s=preds[chosen_i].step_s,
         measured_step_s=measured_step.get(chosen_i),
         candidates=tuple(rows),

@@ -1,0 +1,284 @@
+"""The trainer->fleet model-delta stream: the ISSUE's three contracts.
+
+  (a) dense wire (lossless integer bit-pattern deltas): a replica that
+      applied every message is BIT-IDENTICAL to the trainer — identical
+      decode logits — even after a LOSSY initial sync;
+  (b) lossy wire (q8): bounded parameter error that the publisher
+      reports exactly (the replica is in bitwise lockstep with the
+      publisher's h_bar), resetting to exactly zero at resync;
+  (c) the fleet serves continuous-batching traffic off the stream with
+      staleness <= K, and a staleness breach triggers a dense resync.
+
+Plus the accounting seams: the transport's model wire amortizes its
+bytes/step by publish_every, and the tune layer carries model_wire
+through Candidate labels, predictor charging, and TunePlan round-trips.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import SimChannel, Wire, build_transport, wire_flag_codec
+from repro.configs import get_smoke_config
+from repro.configs.base import CompressionConfig
+from repro.models import model as M
+from repro.serving import (
+    DeltaPublisher,
+    Engine,
+    Request,
+    ServingFleet,
+    apply_msg,
+    dense_tree_bits,
+    tree_rel_err,
+)
+
+tmap = jax.tree_util.tree_map
+
+
+def _model_wire(flag: str) -> Wire:
+    return Wire(name="model", topology="broadcast",
+                codec=wire_flag_codec(flag), channel=SimChannel())
+
+
+def _perturb(params, i: int, scale: float = 0.01):
+    """A synthetic optimizer step: params + scale * N(0, 1)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    key = jax.random.fold_in(jax.random.PRNGKey(777), i)
+    out = []
+    for j, leaf in enumerate(leaves):
+        k = jax.random.fold_in(key, j)
+        out.append(leaf + scale * jax.random.normal(k, leaf.shape,
+                                                    leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _trees_bit_equal(a, b) -> bool:
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b))
+    )
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_smoke_config("qwen3-0.6b").with_(dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _probe_logits(cfg, params, toks):
+    state = M.make_decode_state(cfg, 1, 16)
+    out = []
+    for t, tok in enumerate(toks):
+        logits, state = M.decode_step(
+            params, cfg, jnp.asarray([[tok]], jnp.int32), state, jnp.int32(t)
+        )
+        out.append(np.asarray(logits))
+    return out
+
+
+# -- contract (a): lossless stream ------------------------------------------
+
+
+def test_dense_wire_bit_identical_logits(dense_setup):
+    """K=1 + lossless codec => replica params and decode logits are
+    BIT-identical to the trainer's after every publish."""
+    cfg, params = dense_setup
+    pub = DeltaPublisher(_model_wire("dense"), key=jax.random.PRNGKey(3))
+    sync = pub.initial_sync(params)
+    replica = sync.payload
+    assert _trees_bit_equal(replica, params)  # dense sync is exact too
+
+    for i in range(3):
+        params = _perturb(params, i)
+        msg = pub.publish(params, step=i + 1)
+        assert msg.exact
+        replica = apply_msg(replica, msg)
+        assert _trees_bit_equal(replica, params)
+        assert msg.err_rel == 0.0
+
+    ref = _probe_logits(cfg, params, [5, 17, 99])
+    got = _probe_logits(cfg, replica, [5, 17, 99])
+    for r, g in zip(ref, got):
+        assert np.array_equal(r, g)
+
+
+def test_dense_wire_exact_after_lossy_sync(dense_setup):
+    """One exact publish makes the replica bit-identical even when the
+    bootstrap broadcast was lossy (natural, ~9 bits/scalar)."""
+    _, params = dense_setup
+    pub = DeltaPublisher(_model_wire("dense"), key=jax.random.PRNGKey(4))
+    sync = pub.initial_sync(params, sync_codec=wire_flag_codec("natural"))
+    replica = sync.payload
+    assert not _trees_bit_equal(replica, params)   # lossy bootstrap
+    assert sync.err_rel > 0.0
+
+    msg = pub.publish(params, step=1)
+    replica = apply_msg(replica, msg)
+    assert _trees_bit_equal(replica, params)
+    assert msg.err_rel == 0.0
+
+
+# -- contract (b): lossy stream, bounded + publisher-known error -------------
+
+
+def test_q8_wire_bounded_error_and_lockstep(dense_setup):
+    """Lossy stream: error stays bounded, the replica is in bitwise
+    lockstep with the publisher's h_bar (so err_rel IS the replica's
+    error), and a snapshot resync resets it to exactly zero."""
+    _, params = dense_setup
+    pub = DeltaPublisher(_model_wire("q8"), key=jax.random.PRNGKey(5))
+    sync = pub.initial_sync(params)
+    replica = sync.payload
+
+    errs = []
+    for i in range(4):
+        params = _perturb(params, 100 + i)
+        msg = pub.publish(params, step=i + 1)
+        assert not msg.exact
+        replica = apply_msg(replica, msg)
+        # lockstep: the replica holds EXACTLY the publisher's shift
+        assert _trees_bit_equal(replica, pub.h_bar)
+        assert msg.err_rel == pytest.approx(tree_rel_err(params, replica))
+        errs.append(msg.err_rel)
+    assert max(errs) < 0.05            # bounded
+    assert max(errs) > 0.0             # genuinely lossy
+
+    snap = pub.snapshot(params, step=5)
+    replica = apply_msg(replica, snap)
+    assert _trees_bit_equal(replica, params)
+    assert snap.err_rel == 0.0
+
+
+# -- contract (c): the fleet -------------------------------------------------
+
+
+def test_fleet_serves_off_dense_stream(dense_setup):
+    """Two replicas serve real requests while the stream advances; end
+    state is bit-equal to the trainer and staleness never exceeded K."""
+    cfg, params = dense_setup
+    pub = DeltaPublisher(_model_wire("dense"), key=jax.random.PRNGKey(6))
+    sync = pub.initial_sync(params)
+    fleet = ServingFleet(cfg, sync, 2, stale_k=4, max_batch=2, cache_len=64)
+    for i, prompt in enumerate([[5, 17, 99], [42, 7], [123, 9, 11], [88, 3]]):
+        fleet.submit(Request(uid=i, prompt=prompt, max_new_tokens=6))
+
+    done = []
+    for i in range(6):
+        params = _perturb(params, 200 + i, scale=1e-3)
+        fleet.deliver(pub.publish(params, step=i + 1))
+        done.extend(fleet.tick())
+    done.extend(fleet.run_drain())
+
+    assert sorted(r.uid for r in done) == [0, 1, 2, 3]
+    assert all(r.done for r in done)
+    assert fleet.max_staleness_seen <= 4
+    for rep in fleet.replicas:
+        assert _trees_bit_equal(rep.params, params)
+
+
+def test_fleet_staleness_triggers_resync(dense_setup):
+    """A replica capped at one apply per tick falls behind a publish
+    burst; the staleness bound flags it and a snapshot fast-forwards it
+    (pending backlog dropped, not replayed)."""
+    cfg, params = dense_setup
+    pub = DeltaPublisher(_model_wire("q8"), key=jax.random.PRNGKey(7))
+    sync = pub.initial_sync(params)
+    fleet = ServingFleet(cfg, sync, 1, stale_k=2, max_batch=1, cache_len=64,
+                         max_apply_per_tick=1)
+    fleet.submit(Request(uid=0, prompt=[5, 17], max_new_tokens=32))
+
+    for i in range(5):   # burst: 5 publishes land before the next tick
+        params = _perturb(params, 300 + i, scale=1e-3)
+        fleet.deliver(pub.publish(params, step=i + 1))
+    fleet.tick()         # 1 apply/tick: the replica reaches step 1 of 5
+    lagging = fleet.needs_resync()
+    assert lagging, "staleness bound K=2 never tripped under the burst"
+    assert fleet.max_staleness_seen > 2
+
+    snap = pub.snapshot(params, step=fleet.trainer_step)
+    backlog = len(fleet.replicas[0].pending)
+    fleet.deliver(snap)
+    fleet.tick()
+    rep = fleet.replicas[0]
+    assert not fleet.needs_resync()
+    assert rep.staleness(fleet.trainer_step) == 0
+    assert rep.resyncs == 1
+    assert _trees_bit_equal(rep.params, params)
+    # fast-forward: the backlog was dropped, not replayed
+    assert rep.applied < backlog + 5
+
+
+# -- engine slot-lifecycle edge cases use tests/test_serving.py --------------
+# -- accounting seams --------------------------------------------------------
+
+
+def _transport_for(cfg, flag, publish_every):
+    comp = CompressionConfig(enabled=False, model_wire=flag,
+                             publish_every=publish_every)
+    shapes = jax.eval_shape(
+        lambda k: M.init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    return build_transport(comp, cfg, SimChannel(), params_like=shapes)
+
+
+def test_transport_model_wire_accounting(dense_setup):
+    """The model wire's bytes/step amortize by publish_every, and q8
+    rides under the dense broadcast."""
+    cfg, _ = dense_setup
+    b1 = _transport_for(cfg, "q8", 1).per_wire_bits()["model"]
+    b4 = _transport_for(cfg, "q8", 4).per_wire_bits()["model"]
+    assert b4 == pytest.approx(b1 / 4.0)
+    dense = _transport_for(cfg, "dense", 1).per_wire_bits()["model"]
+    assert b1 < dense
+    assert _transport_for(cfg, "q8", 1)["model"].topology == "broadcast"
+
+
+def test_tune_carries_model_wire():
+    """Candidate validates/labels the flag, the predictor charges the
+    model wire's declared traffic, and TunePlan round-trips it."""
+    from repro import tune
+    from repro.tune.model import Candidate, extra_wire_bits
+
+    cand = Candidate("dense", model_wire="q8")
+    assert "model=q8" in cand.label
+    with pytest.raises(ValueError, match="wire codec flag"):
+        Candidate("dense", model_wire="bogus")
+
+    sds = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    traffic = {"model": ((sds, 0.5),)}
+    charged = extra_wire_bits(cand, traffic)
+    uncharged = extra_wire_bits(Candidate("dense"), traffic)
+    assert 0.0 < charged < uncharged   # q8 < identity width
+
+    plan = tune.TunePlan(
+        fingerprint="fp", comm_mode="dense", overlap_bucket_bytes=1 << 20,
+        randk_q=0.05, q8_block_rows=64, efbv_eta=1.0, efbv_nu=1.0,
+        predicted_step_s=1.0, model_wire="q8",
+    )
+    rt = tune.TunePlan.from_dict(plan.to_dict())
+    assert rt.model_wire == "q8"
+    comp = tune.apply_plan(CompressionConfig(comm_mode="auto"), plan)
+    assert comp.model_wire == "q8"
+
+
+def test_broadcast_params_rejects_auto():
+    """Satellite: the serve-side broadcast goes through make_channel,
+    so the 'auto' tuner sentinel fails loudly with the accepted modes."""
+    from repro.launch.serve import broadcast_params
+
+    params = {"w": jnp.ones((4, 4), jnp.float32)}
+    with pytest.raises(ValueError, match="auto"):
+        broadcast_params(params, comm_mode="auto")
+    with pytest.raises(ValueError, match="sim"):
+        broadcast_params(params, comm_mode="definitely-not-a-mode")
+
+
+def test_dense_tree_bits_matches_identity_payload():
+    tree = {"a": jnp.zeros((3, 5), jnp.float32),
+            "b": jnp.zeros((7,), jnp.float32)}
+    assert dense_tree_bits(tree) == 32.0 * (15 + 7)

@@ -99,3 +99,70 @@ def test_engine_eos_stops_early(dense_setup):
                        eos_id=ref[0]))
     done = eng.run()
     assert done[0].output == [ref[0]]
+
+
+def test_engine_eos_in_prompt_ignored_during_prefill(dense_setup):
+    """An EOS id that happens to appear INSIDE the prompt must not
+    terminate the request while the prompt is still being fed — only
+    GENERATED tokens are checked against eos_id."""
+    cfg, params = dense_setup
+    prompt = [5, 17, 99, 3]
+    ref = _offline_greedy(cfg, params, prompt, 6)
+    eos = prompt[1]
+    assert eos not in ref   # the generated stream itself never emits it
+    eng = Engine(cfg, params, max_batch=2, cache_len=64)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=6, eos_id=eos))
+    done = eng.run()
+    assert len(done) == 1 and done[0].output == ref
+
+
+def test_engine_admit_into_just_freed_slot(dense_setup):
+    """Mid-run submission into a slot freed the SAME tick: the new
+    request must see an invalidated cache (kpos reset), not the old
+    occupant's KV — driven through step_tick, not run()."""
+    cfg, params = dense_setup
+    a, b = [5, 17, 99], [42, 7, 13]
+    ref_b = _offline_greedy(cfg, params, b, 6)
+    eng = Engine(cfg, params, max_batch=1, cache_len=64)
+    eng.submit(Request(uid=0, prompt=a, max_new_tokens=4))
+    done = []
+    for _ in range(100):
+        done.extend(eng.step_tick())
+        if done:
+            break
+    assert done and done[0].uid == 0
+    # slot 0 is free as of this tick; B lands in it at a later clock
+    eng.submit(Request(uid=1, prompt=b, max_new_tokens=6))
+    for _ in range(100):
+        done.extend(eng.step_tick())
+        if len(done) == 2:
+            break
+    assert done[1].uid == 1 and done[1].output == ref_b
+
+
+def test_engine_recurrent_slot_zeroed_on_admit():
+    """Mamba2-family recurrent state: admitting into a reused slot must
+    zero the previous request's SSM state (the recurrent analogue of KV
+    invalidation) — back-to-back requests each match offline decode."""
+    cfg = get_smoke_config("zamba2-1.2b").with_(dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    prompts = [[5, 17, 99], [42, 7, 13]]
+    refs = []
+    for p in prompts:
+        state = M.make_decode_state(cfg, 1, 64)
+        out = []
+        for t in range(len(p) + 4 - 1):
+            cur = p[t] if t < len(p) else out[-1]
+            lg, state = M.decode_step(
+                params, cfg, jnp.asarray([[cur]], jnp.int32), state,
+                jnp.int32(t),
+            )
+            if t >= len(p) - 1:
+                out.append(int(jnp.argmax(lg[0, -1])))
+        refs.append(out)
+    eng = Engine(cfg, params, max_batch=1, cache_len=64)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+    done = sorted(eng.run(), key=lambda r: r.uid)
+    for r, ref in zip(done, refs):
+        assert r.output == ref, (r.uid, r.output, ref)

@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-import json
 import os
 
 import numpy as np
@@ -19,6 +18,12 @@ from repro.core import (
 )
 from repro.core.simulate import Trace, run_dcgd_shift
 from repro.data.problems import Problem
+from repro.obs import finite_or_none, format_table, write_strict_json
+
+__all__ = [
+    "REPO_ROOT", "diana_run", "finite_or_none", "fmt_bits", "print_table",
+    "rand_diana_run", "tuned_run", "write_bench_json",
+]
 
 
 def diana_run(problem: Problem, q, steps: int, seed: int = 0,
@@ -66,22 +71,15 @@ def tuned_run(run_fn, multipliers=(1, 2, 4, 8, 16), tol=1e-6):
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def finite_or_none(x):
-    """inf/nan -> None so bench artifacts stay STRICT JSON (json.dump
-    would happily emit a bare ``Infinity`` token, which RFC 8259
-    parsers — jq, JSON.parse — reject); None means 'no finite value'."""
-    x = float(x)
-    return x if x == x and abs(x) != float("inf") else None
+# strict-JSON discipline is shared with the obs sinks — one
+# ``finite_or_none``, one sanitize pass, one ``allow_nan=False`` writer
+# (``repro.obs``), so bench artifacts and obs JSONL cannot drift apart.
 
 
 def write_bench_json(name: str, results) -> str:
     """Write one machine-readable ``BENCH_*.json`` next to the repo root
-    (the CI-artifact convention every bench shares).  ``allow_nan=False``:
-    fail loudly HERE rather than shipping a non-JSON artifact if a
-    non-finite value ever slips past ``finite_or_none``."""
-    path = os.path.join(REPO_ROOT, name)
-    with open(path, "w") as f:
-        json.dump(results, f, indent=2, sort_keys=True, allow_nan=False)
+    (the CI-artifact convention every bench shares)."""
+    path = write_strict_json(os.path.join(REPO_ROOT, name), results)
     print(f"wrote {path}")
     return path
 
@@ -97,9 +95,4 @@ def fmt_bits(b: float) -> str:
 
 
 def print_table(title: str, header: list, rows: list) -> None:
-    print(f"\n## {title}")
-    widths = [max(len(str(h)), max((len(str(r[i])) for r in rows), default=0))
-              for i, h in enumerate(header)]
-    print("  ".join(str(h).ljust(w) for h, w in zip(header, widths)))
-    for r in rows:
-        print("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    print(format_table(title, header, rows))

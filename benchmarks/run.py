@@ -10,8 +10,44 @@ keeps every bench entrypoint importable and runnable.
 from __future__ import annotations
 
 import argparse
+import glob
+import json
+import os
 import sys
 import time
+
+
+def _smoke_summary(elapsed_s: float, suites_run) -> None:
+    """Fold every ``BENCH_*.json`` artifact into obs summary records,
+    persist them as schema-valid JSONL (the CI artifact), and print ONE
+    aggregate table — the single place the smoke run reports itself."""
+    from benchmarks.common import REPO_ROOT
+    from repro import obs
+
+    sink = obs.JsonlSink(
+        os.path.join(REPO_ROOT, "experiments", "obs", "bench_smoke.jsonl")
+    )
+    records = [obs.summary_record(
+        "bench_smoke", suites=sorted(suites_run), elapsed_s=elapsed_s,
+    )]
+    for path in sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json"))):
+        with open(path) as f:
+            payload = json.load(f)
+        records.append(obs.summary_record(
+            os.path.basename(path),
+            entries=len(payload) if isinstance(payload, (dict, list)) else 1,
+            bytes=os.path.getsize(path),
+        ))
+    for rec in records:
+        sink.emit(rec)
+    sink.close()
+
+    rows = [(r["name"], r["data"].get("entries", len(suites_run)),
+             r["data"].get("bytes", ""))
+            for r in records]
+    print(obs.format_table("bench smoke aggregate (obs records)",
+                           ["artifact", "entries", "bytes"], rows))
+    print(f"obs records: {sink.path}")
 
 
 def main(argv=None):
@@ -67,11 +103,15 @@ def main(argv=None):
     only = set(args.only.split(",")) if args.only else set(suites)
 
     t0 = time.time()
+    ran = []
     for name, fn in suites.items():
         if name not in only:
             continue
         print(f"\n{'='*72}\n[{name}]  ({time.time()-t0:.0f}s elapsed)")
         fn()
+        ran.append(name)
+    if args.smoke:
+        _smoke_summary(time.time() - t0, ran)
     print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
     return 0
 

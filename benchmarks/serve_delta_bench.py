@@ -13,6 +13,12 @@ layer's cost record: every variant must sustain the decode traffic at
 staleness <= K, with the compressed rows moving a small fraction of the
 dense broadcast bytes.
 
+Staleness/resync bookkeeping is event-sourced: the bridge's ``stats()``
+reads the structured obs events the fleet emits (``publish``,
+``fleet_resync``, ``fleet_staleness``...), and the ``obs events``
+column prints the raw counts so the table provably agrees with the
+JSONL a ``--metrics_out`` run would persist.
+
 Writes the machine-readable ``BENCH_serve_delta.json`` next to the repo
 root (uploaded as a CI artifact alongside the other BENCH files).
 """
@@ -73,15 +79,17 @@ def main(steps: int = STEPS, smoke: bool = False):
             f"{m['max_staleness']}/{m['stale_k']}",
             str(m["resyncs"]),
             str(m["tokens_served"]),
+            " ".join(f"{k}:{v}"
+                     for k, v in sorted(m.get("obs_events", {}).items())),
         )
         for flag, m in results.items()
     ]
     print_table(
         "model-delta downlink: 2 replicas off one shifted stream "
         "(publish_every=2; err column is first->last publish — the "
-        "shrinking-delta effect)",
+        "shrinking-delta effect; obs events = the event-sourced ledger)",
         ["wire", "delta B/pub", "dense B/pub", "fraction", "err_rel",
-         "stale/K", "resyncs", "tokens"],
+         "stale/K", "resyncs", "tokens", "obs events"],
         rows,
     )
     return results

@@ -73,10 +73,13 @@ def continuous_batching_demo():
 
 def downlink_accounting(arch: str, model_wire: str, publish_every: int):
     """Structural bytes of the model-delta downlink for this arch —
-    from the transport's registered ``model`` wire (``wire_bits``), the
-    same accounting the dryrun table and the tune predictor charge."""
+    read from the transport's shared obs snapshot (the same per-wire
+    records ``--metrics_out`` persists and the tune predictor charges),
+    so this print, the dryrun table, and the trainer JSONL all report
+    identical numbers."""
     from repro.comm import build_transport
     from repro.configs.base import CompressionConfig
+    from repro.obs import format_table
 
     cfg = get_smoke_config(arch).with_(dtype="float32")
     params_shapes = jax.eval_shape(
@@ -85,12 +88,20 @@ def downlink_accounting(arch: str, model_wire: str, publish_every: int):
     comp = CompressionConfig(enabled=False, model_wire=model_wire,
                              publish_every=publish_every)
     transport = build_transport(comp, cfg, None, params_like=params_shapes)
-    wire = transport["model"]
-    print(f"\nmodel downlink [{arch}] wire={model_wire} "
-          f"publish_every={publish_every}: "
-          f"{wire.wire_bits() / 8e6:.3f} MB/step on the wire "
-          f"(codec {type(wire.codec).__name__}, "
-          f"topology {wire.topology})")
+    snap = transport.obs_snapshot()
+    rows = [
+        (name, rec["topology"], rec["codec"],
+         f"{rec['wire_bits'] / 8e6:.3f}",
+         f"{rec['payload_bytes'] / 1e6:.3f}")
+        for name, rec in sorted(snap.items())
+    ]
+    print(format_table(
+        f"model downlink [{arch}] wire={model_wire} "
+        f"publish_every={publish_every} (obs snapshot: protocol bits "
+        "vs container payload)",
+        ["wire", "topology", "codec", "MB/step (wire)", "MB/step (payload)"],
+        rows,
+    ))
 
 
 def main(argv=None):

@@ -34,7 +34,7 @@ def make_100m_cfg():
 
 
 def run(comp: CompressionConfig, steps: int, batch: int, seq: int,
-        label: str, cfg=None):
+        label: str, cfg=None, metrics_out=None):
     cfg = make_100m_cfg() if cfg is None else cfg
     tcfg = TrainConfig(learning_rate=1e-3, total_steps=steps,
                        warmup_steps=max(1, steps // 20), compression=comp)
@@ -44,18 +44,38 @@ def run(comp: CompressionConfig, steps: int, batch: int, seq: int,
     step_fn = jax.jit(build_train_step(cfg, tcfg, mesh, w))
     stream = TokenStream(cfg, seq, batch)
 
+    sink = None
+    if metrics_out is not None:
+        from repro import obs
+        sink = obs.JsonlSink(metrics_out)
+        sink.emit(obs.run_record(
+            label, workers=w, steps=steps, batch=batch, seq=seq,
+            shift_rule=comp.shift_rule if comp.enabled else "none",
+        ))
+
     n_params = M.count_params_analytic(cfg)
     print(f"\n[{label}] params={n_params/1e6:.1f}M workers={w} "
           f"rule={comp.shift_rule if comp.enabled else 'none'}")
     t0 = time.time()
     losses = []
     for i in range(steps):
+        ts = time.perf_counter()
         state, metrics = step_fn(state, stream.batch(i))
         losses.append(float(metrics["loss"]))
+        if sink is not None:
+            from repro import obs
+            jax.block_until_ready(state.params)
+            sink.emit(obs.step_record(
+                i, run=label, loss=losses[-1],
+                bits=float(metrics["bits"]),
+                step_s=time.perf_counter() - ts,
+            ))
         if i % max(1, steps // 10) == 0 or i == steps - 1:
             print(f"  step {i:4d} loss {losses[-1]:.4f} "
                   f"bits {float(metrics['bits']):.3e} "
                   f"({time.time()-t0:.0f}s)")
+    if sink is not None:
+        sink.close()
     save(f"/tmp/repro_{label}.npz", state.params, step=steps)
     return losses, float(state.bits)
 
@@ -76,6 +96,10 @@ def main(argv=None):
                     default="none", choices=list(WIRE_CODEC_FLAGS),
                     help="compress pipeline-boundary activations with "
                          "this codec")
+    ap.add_argument("--metrics_out", "--metrics-out", dest="metrics_out",
+                    default=None,
+                    help="write per-step obs records (schema-valid JSONL) "
+                         "for both the dense and compressed runs")
     args = ap.parse_args(argv)
 
     # the moe wire needs experts to dispatch; everything else runs the
@@ -85,13 +109,14 @@ def main(argv=None):
 
     dense_losses, _ = run(
         CompressionConfig(enabled=False), args.steps, args.batch, args.seq,
-        "dense", cfg=cfg,
+        "dense", cfg=cfg, metrics_out=args.metrics_out,
     )
     diana_losses, diana_bits = run(
         CompressionConfig(enabled=True, compressor="natural",
                           shift_rule="diana", shift_alpha=0.5,
                           moe_wire=args.moe_wire, act_wire=args.act_wire),
         args.steps, args.batch, args.seq, "diana-natural", cfg=cfg,
+        metrics_out=args.metrics_out,
     )
 
     import numpy as np
@@ -105,6 +130,10 @@ def main(argv=None):
     print(f"uplink bits/worker/step: dense(f32) {dense_bits_step:.2e} vs "
           f"compressed {comp_bits_step:.2e} "
           f"({dense_bits_step / max(comp_bits_step,1):.1f}x reduction)")
+    if args.metrics_out is not None:
+        from repro import obs
+        print(obs.summary_table(obs.read_jsonl(args.metrics_out),
+                                name="train_lm"))
 
 
 if __name__ == "__main__":

@@ -136,6 +136,10 @@ class AsyncChannel(Channel):
     wspecs: Any = None
     bucket_bytes: int = DEFAULT_BUCKET_BYTES
     q8_block_rows: Optional[int] = None  # fused-q8 scale block (None=default)
+    obs: Any = None                      # optional StampRecorder: stamps the
+    #                                      reduce_start/finish call windows
+    #                                      (host side only; no effect on the
+    #                                      traced computation)
 
     def __post_init__(self):
         if self.mode not in AGGREGATION_MODES:
@@ -193,7 +197,16 @@ class AsyncChannel(Channel):
     def reduce_start(self, key, wtree) -> Inflight:
         """Issue every bucket's aggregation; returns handles without
         assembling the tree (callers overlap other work, then
-        ``finish``)."""
+        ``finish``).  With an ``obs`` StampRecorder attached the call
+        window is stamped ``"reduce_start"`` — the measured-overlap
+        probe (``repro.tune.measure.measure_overlap_hide``) reads these
+        stamps off the SAME handles the runtime schedules."""
+        if self.obs is not None:
+            with self.obs.stamp("reduce_start"):
+                return self._reduce_start(key, wtree)
+        return self._reduce_start(key, wtree)
+
+    def _reduce_start(self, key, wtree) -> Inflight:
         leaves, treedef = jax.tree_util.tree_flatten(wtree)
         spec_leaves = self._spec_leaves(wtree)
         plan = plan_buckets(wtree, self.bucket_bytes)
@@ -204,7 +217,14 @@ class AsyncChannel(Channel):
         return Inflight(treedef, plan.n_leaves, handles)
 
     def finish(self, inflight: Inflight):
-        """Drain all handles back into the aggregated tree."""
+        """Drain all handles back into the aggregated tree (the call
+        window is stamped ``"finish"`` when ``obs`` is attached)."""
+        if self.obs is not None:
+            with self.obs.stamp("finish"):
+                return self._finish(inflight)
+        return self._finish(inflight)
+
+    def _finish(self, inflight: Inflight):
         out: list = [None] * inflight.n_leaves
         seen = 0
         for h in inflight.handles:

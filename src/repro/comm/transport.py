@@ -151,6 +151,20 @@ def aggregation_wire_codec(comp):
     raise ValueError(f"no wire codec for comm mode {mode!r}")
 
 
+def _aot_payload_shapes(codec, sds, topology: str):
+    """The payload pytree (as ShapeDtypeStructs) of ONE send of ``sds``
+    through ``codec`` — the same encode path the live traffic runs."""
+    if topology == "allreduce":
+        payload, _ = jax.eval_shape(
+            lambda k, l: encode_workers(codec, k, l), _KEY_SDS, sds
+        )
+    else:
+        payload = jax.eval_shape(
+            lambda k, l: encode_meta_free(codec, k, l), _KEY_SDS, sds
+        )
+    return payload
+
+
 def _aot_payload_bits(codec, sds, topology: str) -> float:
     """Structural bits of ONE payload of ``sds`` through ``codec``, AOT.
 
@@ -160,15 +174,22 @@ def _aot_payload_bits(codec, sds, topology: str) -> float:
     cannot drift from the wire protocol without the accounting tests
     catching it.
     """
-    if topology == "allreduce":
-        payload, _ = jax.eval_shape(
-            lambda k, l: encode_workers(codec, k, l), _KEY_SDS, sds
-        )
-    else:
-        payload = jax.eval_shape(
-            lambda k, l: encode_meta_free(codec, k, l), _KEY_SDS, sds
-        )
-    return float(codec.wire_bits(payload))
+    return float(codec.wire_bits(_aot_payload_shapes(codec, sds, topology)))
+
+
+def _aot_payload_nbytes(codec, sds, topology: str) -> float:
+    """ACTUAL buffer bytes of one send's payload tree, AOT — the
+    container-width number (an int8 payload leaf counts 1 byte/elem)
+    next to the structural ``wire_bits`` (the protocol-width number);
+    the two differ exactly where a codec's wire format packs below its
+    buffer dtype."""
+    import numpy as np
+
+    payload = _aot_payload_shapes(codec, sds, topology)
+    return float(sum(
+        int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree_util.tree_leaves(payload)
+    ))
 
 
 @dataclass(eq=False)
@@ -257,6 +278,70 @@ class Wire:
             total += count * cache[sig]
         return total
 
+    def payload_nbytes(self) -> float:
+        """Per-step ACTUAL payload buffer bytes of the declared traffic
+        (see ``_aot_payload_nbytes`` — the obs layer reports this next
+        to the structural ``wire_bits``)."""
+        total = 0.0
+        cache: Dict[Tuple, float] = {}
+        for sds, count in self.traffic:
+            sig = (tuple(sds.shape), str(jnp.dtype(sds.dtype)))
+            if sig not in cache:
+                cache[sig] = _aot_payload_nbytes(self.codec, sds,
+                                                 self.topology)
+            total += count * cache[sig]
+        return total
+
+    def codec_timings(self, key: Optional[jax.Array] = None, *,
+                      iters: int = 2,
+                      cap_bytes: int = 1 << 20) -> Dict[str, Optional[float]]:
+        """Measured ``{"encode_s", "decode_s"}`` of ONE payload of this
+        wire's traffic through its codec (jitted, median wall clock).
+
+        Times the largest declared shape within ``cap_bytes`` (falling
+        back to the smallest — a micro-measurement must stay micro).
+        Returns Nones when the wire declares no traffic.  ``decode_s``
+        is the encode+decode round trip minus the encode (clamped >= 0:
+        short CPU timings are noisy).
+        """
+        if not self.traffic:
+            return {"encode_s": None, "decode_s": None}
+        import numpy as np
+
+        from repro.tune.measure import time_fn
+
+        def _nbytes(sds):
+            return int(np.prod(sds.shape)) * np.dtype(sds.dtype).itemsize
+
+        within = [sds for sds, _ in self.traffic if _nbytes(sds) <= cap_bytes]
+        sds = (max(within, key=_nbytes) if within
+               else min((s for s, _ in self.traffic), key=_nbytes))
+        key = jax.random.PRNGKey(0) if key is None else key
+        data = jax.random.normal(key, sds.shape, jnp.float32).astype(sds.dtype)
+        codec = self.codec
+
+        if self.topology == "allreduce":
+            from repro.comm.wire import encode_decode_workers
+
+            enc = jax.jit(lambda k, l: encode_workers(codec, k, l))
+            enc_dec = jax.jit(lambda k, l: encode_decode_workers(codec, k, l))
+        else:
+            inner = jax.ShapeDtypeStruct(tuple(sds.shape), sds.dtype)
+
+            def _enc(k, l):
+                return codec.encode(k, l)
+
+            def _enc_dec(k, l):
+                payload, meta = codec.encode(k, l)
+                return codec.decode(payload, meta, inner)
+
+            enc = jax.jit(_enc)
+            enc_dec = jax.jit(_enc_dec)
+        t_enc = time_fn(enc, key, data, iters=iters)
+        t_round = time_fn(enc_dec, key, data, iters=iters)
+        return {"encode_s": float(t_enc),
+                "decode_s": float(max(0.0, t_round - t_enc))}
+
 
 class Transport:
     """Per-step registry of every Wire.  Dict-like: ``transport["grad"]``,
@@ -302,6 +387,24 @@ class Transport:
         """{wire name: per-step wire bits} — the accounting table the
         dryrun, tune predictor and moe_wire bench all surface."""
         return {name: wire.wire_bits() for name, wire in self._wires.items()}
+
+    def obs_snapshot(self, *, timed: bool = False) -> Dict[str, dict]:
+        """Per-wire telemetry dict for the obs run header: topology,
+        codec, structural ``wire_bits`` AND actual ``payload_bytes`` per
+        step, plus (with ``timed``) measured encode/decode seconds of one
+        payload.  Keys match what ``repro.obs.export`` renders."""
+        snap: Dict[str, dict] = {}
+        for name, wire in self._wires.items():
+            timings = (wire.codec_timings() if timed
+                       else {"encode_s": None, "decode_s": None})
+            snap[name] = {
+                "topology": wire.topology,
+                "codec": type(wire.codec).__name__,
+                "wire_bits": wire.wire_bits(),
+                "payload_bytes": wire.payload_nbytes(),
+                **timings,
+            }
+        return snap
 
     def extra_traffic(self) -> Dict[str, Tuple]:
         """Declared traffic of every NON-grad wire, keyed by name — the

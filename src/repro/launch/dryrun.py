@@ -103,6 +103,11 @@ def tune_preview(cfg: ModelConfig, comp: CompressionConfig, mesh,
         "predicted_act_wire": plan.act_wire,
         "predicted_model_wire": plan.model_wire,
         "predicted_step_s": plan.predicted_step_s,
+        # which overlap-hide fed the composition: "nominal" here (AOT
+        # preview — nothing is measured); a launch-time search records
+        # the measured fraction in its TunePlan and the obs run header
+        "hide_fraction": plan.hide_fraction,
+        "hide_source": plan.hide_source,
         "candidates": list(plan.candidates[:top]),
     }
 
@@ -307,6 +312,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             # every roofline/tuner number derived from this analysis
             "cost_model": {
                 "unresolved_whiles": list(corrected["unresolved_whiles"]),
+                "unresolved_while_count":
+                    len(corrected["unresolved_whiles"]),
                 "while_trips": dict(corrected["while_trips"]),
             },
             "memory": {
@@ -373,7 +380,18 @@ def main(argv=None):
                     help="steps between downlink publishes (amortizes "
                          "the model wire's bytes/step)")
     ap.add_argument("--no-compression", action="store_true")
+    ap.add_argument("--metrics_out", "--metrics-out", dest="metrics_out",
+                    default=None,
+                    help="emit one obs event per combination (status, "
+                         "unresolved-while count) as strict JSONL")
     args = ap.parse_args(argv)
+
+    sink = None
+    if args.metrics_out:
+        from repro import obs
+
+        sink = obs.JsonlSink(args.metrics_out)
+        sink.emit(obs.run_record("dryrun", comm_mode=args.comm_mode))
 
     os.makedirs(args.out, exist_ok=True)
     tcfg = TrainConfig(
@@ -421,6 +439,14 @@ def main(argv=None):
                 print(f"=== {tag}: {status}{extra}", flush=True)
                 unresolved = (rec.get("cost_model") or {}).get(
                     "unresolved_whiles") or []
+                if sink is not None:
+                    from repro import obs
+
+                    sink.emit(obs.event_record(
+                        "dryrun_combination", len(results) - 1,
+                        arch=arch, shape=shape, status=status,
+                        unresolved_while_count=len(unresolved),
+                    ))
                 if unresolved:
                     print(f"    WARNING: {len(unresolved)} while loop(s) "
                           f"with unresolved trip counts (fell back to 1): "
@@ -448,6 +474,12 @@ def main(argv=None):
     n_skip = sum(r["status"] == "skipped" for r in results)
     n_err = sum(r["status"] == "error" for r in results)
     print(f"\nDRY-RUN SUMMARY: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if sink is not None:
+        from repro import obs
+
+        sink.emit(obs.summary_record("dryrun", ok=n_ok, skipped=n_skip,
+                                     errors=n_err))
+        sink.close()
     return 1 if n_err else 0
 
 

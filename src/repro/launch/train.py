@@ -151,7 +151,18 @@ def build_channel(comp: CompressionConfig, cfg: ModelConfig, mesh, w: int):
     return make_channel(comp, mesh, wspecs=wspecs)
 
 
-def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int):
+def _tree_dist(a, b) -> jax.Array:
+    """Global l2 distance ``||a - b||`` over two pytrees (f32)."""
+    sq = jnp.zeros((), jnp.float32)
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        d = la.astype(jnp.float32) - lb.astype(jnp.float32)
+        sq = sq + jnp.sum(d * d)
+    return jnp.sqrt(sq)
+
+
+def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int,
+                     diag: bool = False):
     """Returns train_step(state, batch) -> (state, metrics) — pure, jittable.
 
     The step is RULE PLUMBING ONLY: per-worker gradients in, one
@@ -159,7 +170,17 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int):
     by the channel), optimizer out.  Iterate-compression rules
     (``VRGDCI``) update the params inside their round, so the optimizer
     is bypassed for them — the paper's gradient mapping is plain SGD.
+
+    ``diag=True`` adds shift-rule diagnostics to the METRICS dict only —
+    ``h_bar_drift`` (||h_bar - mean_i h_i||, the lossy-aggregation
+    tracking error ``resync_h_bar`` bounds) and ``ef_err_norm``
+    (||g_bar - mean_i g_i||, the compression error of the round).  The
+    returned STATE is bit-exact with ``diag=False`` (pinned in
+    tests/test_obs.py): diagnostics consume no randomness and feed
+    nothing back.  Phases are annotated with ``repro.obs.span`` — pure
+    trace metadata, no runtime ops, no extra compilations.
     """
+    from repro.obs import span
     if getattr(tcfg, "train_attn_chunk", 0) and tcfg.train_attn_chunk > 0:
         cfg = cfg.with_(attn_q_chunk=tcfg.train_attn_chunk)
     comp = tcfg.compression
@@ -195,34 +216,57 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int):
             # unwired step)
             kw = wire_stream(state.key, "transport")
             wbatch = dict(wbatch, wire_key=jax.random.split(kw, w))
-        grads, loss, metrics = per_worker_grads(loss_fn, state.params, wbatch)
+        with span("train/grads"):
+            grads, loss, metrics = per_worker_grads(
+                loss_fn, state.params, wbatch
+            )
         key, sub = jax.random.split(state.key)
 
+        extra = {}
         if not comp.enabled:
-            g_bar = grad_wire.reduce_mean(sub, grads)
-            new_params, opt = optimizer.update(g_bar, state.opt, state.params)
+            with span("train/reduce"):
+                g_bar = grad_wire.reduce_mean(sub, grads)
+            with span("train/apply"):
+                new_params, opt = optimizer.update(
+                    g_bar, state.opt, state.params
+                )
             h, h_bar, bits = state.h, state.h_bar, state.bits
         elif iterate_rule:
             # Algorithm 2: the round returns the mixed iterate directly
-            new_params, h, h_bar, step_bits = grad_wire.iterate_round(
-                sub, state.params, grads, state.h, state.h_bar
-            )
+            with span("train/round"):
+                new_params, h, h_bar, step_bits = grad_wire.iterate_round(
+                    sub, state.params, grads, state.h, state.h_bar
+                )
             opt = state.opt
             bits = state.bits + step_bits
         else:
-            g_bar, h, h_bar, step_bits = grad_wire.shift_round(
-                sub, grads, state.h, state.h_bar
-            )
-            # bound the shift-tracking drift of lossy aggregation: every
-            # N rounds h_bar resyncs to the exact worker mean of h
-            h_bar = resync_h_bar(h, h_bar, state.step,
-                                 comp.drift_resync_every)
-            new_params, opt = optimizer.update(g_bar, state.opt, state.params)
+            with span("train/round"):
+                g_bar, h, h_bar, step_bits = grad_wire.shift_round(
+                    sub, grads, state.h, state.h_bar
+                )
+                # bound the shift-tracking drift of lossy aggregation:
+                # every N rounds h_bar resyncs to the exact worker mean
+                h_bar = resync_h_bar(h, h_bar, state.step,
+                                     comp.drift_resync_every)
+            with span("train/apply"):
+                new_params, opt = optimizer.update(
+                    g_bar, state.opt, state.params
+                )
             bits = state.bits + step_bits
+            if diag:
+                g_mean = tmap(
+                    lambda g: jnp.mean(g.astype(jnp.float32), axis=0), grads
+                )
+                extra["ef_err_norm"] = _tree_dist(g_bar, g_mean)
+                if h is not None and h_bar is not None:
+                    h_mean = tmap(
+                        lambda x: jnp.mean(x.astype(jnp.float32), axis=0), h
+                    )
+                    extra["h_bar_drift"] = _tree_dist(h_bar, h_mean)
 
         new_state = TrainState(new_params, opt, h, h_bar, key,
                                state.step + 1, bits)
-        return new_state, {**metrics, "loss": loss, "bits": bits}
+        return new_state, {**metrics, "loss": loss, "bits": bits, **extra}
 
     return train_step
 
@@ -310,11 +354,13 @@ def dense_step_analysis(cfg: ModelConfig, mesh, w: int, lr: float,
 def resolve_comm_auto(comp: CompressionConfig, cfg: ModelConfig, mesh, w: int,
                       *, plan_path=None, cache_dir=None, force=False,
                       tune_modes=None, lr: float = 3e-4, batch: int = 8,
-                      seq: int = 128) -> CompressionConfig:
+                      seq: int = 128):
     """Resolve ``comm_mode='auto'`` (or an explicit ``--tune_plan`` /
-    ``--autotune`` request) to a concrete CompressionConfig via
-    ``repro.tune``, printing what happened — the fingerprint, whether
-    the plan came from the cache, and the chosen knobs."""
+    ``--autotune`` request) via ``repro.tune``, printing what happened —
+    the fingerprint, whether the plan came from the cache, and the
+    chosen knobs.  Returns ``(resolved CompressionConfig, TunePlan)`` —
+    the plan carries the predicted step time the obs layer logs next to
+    every measured step."""
     from repro import tune
 
     if plan_path:
@@ -329,29 +375,40 @@ def resolve_comm_auto(comp: CompressionConfig, cfg: ModelConfig, mesh, w: int,
             tuple(m for m in tune_modes.split(",") if m)
             if tune_modes else None
         )
+        wlike = tmap(
+            lambda p: jax.ShapeDtypeStruct((w, *p.shape), p.dtype),
+            params_shapes,
+        )
         plan, hit = tune.autotune(
             comp, params_shapes, mesh, w,
             cache_dir=(cache_dir or tune.DEFAULT_CACHE_DIR),
             force=force, modes=modes,
             # evaluated LAZILY on a cache miss only: the HLO analysis
-            # (one dense-step lower+compile) and rate calibration are
-            # what give overlap candidates their compute-hide credit
+            # (one dense-step lower+compile), rate calibration, and the
+            # MEASURED overlap hide fraction (three timed phases through
+            # the real AsyncChannel handles) replace nominal constants
             analysis_fn=lambda: dense_step_analysis(
                 cfg, mesh, w, lr, batch, seq
             ),
             rates_fn=tune.calibrate_rates,
+            hide_fn=lambda: tune.measure_overlap_hide(
+                mesh, wlike, cap_bytes=1 << 20, iters=2
+            ),
         )
         source = "cache hit" if hit else "searched"
     resolved = tune.apply_plan(comp, plan)
     measured = (f"{plan.measured_step_s:.3e}s"
                 if plan.measured_step_s is not None else "n/a")
+    hide = (f"{plan.hide_fraction:.2f} ({plan.hide_source})"
+            if plan.hide_fraction is not None else plan.hide_source)
     print(f"tune: {source}  fingerprint={plan.fingerprint[:12]}  "
           f"-> comm_mode={resolved.comm_mode} "
           f"bucket={resolved.overlap_bucket_bytes} "
           f"randk_q={resolved.randk_q:g} "
           f"q8_block={resolved.q8_block_rows} "
-          f"(predicted {plan.predicted_step_s:.3e}s, measured {measured})")
-    return resolved
+          f"(predicted {plan.predicted_step_s:.3e}s, measured {measured}, "
+          f"hide {hide})")
+    return resolved, plan
 
 
 def main(argv=None):
@@ -429,6 +486,17 @@ def main(argv=None):
                     help="EF-BV estimator mixing")
     ap.add_argument("--no-compression", action="store_true")
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--metrics_out", "--metrics-out", dest="metrics_out",
+                    default=None,
+                    help="write per-step obs records (strict JSONL, "
+                         "rotated) here; enables shift-rule diagnostics "
+                         "(h_bar drift, EF error norm) in the metrics "
+                         "dict — the returned train STATE stays "
+                         "bit-exact with the uninstrumented run")
+    ap.add_argument("--trace", action="store_true",
+                    help="record host wall-clock spans per phase "
+                         "(encode/reduce/apply) and include the span "
+                         "table in the run summary")
     args = ap.parse_args(argv)
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
@@ -462,8 +530,9 @@ def main(argv=None):
             "require --comm_mode auto (you passed "
             f"--comm_mode {args.comm_mode})"
         )
+    plan = None
     if comp.enabled and comp.comm_mode == "auto":
-        comp = resolve_comm_auto(
+        comp, plan = resolve_comm_auto(
             comp, cfg, mesh, w,
             plan_path=args.tune_plan, cache_dir=args.tune_cache,
             force=args.autotune, tune_modes=args.tune_modes,
@@ -481,9 +550,85 @@ def main(argv=None):
                        warmup_steps=max(1, args.steps // 10),
                        compression=comp)
 
+    obs_on = args.metrics_out is not None
     state = init_state(jax.random.PRNGKey(0), cfg, tcfg, w)
-    step_fn = jax.jit(build_train_step(cfg, tcfg, mesh, w))
+    step_fn = jax.jit(build_train_step(cfg, tcfg, mesh, w, diag=obs_on))
     stream = TokenStream(cfg, args.seq, args.batch)
+
+    sink = None
+    recorder = None
+    predicted_step_s = None
+    if obs_on or args.trace:
+        from repro import obs
+
+        if obs_on:
+            sink = obs.JsonlSink(args.metrics_out)
+        if args.trace:
+            recorder = obs.SpanRecorder()
+    if obs_on:
+        from repro import tune
+        from repro.comm import SimChannel, build_transport
+
+        # predicted step time for the measured-vs-predicted ledger: the
+        # plan's number when the tuner picked the mode, a nominal
+        # comm-only prediction otherwise (no analysis lowered — the gap
+        # is the point, not a problem)
+        if plan is not None:
+            predicted_step_s = plan.predicted_step_s
+        elif comp.enabled and comp.comm_mode in tune.TUNABLE_MODES:
+            params_shapes = jax.eval_shape(
+                lambda k: M.init_params(k, cfg),
+                jax.ShapeDtypeStruct((2,), jnp.uint32),
+            )
+            wlike = tmap(
+                lambda p: jax.ShapeDtypeStruct((w, *p.shape), p.dtype),
+                params_shapes,
+            )
+            cand = tune.Candidate(
+                comp.comm_mode,
+                bucket_bytes=comp.overlap_bucket_bytes,
+                randk_q=comp.randk_q,
+                q8_block_rows=comp.q8_block_rows or 64,
+                efbv_eta=comp.efbv_eta, efbv_nu=comp.efbv_nu,
+                compressor=comp.compressor,
+                compressor_kwargs=tuple(comp.compressor_kwargs),
+            )
+            predicted_step_s = tune.predict_step(
+                cand, wlike, tune.LinkModel.nominal(), w
+            ).step_s
+
+        # run header: per-wire telemetry (structural bits AND payload
+        # bytes, measured codec timings) + the measured overlap hide
+        params_shapes = jax.eval_shape(
+            lambda k: M.init_params(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+        acct = build_transport(
+            comp, cfg, SimChannel(), w=w, params_like=params_shapes,
+            tokens_per_worker=(args.batch // w) * args.seq,
+        )
+        wlike = tmap(
+            lambda p: jax.ShapeDtypeStruct((w, *p.shape), p.dtype),
+            params_shapes,
+        )
+        if plan is not None and plan.hide_fraction is not None:
+            hide_fraction, hide_source = plan.hide_fraction, plan.hide_source
+        else:
+            m = tune.measure_overlap_hide(mesh, wlike, cap_bytes=1 << 20,
+                                          iters=2)
+            hide_fraction, hide_source = m.hide_fraction, m.source
+        sink.emit(obs.run_record(
+            "train",
+            arch=args.arch,
+            workers=w,
+            comm_mode=comp.comm_mode,
+            shift_rule=comp.effective_shift_rule if comp.enabled else None,
+            steps=args.steps,
+            wires=acct.obs_snapshot(timed=True),
+            hide_fraction=hide_fraction,
+            hide_source=hide_source,
+            predicted_step_s=predicted_step_s,
+        ))
 
     bridge = None
     if args.serve_fleet > 0:
@@ -500,6 +645,7 @@ def main(argv=None):
             cfg, state.params, downlink["model"],
             n_replicas=args.serve_fleet, publish_every=comp.publish_every,
             stale_k=args.stale_k, key=jax.random.PRNGKey(1),
+            obs=sink,
         )
 
     print(f"arch={args.arch} params={M.count_params_analytic(cfg):,} "
@@ -507,15 +653,53 @@ def main(argv=None):
           f"rule={comp.effective_shift_rule} comm={comp.comm_mode} "
           f"moe_wire={comp.moe_wire} act_wire={comp.act_wire} "
           f"model_wire={comp.model_wire}")
+
+    from contextlib import nullcontext
+
+    every = comp.drift_resync_every if comp.enabled else 0
+    if recorder is not None:
+        from repro.obs import recording
+
+        loop_ctx = recording(recorder)
+    else:
+        loop_ctx = nullcontext()
+    # host-side span around the step dispatch (+ readback when timing):
+    # inert without a recorder, and obs is only imported when one exists
+    step_ctx = ((lambda: obs.span("host/step"))
+                if recorder is not None else nullcontext)
     t0 = time.time()
-    for i in range(args.steps):
-        state, metrics = step_fn(state, stream.batch(i))
-        if bridge is not None:
-            bridge.on_step(state.params, i + 1)
-        if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
-            print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
-                  f"bits {float(metrics['bits']):.3e}  "
-                  f"({time.time()-t0:.1f}s)")
+    with loop_ctx:
+        for i in range(args.steps):
+            ts = time.perf_counter()
+            with step_ctx():
+                state, metrics = step_fn(state, stream.batch(i))
+                if sink is not None or recorder is not None:
+                    jax.block_until_ready(state.params)
+            step_s = time.perf_counter() - ts
+            if bridge is not None:
+                bridge.on_step(state.params, i + 1)
+            if sink is not None:
+                sink.emit(obs.step_record(
+                    i,
+                    loss=float(metrics["loss"]),
+                    bits=float(metrics["bits"]),
+                    step_s=step_s,
+                    predicted_step_s=predicted_step_s,
+                    h_bar_drift=(float(metrics["h_bar_drift"])
+                                 if "h_bar_drift" in metrics else None),
+                    ef_err_norm=(float(metrics["ef_err_norm"])
+                                 if "ef_err_norm" in metrics else None),
+                ))
+                # resync_h_bar fires inside jit at (step % N) == N-1;
+                # mirror the event host-side from the same arithmetic
+                if every and (i % every) == every - 1:
+                    sink.emit(obs.event_record(
+                        "drift_resync", i, every=every,
+                    ))
+            if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+                print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
+                      f"bits {float(metrics['bits']):.3e}  "
+                      f"({time.time()-t0:.1f}s)")
     if bridge is not None:
         bridge.drain()
         s = bridge.stats()
@@ -524,6 +708,25 @@ def main(argv=None):
               f"{s['bytes_fraction']:.3f} of dense bytes/publish, "
               f"max staleness {s['max_staleness']} (K={args.stale_k}), "
               f"{s['tokens_served']} tokens served")
+    if sink is not None:
+        from repro import obs
+
+        spans = recorder.snapshot() if recorder is not None else None
+        sink.emit(obs.summary_record("train", spans=spans))
+        sink.close()
+        print(obs.summary_table(obs.read_jsonl(args.metrics_out),
+                                name=args.arch))
+        if spans:
+            rows = [(n, s["count"], f"{s['mean_s']:.3e}s")
+                    for n, s in sorted(spans.items())]
+            print(obs.format_table("host spans", ["span", "count", "mean"],
+                                   rows))
+    elif recorder is not None:
+        rows = [(n, s["count"], f"{s['mean_s']:.3e}s")
+                for n, s in sorted(recorder.snapshot().items())]
+        from repro import obs
+
+        print(obs.format_table("host spans", ["span", "count", "mean"], rows))
     return state
 
 

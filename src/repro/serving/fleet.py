@@ -34,7 +34,7 @@ class Replica:
     """One serving replica subscribed to the delta stream."""
 
     def __init__(self, rid: int, cfg, params, *, max_batch: int = 2,
-                 cache_len: int = 128):
+                 cache_len: int = 128, obs=None):
         self.rid = rid
         self.engine = Engine(cfg, params, max_batch=max_batch,
                              cache_len=cache_len)
@@ -43,6 +43,7 @@ class Replica:
         self.err_rel = 0.0     # stream error of the served params
         self.applied = 0       # delta messages applied
         self.resyncs = 0       # dense resyncs applied
+        self.obs = obs         # optional record sink: resync-apply events
         self.pending: deque = deque()
 
     @property
@@ -80,6 +81,13 @@ class Replica:
             self.err_rel = msg.err_rel
             if msg.kind == "resync":
                 self.resyncs += 1
+                if self.obs is not None:
+                    from repro.obs import event_record
+
+                    self.obs.emit(event_record(
+                        "fleet_resync", max(0, msg.step), replica=self.rid,
+                        seq=msg.seq, bytes=msg.bits / 8.0,
+                    ))
             else:
                 self.applied += 1
             n += 1
@@ -104,13 +112,14 @@ class ServingFleet:
     def __init__(self, cfg, sync_msg: DeltaMsg, n_replicas: int, *,
                  stale_k: int = 4, err_budget: Optional[float] = None,
                  max_batch: int = 2, cache_len: int = 128,
-                 max_apply_per_tick: Optional[int] = None):
+                 max_apply_per_tick: Optional[int] = None, obs=None):
         if sync_msg.kind != "resync":
             raise ValueError("a fleet bootstraps from a full-model sync "
                              f"message, not {sync_msg.kind!r}")
+        self.obs = obs
         self.replicas: List[Replica] = [
             Replica(r, cfg, sync_msg.payload, max_batch=max_batch,
-                    cache_len=cache_len)
+                    cache_len=cache_len, obs=obs)
             for r in range(n_replicas)
         ]
         for rep in self.replicas:
@@ -146,9 +155,15 @@ class ServingFleet:
         finished: List[Request] = []
         for rep in self.replicas:
             rep.apply_pending(self.max_apply_per_tick)
-            self.max_staleness_seen = max(
-                self.max_staleness_seen, rep.staleness(self.trainer_step)
-            )
+            stale = rep.staleness(self.trainer_step)
+            if stale > self.max_staleness_seen and self.obs is not None:
+                from repro.obs import event_record
+
+                self.obs.emit(event_record(
+                    "fleet_staleness", max(0, self.trainer_step),
+                    replica=rep.rid, staleness=stale,
+                ))
+            self.max_staleness_seen = max(self.max_staleness_seen, stale)
             finished.extend(rep.engine.step_tick())
         return finished
 
@@ -196,31 +211,56 @@ class TrainerFleetBridge:
                  err_budget: Optional[float] = None, eta: float = 1.0,
                  sync_codec=None, key: Optional[jax.Array] = None,
                  max_batch: int = 2, cache_len: int = 128,
-                 max_apply_per_tick: Optional[int] = None):
+                 max_apply_per_tick: Optional[int] = None, obs=None):
         from repro.core.shift_rules import EFBVShift
+        from repro.obs import MemorySink, TeeSink, event_record
 
+        # every structured event lands in the bridge's own MemorySink
+        # (``stats`` reads from it) AND fans out to the caller's sink
+        # (``--metrics_out`` routes the fleet through the run's JSONL)
+        self.events = MemorySink()
+        self._obs = TeeSink(self.events, obs)
         self.publisher = DeltaPublisher(wire, rule=EFBVShift(eta=eta),
                                         key=key)
         sync = self.publisher.initial_sync(params, step=0,
                                            sync_codec=sync_codec)
         self.sync_bits = sync.bits
+        self._obs.emit(event_record(
+            "fleet_bootstrap", 0, replicas=n_replicas,
+            bytes=sync.bits / 8.0,
+        ))
         self.fleet = ServingFleet(
             cfg, sync, n_replicas, stale_k=stale_k, err_budget=err_budget,
             max_batch=max_batch, cache_len=cache_len,
-            max_apply_per_tick=max_apply_per_tick,
+            max_apply_per_tick=max_apply_per_tick, obs=self._obs,
         )
         self.publish_every = max(1, publish_every)
         self.finished: List[Request] = []
 
     def on_step(self, params, step: int) -> Optional[DeltaMsg]:
+        from repro.obs import event_record
+
         if step % self.publish_every:
             return None
         msg = self.publisher.publish(params, step=step)
+        self._obs.emit(event_record(
+            "publish", step, seq=msg.seq, bytes=msg.bits / 8.0,
+            err_rel=msg.err_rel,
+        ))
         self.fleet.deliver(msg)
         self.finished.extend(self.fleet.tick())
         lagging = self.fleet.needs_resync()
         if lagging:
             snap = self.publisher.snapshot(params, step=step)
+            for rep in lagging:
+                stale = rep.staleness(self.fleet.trainer_step)
+                reason = ("staleness" if stale > self.fleet.stale_k
+                          else "err_budget")
+                self._obs.emit(event_record(
+                    "resync_requested", step, replica=rep.rid,
+                    reason=reason, staleness=stale, err_rel=rep.err_rel,
+                    bytes=snap.bits / 8.0,
+                ))
             self.fleet.deliver(snap)
             self.finished.extend(self.fleet.tick())
         return msg
@@ -230,13 +270,19 @@ class TrainerFleetBridge:
         return self.finished
 
     def stats(self) -> dict:
+        """The bridge's ledger.  Event-derived entries (``publishes``,
+        ``resyncs``, ``max_staleness``, ``err_rel``) are sourced from the
+        obs records the fleet emitted — the same stream ``--metrics_out``
+        persists — so the printed table and the JSONL cannot disagree."""
         pub = self.publisher
         dense = pub.dense_bits_per_publish()
-        deltas = list(pub.delta_bits)
+        publishes = self.events.events("publish")
+        deltas = [e["data"]["bytes"] * 8.0 for e in publishes]
         per_publish = (sum(deltas) / len(deltas)) if deltas else 0.0
+        stale_events = self.events.events("fleet_staleness")
         return {
-            "publishes": len(deltas),
-            "resyncs": sum(rep.resyncs for rep in self.fleet.replicas),
+            "publishes": len(publishes),
+            "resyncs": len(self.events.events("fleet_resync")),
             "sync_bytes": self.sync_bits / 8.0,
             "delta_bytes": [b / 8.0 for b in deltas],
             "delta_bytes_per_publish": per_publish / 8.0,
@@ -244,11 +290,20 @@ class TrainerFleetBridge:
             "dense_bytes_per_publish": dense / 8.0,
             "dense_bytes_per_step": dense / 8.0 / self.publish_every,
             "bytes_fraction": (per_publish / dense) if dense else 0.0,
-            "err_rel": list(pub.err_history),
-            "max_staleness": self.fleet.max_staleness_seen,
+            "err_rel": [e["data"]["err_rel"] for e in publishes],
+            "max_staleness": max(
+                (e["data"]["staleness"] for e in stale_events),
+                default=self.fleet.max_staleness_seen,
+            ),
             "staleness": self.fleet.staleness_by_replica(),
             "requests_done": len(self.finished),
             "tokens_served": sum(len(r.output) for r in self.finished),
+            "obs_events": {
+                name: sum(1 for e in self.events.by_kind("event")
+                          if e["name"] == name)
+                for name in sorted({e["name"]
+                                    for e in self.events.by_kind("event")})
+            },
         }
 
 
@@ -259,7 +314,8 @@ def run_fleet_demo(arch: str = "qwen3-0.6b", *, n_replicas: int = 2,
                    gen_len: int = 8, max_batch: int = 2,
                    cache_len: int = 64, err_budget: Optional[float] = None,
                    max_apply_per_tick: Optional[int] = None,
-                   sync_flag: str = "natural", seed: int = 0) -> dict:
+                   sync_flag: str = "natural", seed: int = 0,
+                   obs=None) -> dict:
     """Co-simulate a real smoke trainer with a serving fleet.
 
     Runs ``steps`` REAL train steps (``launch/train.build_train_step``,
@@ -301,7 +357,7 @@ def run_fleet_demo(arch: str = "qwen3-0.6b", *, n_replicas: int = 2,
         publish_every=publish_every, stale_k=stale_k, err_budget=err_budget,
         key=jax.random.PRNGKey(seed + 1), max_batch=max_batch,
         cache_len=cache_len, max_apply_per_tick=max_apply_per_tick,
-        sync_codec=wire_flag_codec(sync_flag),
+        sync_codec=wire_flag_codec(sync_flag), obs=obs,
     )
     rng = jax.random.PRNGKey(seed + 2)
     for i in range(n_requests):

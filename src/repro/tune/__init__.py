@@ -33,8 +33,10 @@ from repro.tune.measure import (
     DEFAULT_MEASURE_BYTES_CAP,
     DeviceRates,
     LinkModel,
+    OverlapMeasurement,
     calibrate_link,
     calibrate_rates,
+    measure_overlap_hide,
     measure_subtree,
     synth_wtree,
     time_fn,
@@ -98,6 +100,8 @@ def autotune(
     rates_fn=None,
     cap_bytes: int = DEFAULT_MEASURE_BYTES_CAP,
     measure_iters: int = 3,
+    hide: Optional[float] = None,
+    hide_fn=None,
     **search_kw,
 ) -> Tuple[TunePlan, bool]:
     """Resolve one workload to a ``TunePlan``: ``(plan, cache_hit)``.
@@ -107,9 +111,12 @@ def autotune(
     shapes, only calibration and top-candidate verification touch
     devices.  ``force=True`` re-searches even on a fingerprint hit (the
     ``--autotune`` CLI flag); a fresh plan always overwrites the cache
-    entry for its fingerprint.  ``analysis_fn``/``rates_fn`` are LAZY
-    suppliers of the HLO step analysis and device rates, called only on
-    a cache miss — a hit must stay free of lower/compile work.
+    entry for its fingerprint.  ``analysis_fn``/``rates_fn``/``hide_fn``
+    are LAZY suppliers of the HLO step analysis, device rates, and the
+    measured overlap hide fraction, called only on a cache miss — a hit
+    must stay free of lower/compile/measure work.  ``hide_fn`` returns
+    an ``OverlapMeasurement`` (or a bare float); like calibration it is
+    only invoked when ``verify_top > 0`` (the measuring path).
     """
     # the search space is part of the cache key: a plan from a narrowed
     # --tune_modes/grid run must MISS a later full-grid lookup
@@ -131,13 +138,19 @@ def autotune(
         analysis = analysis_fn()
     if rates is None and rates_fn is not None and analysis is not None:
         rates = rates_fn()
+    hide_source = None if hide is None else "measured"
+    if hide is None and hide_fn is not None and verify_top > 0:
+        m = hide_fn()
+        hide = getattr(m, "hide_fraction", m)
+        hide_source = getattr(m, "source", "measured")
     wlike = tmap(
         lambda p: jax.ShapeDtypeStruct((w, *p.shape), p.dtype), params_like
     )
     plan = search_plan(
         comp, wlike, mesh, w, fingerprint=fp, analysis=analysis, link=link,
         rates=rates, modes=modes, verify_top=verify_top,
-        measure_iters=measure_iters, cap_bytes=cap_bytes, **search_kw,
+        measure_iters=measure_iters, cap_bytes=cap_bytes,
+        hide=hide, hide_source=hide_source, **search_kw,
     )
     save_plan(plan, cache_path(cache_dir, fp))
     return plan, False
@@ -155,6 +168,7 @@ __all__ = [
     "DeviceRates",
     "LinkModel",
     "OVERLAP_HIDE",
+    "OverlapMeasurement",
     "PLAN_VERSION",
     "StepPrediction",
     "TUNABLE_MODES",
@@ -174,6 +188,7 @@ __all__ = [
     "load_cached_plan",
     "load_plan",
     "measure_candidate",
+    "measure_overlap_hide",
     "measure_subtree",
     "plan_fingerprint",
     "predict_step",

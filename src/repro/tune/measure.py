@@ -176,6 +176,79 @@ def fit_alpha_beta(points: Sequence[tuple]) -> LinkModel:
     return LinkModel(alpha_s=alpha, beta_s_per_byte=beta)
 
 
+@dataclass(frozen=True)
+class OverlapMeasurement:
+    """A MEASURED compute/comm overlap: the fraction of comm time hidden
+    under concurrent compute, derived from three timed phases (compute
+    alone, comm alone, both issued together).  ``source`` distinguishes
+    this from the nominal ``OVERLAP_HIDE`` constant in records/plans."""
+
+    hide_fraction: float
+    compute_s: float
+    comm_s: float
+    overlapped_s: float
+    source: str = "measured"
+
+
+def measure_overlap_hide(mesh, wtree_like, *, mode: str = "dense",
+                         bucket_bytes: int = 1 << 16,
+                         cap_bytes: int = DEFAULT_MEASURE_BYTES_CAP,
+                         iters: int = 3, n_compute: int = 384,
+                         key: Optional[jax.Array] = None,
+                         ) -> OverlapMeasurement:
+    """Measure the overlap hide fraction on THIS mesh with the REAL
+    overlap runtime, replacing the nominal ``OVERLAP_HIDE`` constant.
+
+    Times three phases over the capped measure subtree, using the same
+    ``AsyncChannel.reduce_start``/``finish`` handles the trainer
+    schedules (an obs ``StampRecorder`` is attached, so the probe reads
+    the exact call windows the runtime stamps):
+
+      1. jitted compute alone (a chained matmul standing in for
+         backward work),
+      2. the bucketed reduction alone (start + finish, drained),
+      3. both: ``reduce_start`` issued FIRST, compute next, ``finish``
+         last — the trainer's interleave.
+
+    ``hide = (t_compute + t_comm - t_both) / t_comm`` clamped to [0, 1]:
+    1 means comm fully disappeared under compute, 0 means full
+    serialization (the honest CPU-mesh answer).  ``mode="dense"``
+    by default — the probe measures SCHEDULING, not codec cost, and the
+    fused-q8 kernels are not built for eager micro-timing.
+    """
+    from repro.comm.overlap import AsyncChannel
+    from repro.obs.trace import StampRecorder
+
+    key = jax.random.PRNGKey(11) if key is None else key
+    sub = measure_subtree(wtree_like, cap_bytes)
+    tree = synth_wtree(key, sub, mesh)
+    ch = AsyncChannel(mode=mode, mesh=mesh, bucket_bytes=bucket_bytes,
+                      obs=StampRecorder())
+
+    a = jax.random.normal(key, (n_compute, n_compute), jnp.float32)
+    compute = jax.jit(lambda x: (x @ x) @ x)
+
+    def comm_only():
+        return ch.finish(ch.reduce_start(key, tree))
+
+    def both():
+        inflight = ch.reduce_start(key, tree)
+        out = compute(a)
+        return out, ch.finish(inflight)
+
+    t_compute = time_fn(compute, a, iters=iters)
+    t_comm = time_fn(comm_only, iters=iters)
+    t_both = time_fn(both, iters=iters)
+    denom = max(t_comm, 1e-12)
+    hide = (t_compute + t_comm - t_both) / denom
+    return OverlapMeasurement(
+        hide_fraction=float(min(1.0, max(0.0, hide))),
+        compute_s=float(t_compute),
+        comm_s=float(t_comm),
+        overlapped_s=float(t_both),
+    )
+
+
 def calibrate_rates(*, n: int = 512, iters: int = 3) -> DeviceRates:
     """Device compute/memory rates from a timed matmul and a timed
     elementwise pass (modest sizes — calibration must not dwarf the

@@ -225,24 +225,33 @@ def comm_time_s(cand: Candidate, wtree_like, link: LinkModel,
     return float(comm), float(s_bytes), int(n_buckets)
 
 
-def compose_step_s(compute_s: float, comm_s: float, overlap: bool) -> float:
+def compose_step_s(compute_s: float, comm_s: float, overlap: bool,
+                   hide: Optional[float] = None) -> float:
     """Serial modes pay compute + comm; overlap modes pay only the comm
-    that does not fit under ``OVERLAP_HIDE`` of the compute."""
+    that does not fit under a ``hide`` fraction of the compute.
+
+    ``hide=None`` charges the nominal ``OVERLAP_HIDE`` constant; a
+    MEASURED fraction (``repro.tune.measure.measure_overlap_hide``)
+    replaces it when the search has one.
+    """
     if overlap:
-        return compute_s + max(0.0, comm_s - OVERLAP_HIDE * compute_s)
+        h = OVERLAP_HIDE if hide is None else hide
+        return compute_s + max(0.0, comm_s - h * compute_s)
     return compute_s + comm_s
 
 
 def predict_step(cand: Candidate, wtree_like, link: LinkModel, w: int, *,
                  analysis: Optional[dict] = None,
                  rates: Optional[DeviceRates] = None,
-                 wire_traffic=None) -> StepPrediction:
-    """The full prediction for one candidate (see module docstring)."""
+                 wire_traffic=None,
+                 hide: Optional[float] = None) -> StepPrediction:
+    """The full prediction for one candidate (see module docstring).
+    ``hide`` overrides the nominal overlap-hide constant (measured)."""
     compute_s = compute_time_s(analysis, rates)
     comm_s, s_bytes, n_buckets = comm_time_s(cand, wtree_like, link, w,
                                              wire_traffic=wire_traffic)
     return StepPrediction(
-        step_s=compose_step_s(compute_s, comm_s, cand.overlap),
+        step_s=compose_step_s(compute_s, comm_s, cand.overlap, hide),
         compute_s=compute_s,
         comm_s=comm_s,
         wire_bytes=s_bytes,

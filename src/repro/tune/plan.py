@@ -33,8 +33,10 @@ import jax
 #: bump when the plan schema or the search semantics change — a cached
 #: plan from an older tuner must MISS, not silently misconfigure a run
 #: (v2: per-wire codec flags moe_wire/act_wire joined the plan schema;
-#:  v3: model_wire — the trainer->serving downlink — joined)
-PLAN_VERSION = 3
+#:  v3: model_wire — the trainer->serving downlink — joined;
+#:  v4: hide_fraction/hide_source — the measured overlap hide replaced
+#:      the nominal constant in the search composition)
+PLAN_VERSION = 4
 
 
 def plan_fingerprint(params_like, mesh, w: int, compressor: str,
@@ -98,6 +100,8 @@ class TunePlan:
     moe_wire: str = "none"
     act_wire: str = "none"
     model_wire: str = "none"
+    hide_fraction: Optional[float] = None  # overlap hide the search used
+    hide_source: str = "nominal"           # "nominal" | "measured"
     candidates: Tuple[dict, ...] = field(default_factory=tuple)
     version: int = PLAN_VERSION
 
@@ -123,14 +127,11 @@ class TunePlan:
 
 
 def _finite_tree(obj):
-    """null-out non-finite floats so the artifact stays strict JSON."""
-    if isinstance(obj, float):
-        return obj if obj == obj and abs(obj) != float("inf") else None
-    if isinstance(obj, dict):
-        return {k: _finite_tree(v) for k, v in obj.items()}
-    if isinstance(obj, (list, tuple)):
-        return [_finite_tree(v) for v in obj]
-    return obj
+    """null-out non-finite floats so the artifact stays strict JSON —
+    THE repo-wide sanitizer (``repro.obs.metrics.sanitize_tree``)."""
+    from repro.obs.metrics import sanitize_tree
+
+    return sanitize_tree(obj)
 
 
 def save_plan(plan: TunePlan, path: str) -> str:

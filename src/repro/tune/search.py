@@ -211,6 +211,8 @@ def search_plan(
     cap_bytes: int = DEFAULT_MEASURE_BYTES_CAP,
     measure_fn: Optional[Callable] = None,
     key: Optional[jax.Array] = None,
+    hide: Optional[float] = None,
+    hide_source: Optional[str] = None,
 ) -> TunePlan:
     """Predict-all, measure-top-``verify_top``, pick the measured winner.
 
@@ -220,6 +222,11 @@ def search_plan(
     preview path — nothing is timed).  ``wire_traffic`` is
     ``Transport.extra_traffic()`` — the predictor charges every
     registered non-grad wire under each candidate's wire flags.
+    ``hide`` replaces the nominal overlap-hide constant in BOTH the
+    predicted and the measured composition (pass
+    ``measure_overlap_hide(...).hide_fraction`` for the measured
+    accounting the obs layer reports); the plan records it with its
+    ``hide_source``.
     """
     key = jax.random.PRNGKey(0) if key is None else key
     candidates = default_candidates(
@@ -235,7 +242,7 @@ def search_plan(
                                iters=measure_iters)
                 if verify_top > 0 else LinkModel.nominal())
     preds = [predict_step(c, wtree_like, link, w, analysis=analysis,
-                          rates=rates, wire_traffic=wire_traffic)
+                          rates=rates, wire_traffic=wire_traffic, hide=hide)
              for c in candidates]
     order = sorted(range(len(candidates)), key=lambda i: preds[i].step_s)
 
@@ -252,7 +259,7 @@ def search_plan(
             comm_s = float(measure_fn(candidates[i], data, key))
             measured_comm[i] = comm_s
             measured_step[i] = compose_step_s(
-                preds[i].compute_s, comm_s, candidates[i].overlap
+                preds[i].compute_s, comm_s, candidates[i].overlap, hide
             )
         chosen_i = min(measured_step, key=lambda i: measured_step[i])
     else:
@@ -291,5 +298,8 @@ def search_plan(
         model_wire=c.model_wire,
         predicted_step_s=preds[chosen_i].step_s,
         measured_step_s=measured_step.get(chosen_i),
+        hide_fraction=hide,
+        hide_source=(hide_source or
+                     ("nominal" if hide is None else "measured")),
         candidates=tuple(rows),
     )

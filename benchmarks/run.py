@@ -57,8 +57,8 @@ def main(argv=None):
                     help="tiny-config run of every suite (CI smoke)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig2,fig4,table1,"
-                         "gdci,ef21,efbv,kernels,overlap,autotune,"
-                         "moe_wire,serve_delta,roofline")
+                         "gdci,ef21,efbv,kernels,overlap,fused_vjp,"
+                         "autotune,moe_wire,serve_delta,roofline")
     args = ap.parse_args(argv)
     scale = 50 if args.smoke else (4 if args.fast else 1)
 
@@ -69,6 +69,7 @@ def main(argv=None):
         fig1_ridge,
         fig2_stability,
         fig4_logreg,
+        fused_vjp_bench,
         gdci_bench,
         kernels_bench,
         moe_wire_bench,
@@ -89,6 +90,9 @@ def main(argv=None):
         "kernels": lambda: kernels_bench.main(smoke=args.smoke),
         "overlap": lambda: overlap_bench.main(
             steps=overlap_bench.STEPS // scale, smoke=args.smoke),
+        "fused_vjp": lambda: fused_vjp_bench.main(
+            steps=max(2, fused_vjp_bench.STEPS // (2 if scale > 1 else 1)),
+            smoke=args.smoke),
         "autotune": lambda: autotune_bench.main(
             iters=max(2, autotune_bench.ITERS // (2 if scale > 1 else 1)),
             smoke=args.smoke),

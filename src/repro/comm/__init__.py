@@ -5,12 +5,15 @@ vmapped parameter server used by the reference algebra in ``repro.core``,
 ``MeshChannel`` wraps the codec-driven collectives in ``repro.dist``,
 and ``AsyncChannel`` (``repro.comm.overlap``) is the bucketed,
 pipelined overlapped runtime on top of them.  ``repro.comm.wire``
-holds the per-worker encode helpers shared by all of them.
+holds the per-worker encode helpers shared by all of them;
+``repro.comm.fused_vjp`` is the fused-backward encode path (wire
+messages emitted as cotangents, no standalone encode stage).
 """
 
 from repro.comm.channel import (
     AGGREGATION_MODES,
     CHANNEL_MODES,
+    FUSED_VJP_MODES,
     Channel,
     MeshChannel,
     SimChannel,
@@ -18,6 +21,13 @@ from repro.comm.channel import (
     collective_payload_scale,
     make_channel,
     resync_h_bar,
+)
+from repro.comm.fused_vjp import (
+    check_fusible,
+    encode_on_backward,
+    fused_message_bits,
+    message_tag,
+    round_message_keys,
 )
 from repro.comm.overlap import (
     DEFAULT_BUCKET_BYTES,
@@ -47,6 +57,7 @@ __all__ = [
     "AGGREGATION_MODES",
     "CHANNEL_MODES",
     "DEFAULT_BUCKET_BYTES",
+    "FUSED_VJP_MODES",
     "WIRE_CODEC_FLAGS",
     "WIRE_TOPOLOGIES",
     "AsyncChannel",
@@ -60,13 +71,18 @@ __all__ = [
     "aggregation_mode_of",
     "aggregation_wire_codec",
     "build_transport",
+    "check_fusible",
     "collective_payload_scale",
     "encode_decode_workers",
     "encode_meta_free",
+    "encode_on_backward",
     "encode_workers",
+    "fused_message_bits",
     "make_channel",
+    "message_tag",
     "plan_buckets",
     "resync_h_bar",
+    "round_message_keys",
     "wire_flag_codec",
     "wire_stream",
     "worker_keys",

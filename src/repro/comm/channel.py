@@ -74,6 +74,14 @@ CHANNEL_MODES = AGGREGATION_MODES + (
 #: comm modes served by the bucketed overlapped AsyncChannel
 OVERLAP_MODES = ("q8_ring_overlap", "efbv_overlap")
 
+#: comm modes whose wire messages are emitted by the backward pass
+#: itself (``repro.comm.fused_vjp``): the AsyncChannel consumes the
+#: pre-encoded per-leaf messages with NO standalone encode stage, one
+#: bucket per leaf (true per-layer granularity)
+FUSED_VJP_MODES = ("q8_ring_fused_vjp",)
+
+CHANNEL_MODES = CHANNEL_MODES + FUSED_VJP_MODES
+
 
 class Channel:
     """Transport for compressed messages between workers and master."""
@@ -123,6 +131,34 @@ class Channel:
         aux, extra = rule.aux(k_aux, wgrads, h)
         m_bar = self.reduce_mean(k_agg, m)
         g_bar, h_new, hb_new = rule.apply(wgrads, m, m_bar, h, h_bar, aux)
+        return g_bar, h_new, hb_new, bits + extra
+
+    def fused_round(self, rule, q: Compressor, key: jax.Array,
+                    msgs, h, h_bar):
+        """The shift-round tail for PRE-ENCODED messages.
+
+        ``msgs`` is the already decoded W-stacked message tree the
+        fused-backward path emitted as cotangents
+        (``repro.comm.fused_vjp``: the keys were derived from THIS
+        round key's ``k_msg`` split, so ``k_msg`` is consumed here by
+        discarding it).  The schedule is ``shift_round`` minus its
+        message phase: aux draw, one aggregation, ``apply`` — with the
+        rule's ``msgs`` standing in for the dense gradients its
+        fusibility contract says it never reads.  Bits are the per-leaf
+        STRUCTURAL ``message_bits_aot``, accumulated in the same leaf
+        order as ``rule.message`` so the counter matches the post-hoc
+        round bitwise.  Returns ``(g_bar, h_new, h_bar_new, bits)``.
+        """
+        from repro.comm.fused_vjp import check_fusible
+
+        check_fusible(rule)
+        _k_msg, k_aux, k_agg = jax.random.split(key, 3)
+        bits = jnp.zeros((), jnp.float32)
+        for leaf in jax.tree_util.tree_leaves(msgs):
+            bits = bits + rule.message_bits_aot(q, leaf)
+        aux, extra = rule.aux(k_aux, msgs, h)
+        m_bar = self.reduce_mean(k_agg, msgs)
+        g_bar, h_new, hb_new = rule.apply(msgs, msgs, m_bar, h, h_bar, aux)
         return g_bar, h_new, hb_new, bits + extra
 
     def all_to_all(self, q: Compressor, key: jax.Array, x: jax.Array):
@@ -209,7 +245,7 @@ def aggregation_mode_of(mode_or_cfg) -> str:
         return mode_or_cfg.aggregation_mode
     if mode_or_cfg in ("ef21", "efbv"):
         return "dense"
-    if mode_or_cfg in OVERLAP_MODES:
+    if mode_or_cfg in OVERLAP_MODES + FUSED_VJP_MODES:
         return "q8_ring_fused"
     return mode_or_cfg
 
@@ -223,8 +259,10 @@ def make_channel(mode_or_cfg="dense", mesh=None, *, randk_q: float = 0.05,
     (``q8_ring_overlap``, ``efbv_overlap``) the bucketed AsyncChannel
     over the fused q8 ring (``bucket_bytes`` sets its per-bucket budget
     in uncompressed per-worker message bytes, and is rejected for every
-    other mode); everything else a MeshChannel in the corresponding
-    aggregation format.  Unknown modes raise, naming every accepted
+    other mode); ``q8_ring_fused_vjp`` the same AsyncChannel in per-leaf
+    bucket mode, consuming messages the backward pass itself emitted
+    (``repro.comm.fused_vjp`` — no standalone encode stage); everything
+    else a MeshChannel in the corresponding aggregation format.  Unknown modes raise, naming every accepted
     mode — a typo'd mode must fail HERE, not as a confusing shape/key
     error deep in a collective.
     """
@@ -245,11 +283,12 @@ def make_channel(mode_or_cfg="dense", mesh=None, *, randk_q: float = 0.05,
             f"unknown comm mode {comm_mode!r}; have channel modes "
             f"{CHANNEL_MODES} (aggregation formats: {AGGREGATION_MODES})"
         )
-    if bucket_bytes is not None and comm_mode not in OVERLAP_MODES:
+    if (bucket_bytes is not None
+            and comm_mode not in OVERLAP_MODES + FUSED_VJP_MODES):
         raise ValueError(
             f"bucket_bytes only applies to the overlap channels "
-            f"{OVERLAP_MODES}, not {comm_mode!r} (it would be silently "
-            f"ignored)"
+            f"{OVERLAP_MODES + FUSED_VJP_MODES}, not {comm_mode!r} (it "
+            f"would be silently ignored)"
         )
     if comm_mode == "sim":  # uniform: string or config comm_mode
         return SimChannel()
@@ -260,7 +299,7 @@ def make_channel(mode_or_cfg="dense", mesh=None, *, randk_q: float = 0.05,
         if q8_block_rows is None:
             q8_block_rows = getattr(mode_or_cfg, "q8_block_rows", None)
     mode = aggregation_mode_of(mode_or_cfg)
-    if comm_mode in OVERLAP_MODES:
+    if comm_mode in OVERLAP_MODES + FUSED_VJP_MODES:
         from repro.comm.overlap import DEFAULT_BUCKET_BYTES, AsyncChannel
 
         return AsyncChannel(
@@ -268,6 +307,9 @@ def make_channel(mode_or_cfg="dense", mesh=None, *, randk_q: float = 0.05,
             bucket_bytes=(DEFAULT_BUCKET_BYTES if bucket_bytes is None
                           else bucket_bytes),
             q8_block_rows=q8_block_rows,
+            # fused-VJP: payloads arrive leaf by leaf during backprop,
+            # so the plan is one bucket per leaf (per-layer granularity)
+            per_leaf=comm_mode in FUSED_VJP_MODES,
         )
     return MeshChannel(mode=mode, mesh=mesh, randk_q=randk_q, wspecs=wspecs,
                        q8_block_rows=q8_block_rows)

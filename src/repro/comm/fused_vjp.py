@@ -1,0 +1,158 @@
+"""Fused backward-pass encode: wire messages AS cotangents.
+
+The post-hoc rounds (``Channel.shift_round`` and the bucketed
+``AsyncChannel.shift_round``) first materialize every worker's full
+dense gradient tree to HBM, then run a separate encode stage over it
+(``ShiftRule.message``).  This module deletes that stage: each param
+leaf is wrapped in an identity ``jax.custom_vjp`` whose BACKWARD
+replaces the dense cotangent with the decoded shifted-compressed
+message — ``jax.grad`` of the wrapped loss then emits the message tree
+directly, layer by layer as backprop produces each cotangent, and the
+dense gradient tree never exists as a step output.  The dataflow is
+
+    cotangent g_i  ->  shift (g_i - h_i)  ->  quantize/encode+decode
+                   ->  per-leaf ring reduction (AsyncChannel, per_leaf)
+
+with the encode running INSIDE the backward pass (same XLA program as
+the producing matmuls) instead of as a post-hoc pass re-reading every
+dense leaf from HBM.
+
+Bit-exactness contract (pinned in tests/test_fused_vjp.py): the fused
+path reproduces the post-hoc path BITWISE, per shift rule x channel.
+The three invariants that make it hold:
+
+* KEYS — ``round_message_keys`` derives per-leaf per-worker keys from
+  the round key exactly as ``Channel.shift_round`` does: the round
+  key's first 3-split row (``k_msg``), folded to each leaf's GLOBAL
+  tree position (``leaf_key``), then ``ShiftRule.message_keys`` (the
+  codec's shared/split worker derivation).
+* VALUES — the tag's backward runs ``ShiftRule.message_leaf_worker``
+  (the exact per-row body of ``encode_decode_workers``) under the SAME
+  per-worker vmap ``dist.worker_grads`` already applies, so XLA lowers
+  the identical batched encode as the post-hoc ``message_leaf``.
+* BITS — the fused rounds accumulate each leaf's STRUCTURAL
+  ``message_bits_aot`` (a python float equal to the post-hoc payload's
+  ``wire_bits``) in the same order the post-hoc rounds do, so even the
+  f32 bits counter matches bitwise.  (Codecs with data-dependent
+  ``wire_bits`` — BernoulliP — get the structural expectation instead;
+  every registered CLI compressor is structural.)
+
+Only rules whose ``apply`` never touches the dense gradients are
+fusible (``ShiftRule.fusible``): fixed/dcgd, diana, ef21, efbv.
+``check_fusible`` rejects the rest (rand_diana, star, vr_gdci) with a
+clear error instead of silently wrong math.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.wire import leaf_key
+
+tree = jax.tree_util
+
+
+def check_fusible(rule) -> None:
+    """Reject rules whose round cannot run on the fused-backward path."""
+    if not getattr(rule, "fusible", False):
+        raise ValueError(
+            f"shift rule {type(rule).__name__} is not fusible: its round "
+            "consumes the dense per-worker gradients (or overrides the "
+            "round schedule), which never materialize when messages are "
+            "emitted as cotangents.  Fusible rules: fixed/dcgd, diana, "
+            "ef21, efbv."
+        )
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def message_tag(rule, q, x, keys, h):
+    """Identity on ``x`` whose backward emits the wire message.
+
+    ``x`` is one param leaf (per worker — this runs under the
+    ``dist.worker_grads`` vmap), ``keys`` one row-stackable key pytree
+    from ``round_message_keys``, ``h`` the worker's shift for this leaf
+    (or None for stateless rules).  Forward is exact identity; backward
+    maps the dense cotangent ``g`` to
+    ``rule.message_leaf_worker(q, keys, g, h)`` — decoded
+    ``Q(g - h)`` — which then propagates as THE gradient of this leaf.
+    """
+    del rule, q, keys, h
+    return x
+
+
+def _tag_fwd(rule, q, x, keys, h):
+    del rule, q
+    return x, (keys, h)
+
+
+def _tag_bwd(rule, q, res, g):
+    keys, h = res
+    m = rule.message_leaf_worker(q, keys, g, h)
+    # keys are uint32 — their cotangent is the symbolic-zero float0;
+    # h gets real zeros (it is a residual input, not a trained leaf)
+    dkeys = tree.tree_map(
+        lambda k: np.zeros(np.shape(k), jax.dtypes.float0), keys
+    )
+    dh = None if h is None else jnp.zeros_like(h)
+    return m, dkeys, dh
+
+
+message_tag.defvjp(_tag_fwd, _tag_bwd)
+
+
+def round_message_keys(rule, q, key, params_like, w: int):
+    """Per-leaf message-key pytrees for one round, as a tuple aligned
+    with ``tree_flatten(params_like)`` order.
+
+    Reproduces the post-hoc derivation bitwise: ``Channel.shift_round``
+    splits the round key 3 ways and hands the first (``k_msg``) to
+    ``rule.message``, which folds it to each leaf's global position.
+    Each tuple entry is ``rule.message_keys`` at that leaf — every
+    array leaf has a leading ``(w,)`` axis, so the tuple can ride the
+    worker-batched input dict straight into the per-worker vmap.
+    """
+    k_msg = jax.random.split(key, 3)[0]
+    n = len(tree.tree_leaves(params_like))
+    return tuple(
+        rule.message_keys(q, leaf_key(k_msg, i), w) for i in range(n)
+    )
+
+
+def encode_on_backward(rule, q, params, keys, h):
+    """Wrap every param leaf in ``message_tag``.
+
+    ``keys`` is one worker's row of ``round_message_keys`` (or the full
+    stacked tuple when called under the worker vmap), ``h`` that
+    worker's shift tree (or None).  Returns params unchanged in value;
+    ``jax.grad`` of a loss on the result yields the MESSAGE tree — the
+    fused round's ``msgs`` input — instead of dense gradients.
+    """
+    check_fusible(rule)
+    leaves, treedef = tree.tree_flatten(params)
+    if len(keys) != len(leaves):
+        raise ValueError(
+            f"round_message_keys carries {len(keys)} leaf key trees but "
+            f"params has {len(leaves)} leaves — keys must be derived "
+            "from the same tree"
+        )
+    h_leaves = [None] * len(leaves) if h is None else tree.tree_leaves(h)
+    tagged = [
+        message_tag(rule, q, x, k, hl)
+        for x, k, hl in zip(leaves, keys, h_leaves)
+    ]
+    return tree.tree_unflatten(treedef, tagged)
+
+
+def fused_message_bits(rule, q, wgrads_like) -> float:
+    """Total structural uplink bits of one fused round's messages —
+    the sum the fused rounds accumulate leaf-wise (python float)."""
+    return float(
+        sum(
+            rule.message_bits_aot(q, leaf)
+            for leaf in tree.tree_leaves(wgrads_like)
+        )
+    )

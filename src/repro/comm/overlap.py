@@ -72,7 +72,8 @@ class BucketPlan:
         return len(self.buckets)
 
 
-def plan_buckets(wtree, bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> BucketPlan:
+def plan_buckets(wtree, bucket_bytes: int = DEFAULT_BUCKET_BYTES, *,
+                 per_leaf: bool = False) -> BucketPlan:
     """Partition a worker-stacked pytree into reverse-layer buckets.
 
     Walks leaves LAST first, accumulating per-worker message bytes
@@ -81,6 +82,11 @@ def plan_buckets(wtree, bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> BucketPlan:
     leaf above the budget gets its own bucket (leaves are never split —
     see the module docstring).  Works on concrete arrays and
     ``ShapeDtypeStruct`` trees alike, so plans can be built AOT.
+
+    ``per_leaf=True`` ignores the byte budget and emits ONE bucket per
+    leaf (still reverse-layer order): the fused-VJP schedule, where each
+    layer's message is already encoded the moment backprop produces its
+    cotangent, so the natural pipeline unit is the layer itself.
     """
     if bucket_bytes <= 0:
         raise ValueError(f"bucket_bytes must be positive, got {bucket_bytes}")
@@ -94,6 +100,9 @@ def plan_buckets(wtree, bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> BucketPlan:
         for s in leaf.shape[1:]:
             n_inner *= s
         b = n_inner * np.dtype(leaf.dtype).itemsize
+        if per_leaf:
+            buckets.append(Bucket((i,), b))
+            continue
         if cur and cur_bytes + b > bucket_bytes:
             buckets.append(Bucket(tuple(cur), cur_bytes))
             cur, cur_bytes = [], 0
@@ -136,6 +145,9 @@ class AsyncChannel(Channel):
     wspecs: Any = None
     bucket_bytes: int = DEFAULT_BUCKET_BYTES
     q8_block_rows: Optional[int] = None  # fused-q8 scale block (None=default)
+    per_leaf: bool = False               # one bucket per leaf (the fused-VJP
+    #                                      schedule: payloads arrive layer by
+    #                                      layer during backprop)
     obs: Any = None                      # optional StampRecorder: stamps the
     #                                      reduce_start/finish call windows
     #                                      (host side only; no effect on the
@@ -153,6 +165,9 @@ class AsyncChannel(Channel):
             )
 
     # -- plumbing ----------------------------------------------------------
+
+    def _plan(self, wtree) -> BucketPlan:
+        return plan_buckets(wtree, self.bucket_bytes, per_leaf=self.per_leaf)
 
     def _spec_leaves(self, wtree) -> Optional[list]:
         """Worker-stacked PartitionSpecs flattened in leaf order (specs
@@ -209,7 +224,7 @@ class AsyncChannel(Channel):
     def _reduce_start(self, key, wtree) -> Inflight:
         leaves, treedef = jax.tree_util.tree_flatten(wtree)
         spec_leaves = self._spec_leaves(wtree)
-        plan = plan_buckets(wtree, self.bucket_bytes)
+        plan = self._plan(wtree)
         handles = tuple(
             self._reduce_bucket(key, leaves, b, spec_leaves)
             for b in plan.buckets
@@ -266,7 +281,7 @@ class AsyncChannel(Channel):
         g_leaves, treedef = jax.tree_util.tree_flatten(wgrads)
         n = len(g_leaves)
         h_leaves = [None] * n if h is None else jax.tree_util.tree_leaves(h)
-        plan = plan_buckets(wgrads, self.bucket_bytes)
+        plan = self._plan(wgrads)
         spec_leaves = self._spec_leaves(wgrads)
         msgs: list = [None] * n
         reduced: list = [None] * n
@@ -289,6 +304,43 @@ class AsyncChannel(Channel):
         g_bar, h_new, hb_new = rule.apply(wgrads, m_tree, m_bar, h, h_bar, aux)
         return g_bar, h_new, hb_new, bits + extra
 
+    def fused_round(self, rule, q, key, msgs, h, h_bar):
+        """``shift_round`` for PRE-ENCODED messages (the fused-VJP path:
+        backprop already emitted each leaf's decoded message as its
+        cotangent, so there is no message phase here — only the
+        bucket-by-bucket reductions).  With ``per_leaf=True`` (the
+        ``q8_ring_fused_vjp`` channel) every leaf is its own pipeline
+        unit, matching the layer-by-layer arrival order of the fused
+        backward.
+
+        Bit-exact with ``shift_round`` on the same round key: the
+        message keys were pre-derived from this key's ``k_msg`` split
+        (``fused_vjp.round_message_keys``), the reductions fold the
+        same GLOBAL leaf indices, and the structural per-leaf bits are
+        accumulated in the same reverse-layer order.
+        """
+        from repro.comm.fused_vjp import check_fusible
+
+        check_fusible(rule)
+        _k_msg, k_aux, k_agg = jax.random.split(key, 3)
+        leaves, treedef = jax.tree_util.tree_flatten(msgs)
+        plan = self._plan(msgs)
+        spec_leaves = self._spec_leaves(msgs)
+        reduced: list = [None] * len(leaves)
+        bits = jnp.zeros((), jnp.float32)
+
+        for b in plan.buckets:
+            for i in b.indices:
+                bits = bits + rule.message_bits_aot(q, leaves[i])
+            hd = self._reduce_bucket(k_agg, leaves, b, spec_leaves)
+            for j, i in enumerate(hd.bucket.indices):
+                reduced[i] = hd.values[j]
+
+        m_bar = jax.tree_util.tree_unflatten(treedef, reduced)
+        aux, extra = rule.aux(k_aux, msgs, h)
+        g_bar, h_new, hb_new = rule.apply(msgs, msgs, m_bar, h, h_bar, aux)
+        return g_bar, h_new, hb_new, bits + extra
+
     def push_mean(self, q, key, wtree):
         """The overlapped round: each bucket's reduction is issued right
         after its encode and BEFORE the next bucket's encode
@@ -298,7 +350,7 @@ class AsyncChannel(Channel):
         earlier backward) to schedule."""
         k1, k2 = jax.random.split(key)
         leaves, treedef = jax.tree_util.tree_flatten(wtree)
-        plan = plan_buckets(wtree, self.bucket_bytes)
+        plan = self._plan(wtree)
         spec_leaves = self._spec_leaves(wtree)
         msgs: list = [None] * len(leaves)
         reduced: list = [None] * len(leaves)

@@ -48,7 +48,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.comm.channel import OVERLAP_MODES
+from repro.comm.channel import FUSED_VJP_MODES, OVERLAP_MODES
 from repro.comm.wire import encode_meta_free, encode_workers
 
 #: wire topologies the Transport understands.  ``allreduce`` wires run
@@ -141,7 +141,7 @@ def aggregation_wire_codec(comp):
         return RandK(q=comp.randk_q, shared_pattern=True)
     if mode == "q8_ring":
         return Int8Stochastic()
-    if mode in ("q8_ring_fused",) + OVERLAP_MODES:
+    if mode in ("q8_ring_fused",) + OVERLAP_MODES + FUSED_VJP_MODES:
         from repro.kernels.q8ring.ops import FusedQ8
 
         return FusedQ8(block_rows=comp.q8_block_rows)
@@ -210,6 +210,9 @@ class Wire:
     msg_codec: Any = None            # allreduce: the rule's message compressor
     traffic: Tuple = ()              # ((sds, count), ...)
     overlap_hidden: float = 0.0      # fraction of comm hidden under compute
+    fused: bool = False              # encode runs INSIDE the backward pass
+    #                                  (repro.comm.fused_vjp): no standalone
+    #                                  encode launches on this wire
 
     def __post_init__(self):
         if self.topology not in WIRE_TOPOLOGIES:
@@ -229,6 +232,15 @@ class Wire:
         (pinned in tests/test_transport.py)."""
         return self.rule.round(self.msg_codec, key, wgrads, h, h_bar,
                                self.channel)
+
+    def fused_round(self, key, msgs, h, h_bar):
+        """The fused-backward round tail: ``msgs`` are the decoded wire
+        messages backprop already emitted as cotangents
+        (``repro.comm.fused_vjp`` — keys pre-derived from THIS round
+        key, so the same verbatim-key contract as ``shift_round``
+        holds).  Returns ``(g_bar, h_new, h_bar_new, bits)``."""
+        return self.channel.fused_round(self.rule, self.msg_codec, key,
+                                        msgs, h, h_bar)
 
     def iterate_round(self, key, params, wgrads, h, h_bar):
         """Algorithm 2 (VR-GDCI): compressed-iterate round."""
@@ -303,7 +315,15 @@ class Wire:
         Returns Nones when the wire declares no traffic.  ``decode_s``
         is the encode+decode round trip minus the encode (clamped >= 0:
         short CPU timings are noisy).
+
+        A FUSED wire reports exact zeros without timing anything: its
+        encode and decode run inside the backward pass itself (the
+        cotangent is consumed as it is produced), so there is no
+        standalone codec launch to measure — the deleted stage the obs
+        snapshot pins (tests/test_obs.py).
         """
+        if self.fused:
+            return {"encode_s": 0.0, "decode_s": 0.0}
         if not self.traffic:
             return {"encode_s": None, "decode_s": None}
         import numpy as np
@@ -402,6 +422,7 @@ class Transport:
                 "codec": type(wire.codec).__name__,
                 "wire_bits": wire.wire_bits(),
                 "payload_bytes": wire.payload_nbytes(),
+                "fused": wire.fused,
                 **timings,
             }
         return snap
@@ -446,7 +467,8 @@ def build_transport(comp, cfg, channel, *, rule=None, msg_codec=None,
     """
     wires = []
     hidden = 0.0
-    if getattr(comp, "enabled", False) and comp.comm_mode in OVERLAP_MODES:
+    if (getattr(comp, "enabled", False)
+            and comp.comm_mode in OVERLAP_MODES + FUSED_VJP_MODES):
         from repro.tune.model import OVERLAP_HIDE
 
         hidden = OVERLAP_HIDE
@@ -461,6 +483,8 @@ def build_transport(comp, cfg, channel, *, rule=None, msg_codec=None,
         codec=aggregation_wire_codec(comp), channel=channel,
         rule=rule, msg_codec=msg_codec, traffic=grad_traffic,
         overlap_hidden=hidden,
+        fused=(getattr(comp, "enabled", False)
+               and comp.comm_mode in FUSED_VJP_MODES),
     ))
 
     moe_flag = getattr(comp, "moe_wire", "none")

@@ -132,6 +132,10 @@ class CompressionConfig:
     ``efbv_overlap`` select the bucketed overlapped AsyncChannel over
     the Pallas-fused q8 ring (``overlap_bucket_bytes`` sets its
     per-bucket budget, in uncompressed per-worker message bytes);
+    ``q8_ring_fused_vjp`` fuses the message encode into the backward
+    pass itself (``repro.comm.fused_vjp``): each layer's cotangent is
+    shifted and quantized as it is produced, the AsyncChannel consumes
+    the pre-encoded per-leaf payloads with no standalone encode stage;
     ``auto`` is the TUNER sentinel — ``repro.tune.autotune`` resolves
     it to a concrete mode (and sets ``overlap_bucket_bytes`` /
     ``randk_q`` / ``q8_block_rows`` / ``efbv_eta``/``efbv_nu``) from a
@@ -176,6 +180,7 @@ class CompressionConfig:
     efbv_nu: float = 1.0           # EF-BV estimator mixing
     comm_mode: str = "dense"       # dense | q8_ring | randk_shared | ef21
                                    # | efbv | q8_ring_overlap | efbv_overlap
+                                   # | q8_ring_fused_vjp (backward-fused)
                                    # | auto (tuner-resolved; see repro.tune)
     randk_q: float = 0.05          # keep-fraction for randk_shared
     overlap_bucket_bytes: int = 4 << 20  # AsyncChannel bucket budget

@@ -73,10 +73,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm.channel import Channel, SimChannel
-from repro.comm.wire import encode_decode_workers, leaf_key
+from repro.comm.wire import (
+    encode_decode_workers,
+    encode_workers,
+    leaf_key,
+    worker_keys,
+)
 from repro.core.compressors import Compressor, Zero, wire_bits
 
 tmap = jax.tree_util.tree_map
+
+#: PRNG keys are raw (2,) uint32 throughout the repo
+_KEY_SDS = jax.ShapeDtypeStruct((2,), jnp.uint32)
 
 
 def _tree_mean_w(tree):
@@ -140,6 +148,16 @@ class ShiftRule:
     #: (the trainer then allocates no shift tensors at all)
     stateful: bool = field(default=True, init=False, repr=False)
 
+    #: ``fusible = True`` means the rule's ``apply`` consumes only the
+    #: per-worker MESSAGES (never the dense ``wgrads``) and its round
+    #: follows the standard message -> aux -> reduce -> apply schedule,
+    #: so the fused-backward path (``repro.comm.fused_vjp``) can emit
+    #: the messages as the cotangents themselves and the dense gradients
+    #: never materialize.  Rules that read ``wgrads`` in ``apply``
+    #: (Rand-DIANA's refresh) or override the round wholesale (StarShift)
+    #: set this to ``False`` and are rejected by ``check_fusible``.
+    fusible: bool = field(default=True, init=False, repr=False)
+
     # -- state ------------------------------------------------------------
 
     def init(self, wgrads_like):
@@ -181,6 +199,46 @@ class ShiftRule:
             out.append(m)
             bits = bits + b
         return jax.tree_util.tree_unflatten(treedef, out), bits
+
+    # -- fused-backward decomposition of message_leaf ----------------------
+    #
+    # ``message_leaf`` = vmap(message_leaf_worker) over the keys that
+    # ``message_keys`` derives — the SAME primitives under the same vmap
+    # batching, so the fused-VJP path (which runs message_leaf_worker
+    # inside each worker's backward pass, under the per-worker vmap of
+    # ``dist.worker_grads``) is bit-exact with the post-hoc encode.
+    # ``message_bits_aot`` is the leaf's structural wire cost computed
+    # from shapes alone (no payload materialized): the fused round's
+    # accounting, equal to message_leaf's bits for every codec whose
+    # wire_bits is structural (all registered CLI compressors; the
+    # data-dependent BernoulliP is the documented exception).
+
+    def message_keys(self, q: Compressor, key, w: int):
+        """The per-worker key pytree ``message_leaf`` consumes for one
+        leaf, stacked on a leading ``(W,)`` axis: row ``i`` fed to
+        ``message_leaf_worker`` reproduces worker ``i``'s slice of
+        ``message_leaf`` bitwise.  ``key`` is the leaf-folded round key."""
+        return worker_keys(q, key, w)
+
+    def message_leaf_worker(self, q: Compressor, wkey, g, h):
+        """ONE worker's slice of ``message_leaf``: the per-row body of
+        ``encode_decode_workers`` on that worker's dense gradient ``g``
+        and shift ``h`` (both WITHOUT the worker axis).  ``wkey`` is one
+        row of ``message_keys``.  Returns the decoded message only —
+        bits are accounted structurally via ``message_bits_aot``."""
+        diff = g if h is None else g - h
+        payload, meta = q.encode(wkey, diff)
+        return q.decode(payload, meta,
+                        jax.ShapeDtypeStruct(diff.shape, diff.dtype))
+
+    def message_bits_aot(self, q: Compressor, wleaf_like) -> float:
+        """Structural wire bits of one leaf's W-stacked message, from
+        shapes alone (``jax.eval_shape`` of the encode)."""
+        sds = jax.ShapeDtypeStruct(tuple(wleaf_like.shape), wleaf_like.dtype)
+        payload, _ = jax.eval_shape(
+            lambda k, leaf: encode_workers(q, k, leaf), _KEY_SDS, sds
+        )
+        return float(q.wire_bits(payload))
 
     def aux(self, key, wgrads, h):
         """Tree-level extras: ``(aux carried to apply, extra wire bits)``."""
@@ -247,6 +305,9 @@ class StarShift(ShiftRule):
     overlap runtime.
     """
 
+    #: overrides the round schedule wholesale -> no fused-backward path
+    fusible: bool = field(default=False, init=False, repr=False)
+
     c: Compressor = field(default_factory=Zero)
 
     def init_with_star(self, wgrads_star):
@@ -301,6 +362,30 @@ class DianaShift(ShiftRule):
         qpay, qm = encode_decode_workers(q, kq, diff - cm)
         return cm + qm, self.c.wire_bits(cpay) + q.wire_bits(qpay)
 
+    def message_keys(self, q, key, w):
+        # same split as message_leaf, then each part's worker derivation
+        kc, kq = jax.random.split(key)
+        return {"c": worker_keys(self.c, kc, w),
+                "q": worker_keys(q, kq, w)}
+
+    def message_leaf_worker(self, q, wkey, g, h):
+        diff = g if h is None else g - h
+        sds = jax.ShapeDtypeStruct(diff.shape, diff.dtype)
+        cpay, cmeta = self.c.encode(wkey["c"], diff)
+        cm = self.c.decode(cpay, cmeta, sds)
+        qpay, qmeta = q.encode(wkey["q"], diff - cm)
+        return cm + q.decode(qpay, qmeta, sds)
+
+    def message_bits_aot(self, q, wleaf_like):
+        sds = jax.ShapeDtypeStruct(tuple(wleaf_like.shape), wleaf_like.dtype)
+        cpay, _ = jax.eval_shape(
+            lambda k, leaf: encode_workers(self.c, k, leaf), _KEY_SDS, sds
+        )
+        qpay, _ = jax.eval_shape(
+            lambda k, leaf: encode_workers(q, k, leaf), _KEY_SDS, sds
+        )
+        return float(self.c.wire_bits(cpay)) + float(q.wire_bits(qpay))
+
     def apply(self, wgrads, m, m_bar, h, h_bar, aux):
         a = self.alpha
         g_bar = tmap(lambda hb, mb: hb + mb, h_bar, m_bar)
@@ -322,6 +407,10 @@ class RandDianaShift(ShiftRule):
     the leaves' true dtype widths).  Theorem 4: max{kappa(1 + omega/n),
     1/p} with a dramatically simpler analysis than DIANA.
     """
+
+    #: ``apply`` refreshes shifts from the DENSE wgrads, which never
+    #: materialize on the fused-backward path
+    fusible: bool = field(default=False, init=False, repr=False)
 
     p: float = 0.1
 

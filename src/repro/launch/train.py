@@ -26,7 +26,8 @@ This is Algorithm 1 (DCGD-SHIFT) mapped onto the TPU mesh:
 
 CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
           [--comm_mode dense|randk_shared|q8_ring|q8_ring_overlap|ef21|\
-           efbv|efbv_overlap|auto] [--autotune] [--tune_plan PLAN.json] ...
+           efbv|efbv_overlap|q8_ring_fused_vjp|auto] [--autotune] \
+          [--tune_plan PLAN.json] ...
 
 ``--comm_mode auto`` resolves through ``repro.tune``: fingerprint the
 (model x mesh x world-size x compressor) workload, reuse the cached
@@ -44,6 +45,14 @@ Pallas-fused int8 ring, each bucket's message formed and its reduction
 issued before the next bucket's message (``AsyncChannel.shift_round``),
 so XLA can overlap ring hops with encode and backward compute — for
 EVERY rule of the engine, shifted ones included.
+
+``q8_ring_fused_vjp`` goes one step further and deletes the standalone
+encode stage entirely (``repro.comm.fused_vjp``): every param leaf is
+wrapped in an identity ``custom_vjp`` whose backward applies the
+rule's ``message_leaf`` shift+encode, so the backward pass EMITS the
+decoded wire messages as its cotangents and the AsyncChannel (per-leaf
+buckets) only runs the reduce/apply tail — bit-exact with the post-hoc
+rounds per shift rule (tests/test_fused_vjp.py).
 """
 
 from __future__ import annotations
@@ -59,6 +68,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.comm import (
     CHANNEL_MODES,
+    FUSED_VJP_MODES,
     WIRE_CODEC_FLAGS,
     build_transport,
     make_channel,
@@ -191,6 +201,17 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int,
         iterate_rule = isinstance(rule, VRGDCI)
     else:
         q, rule, iterate_rule = None, None, False
+    fused = comp.enabled and comp.comm_mode in FUSED_VJP_MODES
+    if fused:
+        from repro.comm import fused_vjp
+
+        if iterate_rule:
+            raise ValueError(
+                "comm_mode 'q8_ring_fused_vjp' fuses GRADIENT-message "
+                "encode into the backward pass; the iterate-compression "
+                "rule 'vr_gdci' has no gradient message to fuse"
+            )
+        fused_vjp.check_fusible(rule)
     # ALL of this step's traffic is registered on the transport: the
     # grad wire wraps the channel+rule above (bit-exact — Wire passes
     # the round key through verbatim), and any configured moe/act wires
@@ -201,26 +222,53 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int,
     wired = ("moe" in transport) or ("act" in transport)
 
     def loss_fn(params, batch):
-        if wired:
+        if fused or wired:
             batch = dict(batch)
+        tap = None
+        if fused:
+            # the fused-backward encode: wrap every param leaf so its
+            # dense cotangent is replaced by the decoded shifted-
+            # compressed message the moment backprop produces it —
+            # jax.grad of this loss then EMITS the wire message tree
+            # directly, and the dense gradient tree never materializes
+            keys = batch.pop("fused_keys")
+            fh = batch.pop("fused_h", None)
+            tap = lambda p: fused_vjp.encode_on_backward(  # noqa: E731
+                rule, q, p, keys, fh
+            )
+        if wired:
             wire_key = batch.pop("wire_key")
             return M.train_loss(params, cfg, batch, wires=transport,
-                                wire_key=wire_key)
-        return M.train_loss(params, cfg, batch)
+                                wire_key=wire_key, param_tap=tap)
+        return M.train_loss(params, cfg, batch, param_tap=tap)
 
     def train_step(state: TrainState, batch):
         wbatch = split_batch(batch, w)
+        # the round key is split BEFORE the backward pass (the fused
+        # path derives its message keys from ``sub``); the split is
+        # pure, so every mode's trajectory is bitwise unchanged
+        key, sub = jax.random.split(state.key)
         if wired:
             # per-worker wire keys, derived from a stream disjoint from
-            # the round key below (which stays byte-identical to the
-            # unwired step)
+            # the round key (which stays byte-identical to the unwired
+            # step)
             kw = wire_stream(state.key, "transport")
             wbatch = dict(wbatch, wire_key=jax.random.split(kw, w))
+        if fused:
+            # per-leaf per-worker message keys, pre-derived from the
+            # round key exactly as the post-hoc rounds derive them
+            # (Channel.shift_round's k_msg split + global leaf fold);
+            # every array leaf is (w, ...)-stacked so the tuple rides
+            # the worker vmap with the rest of the batch
+            wbatch = dict(wbatch, fused_keys=fused_vjp.round_message_keys(
+                rule, q, sub, state.params, w
+            ))
+            if state.h is not None:
+                wbatch = dict(wbatch, fused_h=state.h)
         with span("train/grads"):
             grads, loss, metrics = per_worker_grads(
                 loss_fn, state.params, wbatch
             )
-        key, sub = jax.random.split(state.key)
 
         extra = {}
         if not comp.enabled:
@@ -241,9 +289,17 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int,
             bits = state.bits + step_bits
         else:
             with span("train/round"):
-                g_bar, h, h_bar, step_bits = grad_wire.shift_round(
-                    sub, grads, state.h, state.h_bar
-                )
+                if fused:
+                    # ``grads`` here ARE the decoded wire messages (the
+                    # fused backward emitted them as cotangents): the
+                    # round is its reduce/apply tail, no encode stage
+                    g_bar, h, h_bar, step_bits = grad_wire.fused_round(
+                        sub, grads, state.h, state.h_bar
+                    )
+                else:
+                    g_bar, h, h_bar, step_bits = grad_wire.shift_round(
+                        sub, grads, state.h, state.h_bar
+                    )
                 # bound the shift-tracking drift of lossy aggregation:
                 # every N rounds h_bar resyncs to the exact worker mean
                 h_bar = resync_h_bar(h, h_bar, state.step,
@@ -254,10 +310,14 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int,
                 )
             bits = state.bits + step_bits
             if diag:
-                g_mean = tmap(
-                    lambda g: jnp.mean(g.astype(jnp.float32), axis=0), grads
-                )
-                extra["ef_err_norm"] = _tree_dist(g_bar, g_mean)
+                if not fused:
+                    # fused mode has no dense per-worker gradients to
+                    # compare against — that deletion is the point
+                    g_mean = tmap(
+                        lambda g: jnp.mean(g.astype(jnp.float32), axis=0),
+                        grads,
+                    )
+                    extra["ef_err_norm"] = _tree_dist(g_bar, g_mean)
                 if h is not None and h_bar is not None:
                     h_mean = tmap(
                         lambda x: jnp.mean(x.astype(jnp.float32), axis=0), h
@@ -428,8 +488,12 @@ def main(argv=None):
                          "the error-feedback modes (implying their rule); "
                          "the *_overlap modes run the bucketed "
                          "AsyncChannel over the Pallas-fused q8 ring; "
-                         "'auto' resolves through the repro.tune "
-                         "cost-model search (cached by fingerprint)")
+                         "q8_ring_fused_vjp fuses the encode into the "
+                         "backward pass itself (messages emitted as "
+                         "cotangents, per-leaf buckets, no standalone "
+                         "encode stage); 'auto' resolves through the "
+                         "repro.tune cost-model search (cached by "
+                         "fingerprint)")
     ap.add_argument("--autotune", action="store_true",
                     help="force a fresh tune search even when a cached "
                          "plan matches this workload's fingerprint")

@@ -387,7 +387,18 @@ def forward_train(params, cfg: ModelConfig, batch, wires=None,
     return logits, aux
 
 
-def train_loss(params, cfg: ModelConfig, batch, wires=None, wire_key=None):
+def train_loss(params, cfg: ModelConfig, batch, wires=None, wire_key=None,
+               param_tap=None):
+    """``param_tap``: optional identity-valued wrapper applied to the
+    param tree before the forward pass.  The fused-backward encode path
+    (``repro.comm.fused_vjp.encode_on_backward``) taps every layer's
+    params here, so each leaf's cotangent is intercepted — and its
+    shifted-compressed wire message emitted — at the exact point
+    backprop produces it, inside the same XLA program as the producing
+    layer's matmuls.  ``None`` (default) is the untapped path,
+    bitwise-identical to before the hook existed."""
+    if param_tap is not None:
+        params = param_tap(params)
     logits, aux = forward_train(params, cfg, batch, wires=wires,
                                 wire_key=wire_key)
     loss = L.softmax_xent(logits[:, :-1], batch["tokens"][:, 1:])

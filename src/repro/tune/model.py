@@ -29,17 +29,27 @@ measured CPU numbers alongside so the gap stays visible.
 Overlap modes hide comm under backward compute; the composition charges
 only the un-hidden remainder (``OVERLAP_HIDE`` is the model's one free
 constant, stated here rather than buried in a weight).
+
+Compressed modes additionally pay a standalone ENCODE stage
+(``encode_time_s``: an HBM-bound pass over dense message + payload) —
+except the backward-fused ``q8_ring_fused_vjp`` mode, whose encode is
+emitted inside the VJP and is therefore charged zero by construction.
 """
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.comm.channel import CHANNEL_MODES, OVERLAP_MODES
+from repro.comm.channel import (
+    CHANNEL_MODES,
+    FUSED_VJP_MODES,
+    OVERLAP_MODES,
+)
 from repro.comm.overlap import DEFAULT_BUCKET_BYTES, plan_buckets
 from repro.comm.transport import (
     WIRE_CODEC_FLAGS,
@@ -96,16 +106,28 @@ class Candidate:
 
     @property
     def overlap(self) -> bool:
-        return self.comm_mode in OVERLAP_MODES
+        """Modes that run through the bucketed AsyncChannel (the fused
+        mode is overlap-by-construction: each leaf's payload exists the
+        moment its cotangent does)."""
+        return self.comm_mode in OVERLAP_MODES + FUSED_VJP_MODES
+
+    @property
+    def fused(self) -> bool:
+        """Backward-fused encode: per-leaf buckets, no standalone
+        encode stage (``repro.comm.fused_vjp``)."""
+        return self.comm_mode in FUSED_VJP_MODES
 
     @property
     def label(self) -> str:
         knobs = []
         if self.comm_mode == "randk_shared":
             knobs.append(f"q={self.randk_q:g}")
-        if self.comm_mode in ("q8_ring_fused",) + OVERLAP_MODES:
+        if self.comm_mode in ("q8_ring_fused",) + OVERLAP_MODES + \
+                FUSED_VJP_MODES:
             knobs.append(f"block={self.q8_block_rows}")
-        if self.overlap:
+        if self.fused:
+            knobs.append("per-leaf")
+        elif self.overlap:
             knobs.append(f"bucket={self.bucket_bytes >> 10}KiB")
         if self.comm_mode in ("efbv", "efbv_overlap"):
             knobs.append(f"eta={self.efbv_eta:g},nu={self.efbv_nu:g}")
@@ -154,6 +176,7 @@ class StepPrediction:
     comm_s: float
     wire_bytes: float          # per-worker payload bytes per round
     n_buckets: int
+    encode_s: float = 0.0      # standalone encode stage (0 when fused)
     candidate: Candidate = field(repr=False, default=None)
 
 
@@ -168,6 +191,28 @@ def compute_time_s(analysis: Optional[dict],
     flops_s = float(analysis.get("flops", 0.0)) / rates.flops_per_s
     mem_s = float(analysis.get("bytes", 0.0)) / rates.hbm_bytes_per_s
     return max(flops_s, mem_s)
+
+
+def encode_time_s(cand: Candidate, wtree_like,
+                  rates: Optional[DeviceRates]) -> float:
+    """The STANDALONE encode stage: HBM-bound pass reading each dense
+    per-worker message and writing its wire payload.
+
+    ``dense`` has no encode; the fused-VJP modes emit payloads as
+    cotangents inside the backward pass — the stage does not exist, so
+    they are charged ZERO here (the whole point of the mode, and the
+    accounting the fused-mode test in ``tests/test_tune.py`` pins).
+    Every other compressed mode pays (dense bytes + payload bytes) /
+    HBM rate per round.
+    """
+    if cand.comm_mode in ("dense",) + FUSED_VJP_MODES or rates is None:
+        return 0.0
+    dense_bytes = sum(
+        float(math.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree_util.tree_leaves(wtree_like)
+    )
+    payload_bytes = predicted_wire_bits(cand, wtree_like) / 8.0
+    return float((dense_bytes + payload_bytes) / rates.hbm_bytes_per_s)
 
 
 def extra_wire_bits(cand: Candidate, wire_traffic) -> float:
@@ -213,8 +258,9 @@ def comm_time_s(cand: Candidate, wtree_like, link: LinkModel,
     total_bits = predicted_wire_bits(cand, wtree_like)
     s_bytes = total_bits / 8.0 / max(w, 1)
     n_buckets = (
-        len(plan_buckets(wtree_like, cand.bucket_bytes)) if cand.overlap
-        else 1
+        len(plan_buckets(wtree_like, cand.bucket_bytes,
+                         per_leaf=cand.fused))
+        if cand.overlap else 1
     )
     hops = 2 * (w - 1)
     comm = hops * (n_buckets * link.alpha_s
@@ -250,11 +296,18 @@ def predict_step(cand: Candidate, wtree_like, link: LinkModel, w: int, *,
     compute_s = compute_time_s(analysis, rates)
     comm_s, s_bytes, n_buckets = comm_time_s(cand, wtree_like, link, w,
                                              wire_traffic=wire_traffic)
+    # The standalone encode stage rides the compute half (it is device
+    # work, not wire time); charged only when a compute analysis is in
+    # play so codec-only micro-bench rankings stay pure wire orderings.
+    encode_s = (encode_time_s(cand, wtree_like, rates)
+                if analysis is not None else 0.0)
     return StepPrediction(
-        step_s=compose_step_s(compute_s, comm_s, cand.overlap, hide),
+        step_s=compose_step_s(compute_s, comm_s, cand.overlap, hide)
+        + encode_s,
         compute_s=compute_s,
         comm_s=comm_s,
         wire_bytes=s_bytes,
         n_buckets=n_buckets,
+        encode_s=encode_s,
         candidate=cand,
     )

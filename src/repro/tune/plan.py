@@ -35,8 +35,10 @@ import jax
 #: (v2: per-wire codec flags moe_wire/act_wire joined the plan schema;
 #:  v3: model_wire — the trainer->serving downlink — joined;
 #:  v4: hide_fraction/hide_source — the measured overlap hide replaced
-#:      the nominal constant in the search composition)
-PLAN_VERSION = 4
+#:      the nominal constant in the search composition;
+#:  v5: q8_ring_fused_vjp joined the grid and predictions gained the
+#:      standalone-encode term encode_s — zero for the fused mode)
+PLAN_VERSION = 5
 
 
 def plan_fingerprint(params_like, mesh, w: int, compressor: str,

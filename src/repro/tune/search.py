@@ -152,6 +152,11 @@ def default_candidates(
             for br in q8_block_grid:
                 out.append(Candidate("q8_ring_overlap", bucket_bytes=bb,
                                      q8_block_rows=br, **base))
+    if "q8_ring_fused_vjp" in allowed:
+        # Per-leaf buckets by construction — no bucket-byte axis.
+        for br in q8_block_grid:
+            out.append(Candidate("q8_ring_fused_vjp",
+                                 q8_block_rows=br, **base))
     if "ef21" in allowed and delta is not None and delta > 0.0:
         out.append(Candidate("ef21", **base))
     if "efbv" in allowed:
@@ -260,7 +265,7 @@ def search_plan(
             measured_comm[i] = comm_s
             measured_step[i] = compose_step_s(
                 preds[i].compute_s, comm_s, candidates[i].overlap, hide
-            )
+            ) + preds[i].encode_s
         chosen_i = min(measured_step, key=lambda i: measured_step[i])
     else:
         chosen_i = order[0]
@@ -280,6 +285,7 @@ def search_plan(
             "compute_s": p.compute_s,
             "wire_bytes": p.wire_bytes,
             "n_buckets": p.n_buckets,
+            "encode_s": p.encode_s,
             "measured_comm_s": measured_comm.get(i),
             "measured_step_s": measured_step.get(i),
             "chosen": i == chosen_i,

@@ -413,6 +413,40 @@ def test_grad_wire_payload_and_codec_timings():
     assert bare.codec_timings() == {"encode_s": None, "decode_s": None}
 
 
+def test_fused_grad_wire_snapshot_encode_stage_gone():
+    """Schema pin for the fused-backward mode: the grad wire reports
+    ``fused: True`` and EXACT ZERO standalone encode/decode seconds —
+    the deleted stage — while payload accounting is unchanged vs the
+    post-hoc overlap mode; non-fused wires report ``fused: False``."""
+    import dataclasses
+
+    from repro.comm import make_channel
+
+    params_like = {"a": jax.ShapeDtypeStruct((40,), jnp.float32),
+                   "b": jax.ShapeDtypeStruct((3, 5), jnp.float32)}
+    snaps = {}
+    for mode in ("q8_ring_overlap", "q8_ring_fused_vjp"):
+        comp = dataclasses.replace(RULE_CONFIGS["diana"], comm_mode=mode)
+        q, rule = comp.make()
+        transport = build_transport(comp, None, make_channel(comp),
+                                    rule=rule, msg_codec=q, w=4,
+                                    params_like=params_like)
+        snaps[mode] = transport.obs_snapshot(timed=True)["grad"]
+
+    fused = snaps["q8_ring_fused_vjp"]
+    posthoc = snaps["q8_ring_overlap"]
+    assert fused["fused"] is True
+    assert posthoc["fused"] is False
+    assert fused["encode_s"] == 0.0 and fused["decode_s"] == 0.0
+    assert posthoc["encode_s"] > 0.0
+    # the wire payload itself is unchanged — only the launch is deleted
+    assert fused["wire_bits"] == posthoc["wire_bits"] > 0.0
+    assert fused["payload_bytes"] == posthoc["payload_bytes"] > 0.0
+    assert fused["codec"] == posthoc["codec"]
+    # record-ready for the run header, strict schema
+    obs.validate_record(obs.run_record("t", wires=snaps))
+
+
 # ---------------------------------------------------------------------------
 # Serving fleet: event-sourced accounting
 # ---------------------------------------------------------------------------

@@ -66,6 +66,53 @@ def test_predicted_wire_bits_match_live_payloads(mode):
     assert live == predicted_wire_bits(cand, wtree), mode
 
 
+def test_fused_mode_charges_zero_standalone_encode():
+    """The fused-VJP mode's encode runs inside the backward pass —
+    the predictor must charge it ZERO standalone-encode time while
+    still charging the post-hoc compressed modes, and must never
+    perturb analysis-free (pure wire) rankings with the new term."""
+    from repro.tune.measure import DeviceRates, LinkModel
+    from repro.tune.model import encode_time_s, predict_step
+
+    wtree = _wtree(jax.random.PRNGKey(2))
+    rates = DeviceRates.nominal()
+    fused = _candidate("q8_ring_fused_vjp")
+    posthoc = _candidate("q8_ring_overlap")
+    assert fused.fused and fused.overlap and not posthoc.fused
+
+    assert encode_time_s(fused, wtree, rates) == 0.0
+    assert encode_time_s(_candidate("dense"), wtree, rates) == 0.0
+    assert encode_time_s(posthoc, wtree, rates) > 0.0
+    assert encode_time_s(_candidate("q8_ring"), wtree, rates) > 0.0
+
+    link = LinkModel.nominal()
+    analysis = {"flops": 1e9, "bytes": 1e8}
+    p_fused = predict_step(fused, wtree, link, 4, analysis=analysis,
+                           rates=rates)
+    p_post = predict_step(posthoc, wtree, link, 4, analysis=analysis,
+                          rates=rates)
+    assert p_fused.encode_s == 0.0
+    assert p_post.encode_s > 0.0
+    # same codec, same payload — the predictions differ ONLY by the
+    # deleted encode stage and the bucket granularity
+    assert p_fused.wire_bytes == p_post.wire_bytes
+    # analysis-free predictions stay pure wire orderings (no encode)
+    assert predict_step(posthoc, wtree, link, 4).encode_s == 0.0
+    # per-leaf buckets: one launch per leaf, regardless of bucket_bytes
+    n_leaves = len(jax.tree_util.tree_leaves(wtree))
+    assert p_fused.n_buckets == n_leaves
+
+
+def test_default_candidates_include_fused_mode():
+    comp = CompressionConfig(enabled=True, compressor="natural",
+                             shift_rule="diana")
+    wtree = _wtree(jax.random.PRNGKey(0))
+    cands = tune.default_candidates(comp, wtree)
+    fused = [c for c in cands if c.comm_mode == "q8_ring_fused_vjp"]
+    assert fused, [c.comm_mode for c in cands]
+    assert all("per-leaf" in c.label for c in fused)
+
+
 def test_candidate_rejects_unknown_mode_naming_modes():
     with pytest.raises(ValueError) as ei:
         Candidate("carrier_pigeon")

@@ -49,6 +49,17 @@ def _smoke_summary(elapsed_s: float, suites_run) -> None:
                            ["artifact", "entries", "bytes"], rows))
     print(f"obs records: {sink.path}")
 
+    # every smoke run also extends the bench trajectory: one flattened,
+    # sha+fingerprint-keyed ledger entry per artifact, the input to the
+    # repro.obs.regress CI gate
+    from repro.obs import history
+
+    paths = sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json")))
+    if paths:
+        ledger = os.path.join(REPO_ROOT, history.DEFAULT_HISTORY_PATH)
+        recs = history.ingest(paths, ledger)
+        print(f"history: ingested {len(recs)} artifacts -> {ledger}")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()

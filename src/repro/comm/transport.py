@@ -362,6 +362,44 @@ class Wire:
         return {"encode_s": float(t_enc),
                 "decode_s": float(max(0.0, t_round - t_enc))}
 
+    def codec_quality(self, key: Optional[jax.Array] = None, *,
+                      cap_bytes: int = 1 << 18
+                      ) -> Dict[str, Optional[float]]:
+        """Measured ``{"omega_hat", "nmse"}`` of ONE payload of this
+        wire's traffic through its codec (``repro.obs.quality``).
+
+        Shape selection mirrors ``codec_timings``: the largest declared
+        shape within ``cap_bytes``, falling back to the smallest.  The
+        probe runs the wire's REAL encode path per topology (allreduce
+        → per-worker ``encode_decode_workers`` rows, everything else →
+        whole-block encode/decode).  Unlike timings, a FUSED wire is
+        probed too — fusing deletes the standalone launch, not the
+        distortion.  Returns Nones when no traffic is declared.
+        """
+        if not self.traffic:
+            return {"omega_hat": None, "nmse": None}
+        import numpy as np
+
+        from repro.obs.quality import array_distortion
+
+        def _nbytes(sds):
+            return int(np.prod(sds.shape)) * np.dtype(sds.dtype).itemsize
+
+        within = [sds for sds, _ in self.traffic if _nbytes(sds) <= cap_bytes]
+        sds = (max(within, key=_nbytes) if within
+               else min((s for s, _ in self.traffic), key=_nbytes))
+        key = jax.random.PRNGKey(0) if key is None else key
+        data = jax.random.normal(key, sds.shape, jnp.float32).astype(sds.dtype)
+        codec = self.codec
+        topology = self.topology
+        out = jax.jit(
+            lambda k, l: array_distortion(codec, k, l, topology=topology)
+        )(key, data)
+        err = float(out["err_sq"])
+        norm = float(out["norm_sq"])
+        nmse = err / norm if norm > 0.0 else 0.0
+        return {"omega_hat": nmse, "nmse": nmse}
+
 
 class Transport:
     """Per-step registry of every Wire.  Dict-like: ``transport["grad"]``,
@@ -408,15 +446,19 @@ class Transport:
         dryrun, tune predictor and moe_wire bench all surface."""
         return {name: wire.wire_bits() for name, wire in self._wires.items()}
 
-    def obs_snapshot(self, *, timed: bool = False) -> Dict[str, dict]:
+    def obs_snapshot(self, *, timed: bool = False,
+                     quality: bool = False) -> Dict[str, dict]:
         """Per-wire telemetry dict for the obs run header: topology,
         codec, structural ``wire_bits`` AND actual ``payload_bytes`` per
-        step, plus (with ``timed``) measured encode/decode seconds of one
+        step, plus (with ``timed``) measured encode/decode seconds and
+        (with ``quality``) measured ``omega_hat``/``nmse`` of one
         payload.  Keys match what ``repro.obs.export`` renders."""
         snap: Dict[str, dict] = {}
         for name, wire in self._wires.items():
             timings = (wire.codec_timings() if timed
                        else {"encode_s": None, "decode_s": None})
+            qual = (wire.codec_quality() if quality
+                    else {"omega_hat": None, "nmse": None})
             snap[name] = {
                 "topology": wire.topology,
                 "codec": type(wire.codec).__name__,
@@ -424,6 +466,7 @@ class Transport:
                 "payload_bytes": wire.payload_nbytes(),
                 "fused": wire.fused,
                 **timings,
+                **qual,
             }
         return snap
 

@@ -119,6 +119,36 @@ def _zeros(tree):
     return tmap(lambda a: jnp.zeros(a.shape, a.dtype), tree)
 
 
+def residual_sq_diag(wgrads, h):
+    """The paper's headline probe: how small has shifting made the
+    compressed vector?  Returns f32 scalars
+
+    * ``grad_sq``           = ``mean_i ||g_i||^2``
+    * ``shift_residual_sq`` = ``mean_i ||g_i - h_i||^2``
+
+    over the worker axis.  ``h is None`` (stateless rules — plain DCGD)
+    means the wire carries ``g_i`` itself, so the residual IS the
+    gradient norm and the ratio stays pinned at 1; DIANA / EF-BV drive
+    it toward 0 as ``h_i -> grad f_i(x^*)``.  Pure jnp — safe inside a
+    jitted ``diag=True`` step (no state, no extra randomness).
+    """
+    leaves = jax.tree_util.tree_leaves(wgrads)
+    w = leaves[0].shape[0]
+
+    def _sq(t):
+        return sum(
+            jnp.sum(jnp.square(a.astype(jnp.float32)))
+            for a in jax.tree_util.tree_leaves(t)
+        )
+
+    grad_sq = _sq(wgrads) / w
+    if h is None:
+        resid_sq = grad_sq
+    else:
+        resid_sq = _sq(tmap(lambda g, hh: g - hh, wgrads, h)) / w
+    return {"grad_sq": grad_sq, "shift_residual_sq": resid_sq}
+
+
 def dense_message_bits(wgrads_like) -> float:
     """STRUCTURAL wire cost of one worker's uncompressed (dense) message:
     the ``wire_bits`` of the identity payload — per-leaf inner numel at

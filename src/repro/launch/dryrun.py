@@ -108,6 +108,11 @@ def tune_preview(cfg: ModelConfig, comp: CompressionConfig, mesh,
         # the measured fraction in its TunePlan and the obs run header
         "hide_fraction": plan.hide_fraction,
         "hide_source": plan.hide_source,
+        # likewise the compressor variance: "analytic" here (the AOT
+        # preview never runs traffic); a launch-time measured probe
+        # records omega_source="measured" instead
+        "omega": plan.omega,
+        "omega_source": plan.omega_source,
         "candidates": list(plan.candidates[:top]),
     }
 
@@ -222,7 +227,8 @@ def lower_decode(cfg: ModelConfig, shape: InputShape, mesh):
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool,
-            tcfg: TrainConfig, out_dir: str, save_hlo: bool = False) -> Dict[str, Any]:
+            tcfg: TrainConfig, out_dir: str, save_hlo: bool = False,
+            probe_quality: bool = False) -> Dict[str, Any]:
     shape = INPUT_SHAPES[shape_name]
     mesh_tag = "pod512" if multi_pod else "pod256"
     rec: Dict[str, Any] = {
@@ -335,6 +341,12 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                     "codec": type(wire.codec).__name__,
                     "bytes_per_step": wire.wire_bits() / 8.0,
                     "overlap_hidden": wire.overlap_hidden,
+                    # measured distortion is opt-in on the dry-run host:
+                    # encoding a synthetic payload per wire is cheap for
+                    # the rank/quant codecs but interpret-mode fused
+                    # codecs pay real time — dash in the table until run
+                    **(wire.codec_quality() if probe_quality
+                       else {"omega_hat": None, "nmse": None}),
                 }
                 for wire in transport
             ]
@@ -380,6 +392,11 @@ def main(argv=None):
                     help="steps between downlink publishes (amortizes "
                          "the model wire's bytes/step)")
     ap.add_argument("--no-compression", action="store_true")
+    ap.add_argument("--probe-quality", "--probe_quality",
+                    dest="probe_quality", action="store_true",
+                    help="run the measured omega_hat/NMSE distortion "
+                         "probe on each wire's codec (off by default: "
+                         "the per-wire table shows a dash)")
     ap.add_argument("--metrics_out", "--metrics-out", dest="metrics_out",
                     default=None,
                     help="emit one obs event per combination (status, "
@@ -418,7 +435,8 @@ def main(argv=None):
                 tag = f"{arch} x {shape} x {'512' if mp else '256'}"
                 print(f"=== {tag} ...", flush=True)
                 rec = run_one(arch, shape, mp, tcfg, args.out,
-                              save_hlo=args.save_hlo)
+                              save_hlo=args.save_hlo,
+                              probe_quality=args.probe_quality)
                 results.append(rec)
                 fname = os.path.join(
                     args.out,
@@ -455,19 +473,30 @@ def main(argv=None):
                           f"flops/bytes and tuner predictions under-count "
                           f"these loops", flush=True)
                 for wrow in rec.get("wires") or ():
+                    oh = wrow.get("omega_hat")
+                    nm = wrow.get("nmse")
                     print(f"    wire {wrow['name']:<5} "
                           f"{wrow['topology']:<10} {wrow['codec']:<18} "
                           f"{wrow['bytes_per_step']:.3e} B/step  "
-                          f"hidden={wrow['overlap_hidden']:.0%}", flush=True)
+                          f"hidden={wrow['overlap_hidden']:.0%}  "
+                          f"omega_hat="
+                          f"{'-' if oh is None else format(oh, '.3g')}  "
+                          f"nmse="
+                          f"{'-' if nm is None else format(nm, '.3g')}",
+                          flush=True)
                 tp = rec.get("tune_preview")
                 if tp:
                     mark = ("  (matches configured)"
                             if tp["predicted_choice"]
                             == tp["configured_comm_mode"] else
                             f"  (configured: {tp['configured_comm_mode']})")
+                    om = tp.get("omega")
                     print(f"    tune preview: predicted choice "
                           f"{tp['predicted_choice']} "
-                          f"@ {tp['predicted_step_s']:.3e}s/step{mark}",
+                          f"@ {tp['predicted_step_s']:.3e}s/step{mark}  "
+                          f"[hide: {tp['hide_source']}, omega: "
+                          f"{'-' if om is None else format(om, '.3g')} "
+                          f"({tp['omega_source']})]",
                           flush=True)
 
     n_ok = sum(r["status"] == "ok" for r in results)

@@ -79,6 +79,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.configs.base import CompressionConfig, ModelConfig, TrainConfig
 from repro.core import SHIFT_RULES
 from repro.core.iterate_comp import VRGDCI
+from repro.core.shift_rules import residual_sq_diag
 from repro.dist import (
     params_pspecs,
     per_worker_grads,
@@ -318,6 +319,9 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh, w: int,
                         grads,
                     )
                     extra["ef_err_norm"] = _tree_dist(g_bar, g_mean)
+                    # the paper's headline probe: ||g - h||^2 vs ||g||^2
+                    # against the PRE-round shift (what the wire carried)
+                    extra.update(residual_sq_diag(grads, state.h))
                 if h is not None and h_bar is not None:
                     h_mean = tmap(
                         lambda x: jnp.mean(x.astype(jnp.float32), axis=0), h
@@ -414,14 +418,16 @@ def dense_step_analysis(cfg: ModelConfig, mesh, w: int, lr: float,
 def resolve_comm_auto(comp: CompressionConfig, cfg: ModelConfig, mesh, w: int,
                       *, plan_path=None, cache_dir=None, force=False,
                       tune_modes=None, lr: float = 3e-4, batch: int = 8,
-                      seq: int = 128):
+                      seq: int = 128, obs_sink=None):
     """Resolve ``comm_mode='auto'`` (or an explicit ``--tune_plan`` /
     ``--autotune`` request) via ``repro.tune``, printing what happened —
     the fingerprint, whether the plan came from the cache, and the
     chosen knobs.  Returns ``(resolved CompressionConfig, TunePlan)`` —
     the plan carries the predicted step time the obs layer logs next to
-    every measured step."""
+    every measured step.  ``obs_sink`` receives the search's structured
+    warning events (e.g. ``omega_unavailable``)."""
     from repro import tune
+    from repro.core.compressors import make_compressor
 
     if plan_path:
         plan = tune.load_plan(plan_path)
@@ -439,14 +445,18 @@ def resolve_comm_auto(comp: CompressionConfig, cfg: ModelConfig, mesh, w: int,
             lambda p: jax.ShapeDtypeStruct((w, *p.shape), p.dtype),
             params_shapes,
         )
+        codec = make_compressor(comp.compressor,
+                                **dict(comp.compressor_kwargs))
         plan, hit = tune.autotune(
             comp, params_shapes, mesh, w,
             cache_dir=(cache_dir or tune.DEFAULT_CACHE_DIR),
             force=force, modes=modes,
             # evaluated LAZILY on a cache miss only: the HLO analysis
-            # (one dense-step lower+compile), rate calibration, and the
+            # (one dense-step lower+compile), rate calibration, the
             # MEASURED overlap hide fraction (three timed phases through
-            # the real AsyncChannel handles) replace nominal constants
+            # the real AsyncChannel handles), and the MEASURED compressor
+            # variance (obs.quality distortion over the real leaf shapes)
+            # replace nominal/analytic constants
             analysis_fn=lambda: dense_step_analysis(
                 cfg, mesh, w, lr, batch, seq
             ),
@@ -454,6 +464,10 @@ def resolve_comm_auto(comp: CompressionConfig, cfg: ModelConfig, mesh, w: int,
             hide_fn=lambda: tune.measure_overlap_hide(
                 mesh, wlike, cap_bytes=1 << 20, iters=2
             ),
+            omega_fn=lambda: (tune.measure_omega(
+                codec, wlike, mesh=mesh, cap_bytes=1 << 20, iters=2
+            ) if hasattr(codec, "omega") else None),
+            obs_sink=obs_sink,
         )
         source = "cache hit" if hit else "searched"
     resolved = tune.apply_plan(comp, plan)
@@ -461,13 +475,15 @@ def resolve_comm_auto(comp: CompressionConfig, cfg: ModelConfig, mesh, w: int,
                 if plan.measured_step_s is not None else "n/a")
     hide = (f"{plan.hide_fraction:.2f} ({plan.hide_source})"
             if plan.hide_fraction is not None else plan.hide_source)
+    omega = (f"{plan.omega:.3g} ({plan.omega_source})"
+             if plan.omega is not None else plan.omega_source)
     print(f"tune: {source}  fingerprint={plan.fingerprint[:12]}  "
           f"-> comm_mode={resolved.comm_mode} "
           f"bucket={resolved.overlap_bucket_bytes} "
           f"randk_q={resolved.randk_q:g} "
           f"q8_block={resolved.q8_block_rows} "
           f"(predicted {plan.predicted_step_s:.3e}s, measured {measured}, "
-          f"hide {hide})")
+          f"hide {hide}, omega {omega})")
     return resolved, plan
 
 
@@ -594,6 +610,19 @@ def main(argv=None):
             "require --comm_mode auto (you passed "
             f"--comm_mode {args.comm_mode})"
         )
+    # the sink exists BEFORE plan resolution so the tune search's
+    # structured warning events (omega_unavailable) land in --metrics_out
+    obs_on = args.metrics_out is not None
+    sink = None
+    recorder = None
+    if obs_on or args.trace:
+        from repro import obs
+
+        if obs_on:
+            sink = obs.JsonlSink(args.metrics_out)
+        if args.trace:
+            recorder = obs.SpanRecorder()
+
     plan = None
     if comp.enabled and comp.comm_mode == "auto":
         comp, plan = resolve_comm_auto(
@@ -601,6 +630,7 @@ def main(argv=None):
             plan_path=args.tune_plan, cache_dir=args.tune_cache,
             force=args.autotune, tune_modes=args.tune_modes,
             lr=args.lr, batch=args.batch, seq=args.seq,
+            obs_sink=sink,
         )
         # an explicit CLI wire flag beats the plan's (plans searched
         # with the default grids pin both wires to 'none')
@@ -614,21 +644,11 @@ def main(argv=None):
                        warmup_steps=max(1, args.steps // 10),
                        compression=comp)
 
-    obs_on = args.metrics_out is not None
     state = init_state(jax.random.PRNGKey(0), cfg, tcfg, w)
     step_fn = jax.jit(build_train_step(cfg, tcfg, mesh, w, diag=obs_on))
     stream = TokenStream(cfg, args.seq, args.batch)
 
-    sink = None
-    recorder = None
     predicted_step_s = None
-    if obs_on or args.trace:
-        from repro import obs
-
-        if obs_on:
-            sink = obs.JsonlSink(args.metrics_out)
-        if args.trace:
-            recorder = obs.SpanRecorder()
     if obs_on:
         from repro import tune
         from repro.comm import SimChannel, build_transport
@@ -688,9 +708,12 @@ def main(argv=None):
             comm_mode=comp.comm_mode,
             shift_rule=comp.effective_shift_rule if comp.enabled else None,
             steps=args.steps,
-            wires=acct.obs_snapshot(timed=True),
+            wires=acct.obs_snapshot(timed=True, quality=True),
             hide_fraction=hide_fraction,
             hide_source=hide_source,
+            omega=plan.omega if plan is not None else None,
+            omega_source=(plan.omega_source if plan is not None
+                          else "analytic"),
             predicted_step_s=predicted_step_s,
         ))
 
@@ -753,6 +776,11 @@ def main(argv=None):
                                  if "h_bar_drift" in metrics else None),
                     ef_err_norm=(float(metrics["ef_err_norm"])
                                  if "ef_err_norm" in metrics else None),
+                    grad_sq=(float(metrics["grad_sq"])
+                             if "grad_sq" in metrics else None),
+                    shift_residual_sq=(
+                        float(metrics["shift_residual_sq"])
+                        if "shift_residual_sq" in metrics else None),
                 ))
                 # resync_h_bar fires inside jit at (step % N) == N-1;
                 # mirror the event host-side from the same arithmetic

@@ -17,6 +17,12 @@ discipline (``sink``), one export surface (``export``):
                serialized.
   ``export``   end-of-run summary table, Prometheus text exposition,
                and the CI ``--check`` schema gate.
+  ``quality``  measured distortion: ``omega_hat``/NMSE through the
+               codecs' real encode paths (jit-compatible diagnostics).
+  ``history``  the bench trajectory ledger: BENCH_*.json flattened into
+               ``history.jsonl`` keyed by git sha x config fingerprint.
+  ``regress``  the CI regression gate over that ledger's baselines
+               (per-metric-class tolerance bands, non-zero exit).
 
 THE CONTRACT (tested): with observability off, the trainer step is
 bit-exact with the uninstrumented step and the jit path pays nothing —
@@ -62,6 +68,15 @@ from repro.obs.export import (
     summarize,
     summary_table,
 )
+from repro.obs.quality import (
+    array_distortion,
+    distortion_floats,
+    tree_distortion,
+)
+
+# NOTE: ``history`` and ``regress`` are CLI-first submodules (`python -m
+# repro.obs.history` / ``.regress``) — import them explicitly; an eager
+# import here would trip runpy's double-import warning under ``-m``.
 
 __all__ = [
     "Counter",
@@ -77,11 +92,14 @@ __all__ = [
     "StampRecorder",
     "TeeSink",
     "active_recorder",
+    "array_distortion",
     "check_jsonl",
+    "distortion_floats",
     "event_record",
     "finite_or_none",
     "format_table",
     "make_record",
+    "tree_distortion",
     "prometheus_text",
     "read_jsonl",
     "recording",

@@ -40,8 +40,12 @@ def summarize(records: List[dict], *, name: str = "run") -> dict:
     h_step = Histogram()
     h_pred = Histogram()
     h_ratio = Histogram()
+    h_resid = Histogram()
+    h_resid_ratio = Histogram()
     last_loss = None
     last_bits = None
+    resid_first = None
+    resid_last = None
     for r in steps:
         d = r.get("data", {})
         t = _num(d.get("step_s"))
@@ -56,16 +60,34 @@ def summarize(records: List[dict], *, name: str = "run") -> dict:
             last_loss = _num(d.get("loss"))
         if d.get("bits") is not None:
             last_bits = _num(d.get("bits"))
+        # the shift-residual trajectory ||g - h||^2 (vs ||g||^2): the
+        # paper's headline effect — shrinking under DIANA/EF-BV, flat
+        # (ratio 1) under plain DCGD
+        rs = _num(d.get("shift_residual_sq"))
+        gs = _num(d.get("grad_sq"))
+        if rs is not None:
+            h_resid.observe(rs)
+            if resid_first is None:
+                resid_first = rs
+            resid_last = rs
+        if rs is not None and gs is not None and gs > 0:
+            h_resid_ratio.observe(rs / gs)
 
     wires = {}
     hide = None
     hide_source = None
+    omega = None
+    omega_source = None
     for r in runs:
         d = r.get("data", {})
         wires.update(d.get("wires") or {})
         if d.get("hide_fraction") is not None:
             hide = _num(d.get("hide_fraction"))
             hide_source = d.get("hide_source")
+        if d.get("omega") is not None:
+            omega = _num(d.get("omega"))
+        if d.get("omega_source") is not None:
+            omega_source = d.get("omega_source")
 
     by_event: Dict[str, int] = {}
     for r in events:
@@ -82,6 +104,12 @@ def summarize(records: List[dict], *, name: str = "run") -> dict:
         wires=wires,
         hide_fraction=hide,
         hide_source=hide_source,
+        omega=omega,
+        omega_source=omega_source,
+        shift_residual_sq=h_resid.to_value(),
+        shift_residual_over_grad=h_resid_ratio.to_value(),
+        shift_residual_first=resid_first,
+        shift_residual_last=resid_last,
         events=by_event,
     )
 
@@ -123,13 +151,19 @@ def summary_table(records: List[dict], *, name: str = "run") -> str:
         ("final bits", _fmt(s["final_bits"]), ""),
         ("overlap hide fraction", _fmt(s["hide_fraction"]),
          s["hide_source"] or ""),
+        ("omega", _fmt(s.get("omega")), s.get("omega_source") or ""),
+        ("shift resid/grad (mean)",
+         _fmt((s.get("shift_residual_over_grad") or {}).get("mean")),
+         f"||g-h||^2: first {_fmt(s.get('shift_residual_first'))} -> "
+         f"last {_fmt(s.get('shift_residual_last'))}"),
     ]
     for wname, w in sorted((s["wires"] or {}).items()):
         rows.append((
             f"wire {wname}",
             f"{_fmt((w or {}).get('payload_bytes'))} B/step payload",
             f"enc {_fmt((w or {}).get('encode_s'))}s / "
-            f"dec {_fmt((w or {}).get('decode_s'))}s",
+            f"dec {_fmt((w or {}).get('decode_s'))}s / "
+            f"omega_hat {_fmt((w or {}).get('omega_hat'))}",
         ))
     for ev, n in sorted((s["events"] or {}).items()):
         rows.append((f"event {ev}", n, ""))
@@ -163,6 +197,11 @@ def prometheus_text(records: List[dict], *, name: str = "run") -> str:
     gauge("repro_final_loss", s["final_loss"])
     gauge("repro_uplink_bits_total", s["final_bits"])
     gauge("repro_overlap_hide_fraction", s["hide_fraction"])
+    gauge("repro_omega", s.get("omega"))
+    gauge("repro_shift_residual_sq",
+          (s.get("shift_residual_sq") or {}).get("mean"))
+    gauge("repro_shift_residual_over_grad",
+          (s.get("shift_residual_over_grad") or {}).get("mean"))
     for wname, w in sorted((s["wires"] or {}).items()):
         lab = f'wire="{_prom_escape(wname)}"'
         gauge("repro_wire_bits_per_step", (w or {}).get("wire_bits"), lab)
@@ -170,6 +209,8 @@ def prometheus_text(records: List[dict], *, name: str = "run") -> str:
               (w or {}).get("payload_bytes"), lab)
         gauge("repro_wire_encode_seconds", (w or {}).get("encode_s"), lab)
         gauge("repro_wire_decode_seconds", (w or {}).get("decode_s"), lab)
+        gauge("repro_wire_omega_hat", (w or {}).get("omega_hat"), lab)
+        gauge("repro_wire_nmse", (w or {}).get("nmse"), lab)
     for ev, n in sorted((s["events"] or {}).items()):
         lines.append("# TYPE repro_events_total counter")
         lines.append(

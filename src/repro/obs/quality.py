@@ -1,0 +1,118 @@
+"""Measured distortion probes: the paper's quantities on real traffic.
+
+The whole argument of shifted compression is a *measurable* claim —
+``E||Q(v) - v||^2 <= omega ||v||^2`` for the unbiased class U(omega),
+and the shifted vector ``g - h`` shrinks while the plain gradient does
+not.  Everything before this module trusted the analytic certificates
+(``codec.omega(d)`` / ``codec.delta(d)``); here the same quantities are
+measured over the traffic a wire actually carries:
+
+* ``omega_hat`` — size-weighted mean of the per-leaf realized variance
+  ratio ``||Q(v)-v||^2 / ||v||^2``.  The weighting mirrors
+  ``tune.estimate_omega``'s d-weighted analytic mean, so the two
+  numbers are directly comparable (and ``omega_hat <= omega`` must hold
+  in expectation for any honest U(omega) codec).
+* ``nmse`` — global ``sum err^2 / sum norm^2`` over the whole tree.
+  Defined for biased (contractive) codecs too, where no omega exists.
+
+All math is pure jnp on concrete trees, so the probes compose under
+``jax.jit`` as diagnostics; probe keys are derived with the wire
+layer's own ``leaf_key`` fold (never by splitting trainer state), which
+is what keeps ``diag=True`` runs bit-exact with ``diag=False``.  Comm
+imports stay lazy so ``repro.obs`` remains a leaf package.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "array_distortion",
+    "tree_distortion",
+    "distortion_floats",
+]
+
+#: guard for 0/0 — an all-zero probe tree has zero distortion by fiat
+_EPS = 1e-30
+
+
+def _sq(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    return jnp.sum(x * x)
+
+
+def array_distortion(codec, key: jax.Array, data: jax.Array, *,
+                     topology: str = "allreduce") -> Dict[str, jax.Array]:
+    """Distortion of ONE wire payload through the codec's real path.
+
+    ``data`` is worker-stacked ``(W, ...)`` for the allreduce uplink
+    (each row rides its own ``worker_keys`` row, exactly like
+    ``Channel.uplink``); any other topology encodes the block whole,
+    the way the forwarded-payload wires (moe / act / model) do.
+
+    Returns f32 scalars ``{"err_sq", "norm_sq"}`` — callers fold them
+    into ``omega_hat`` / ``nmse`` (see ``tree_distortion``).
+    """
+    from repro.comm.wire import encode_decode_workers
+
+    if topology == "allreduce":
+        _, decoded = encode_decode_workers(codec, key, data)
+    else:
+        payload, meta = codec.encode(key, data)
+        decoded = codec.decode(
+            payload, meta, jax.ShapeDtypeStruct(data.shape, data.dtype)
+        )
+    err_sq = _sq(decoded.astype(jnp.float32) - data.astype(jnp.float32))
+    return {"err_sq": err_sq, "norm_sq": _sq(data)}
+
+
+def tree_distortion(codec, key: jax.Array, wtree: Any, *,
+                    topology: str = "allreduce") -> Dict[str, jax.Array]:
+    """Measured ``omega_hat`` / ``nmse`` over a worker-stacked pytree.
+
+    Per-leaf keys come from ``leaf_key(key, i)`` over the global leaf
+    position — the same derivation every wire consumer shares — so the
+    probe sees the identical encode randomness a real round would.
+
+    Returns f32 scalars:
+
+    * ``omega_hat`` — sum_i d_i * (err_i / norm_i) / sum_i d_i with
+      d_i the per-worker leaf size (empty-norm leaves contribute 0);
+    * ``nmse``      — sum_i err_i / sum_i norm_i;
+    * ``err_sq`` / ``norm_sq`` — the raw global sums.
+    """
+    from repro.comm.wire import leaf_key
+
+    leaves = jax.tree_util.tree_leaves(wtree)
+    if not leaves:
+        raise ValueError("tree_distortion of an empty tree")
+    ratio_acc = jnp.zeros((), jnp.float32)
+    err_acc = jnp.zeros((), jnp.float32)
+    norm_acc = jnp.zeros((), jnp.float32)
+    d_total = 0
+    for i, leaf in enumerate(leaves):
+        shape = leaf.shape[1:] if topology == "allreduce" else leaf.shape
+        d = int(math.prod(shape)) if shape else 1
+        out = array_distortion(codec, leaf_key(key, i), leaf,
+                               topology=topology)
+        ratio = jnp.where(out["norm_sq"] > 0.0,
+                          out["err_sq"] / jnp.maximum(out["norm_sq"], _EPS),
+                          0.0)
+        ratio_acc = ratio_acc + d * ratio
+        err_acc = err_acc + out["err_sq"]
+        norm_acc = norm_acc + out["norm_sq"]
+        d_total += d
+    omega_hat = ratio_acc / d_total
+    nmse = jnp.where(norm_acc > 0.0,
+                     err_acc / jnp.maximum(norm_acc, _EPS), 0.0)
+    return {"omega_hat": omega_hat, "nmse": nmse,
+            "err_sq": err_acc, "norm_sq": norm_acc}
+
+
+def distortion_floats(out: Dict[str, Any]) -> Dict[str, float]:
+    """Host-side view of a distortion dict (floats, obs-record ready)."""
+    return {k: float(v) for k, v in out.items()}

@@ -246,6 +246,9 @@ class TrainerFleetBridge:
         self._obs.emit(event_record(
             "publish", step, seq=msg.seq, bytes=msg.bits / 8.0,
             err_rel=msg.err_rel,
+            # the downlink's quality number in the same NMSE units the
+            # per-wire probes report: err_rel is ||Q(d)-d||/||params||
+            nmse=msg.err_rel ** 2,
         ))
         self.fleet.deliver(msg)
         self.finished.extend(self.fleet.tick())

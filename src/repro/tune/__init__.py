@@ -33,9 +33,11 @@ from repro.tune.measure import (
     DEFAULT_MEASURE_BYTES_CAP,
     DeviceRates,
     LinkModel,
+    OmegaMeasurement,
     OverlapMeasurement,
     calibrate_link,
     calibrate_rates,
+    measure_omega,
     measure_overlap_hide,
     measure_subtree,
     synth_wtree,
@@ -102,6 +104,9 @@ def autotune(
     measure_iters: int = 3,
     hide: Optional[float] = None,
     hide_fn=None,
+    omega: Optional[float] = None,
+    omega_fn=None,
+    obs_sink=None,
     **search_kw,
 ) -> Tuple[TunePlan, bool]:
     """Resolve one workload to a ``TunePlan``: ``(plan, cache_hit)``.
@@ -117,6 +122,13 @@ def autotune(
     must stay free of lower/compile/measure work.  ``hide_fn`` returns
     an ``OverlapMeasurement`` (or a bare float); like calibration it is
     only invoked when ``verify_top > 0`` (the measuring path).
+    ``omega_fn`` is the same lazy shape for the MEASURED compressor
+    variance: it returns an ``OmegaMeasurement`` (or a bare float, or
+    ``None`` to decline), and on a measuring-path cache miss its
+    ``omega_hat`` replaces the analytic ``estimate_omega`` in the EF-BV
+    eta/nu derivation (plan records ``omega``/``omega_source``).
+    ``obs_sink`` receives the search's structured warning events (e.g.
+    ``omega_unavailable``).
     """
     # the search space is part of the cache key: a plan from a narrowed
     # --tune_modes/grid run must MISS a later full-grid lookup
@@ -143,6 +155,12 @@ def autotune(
         m = hide_fn()
         hide = getattr(m, "hide_fraction", m)
         hide_source = getattr(m, "source", "measured")
+    omega_source = None if omega is None else "measured"
+    if omega is None and omega_fn is not None and verify_top > 0:
+        m = omega_fn()
+        if m is not None:
+            omega = getattr(m, "omega_hat", m)
+            omega_source = getattr(m, "source", "measured")
     wlike = tmap(
         lambda p: jax.ShapeDtypeStruct((w, *p.shape), p.dtype), params_like
     )
@@ -150,7 +168,9 @@ def autotune(
         comp, wlike, mesh, w, fingerprint=fp, analysis=analysis, link=link,
         rates=rates, modes=modes, verify_top=verify_top,
         measure_iters=measure_iters, cap_bytes=cap_bytes,
-        hide=hide, hide_source=hide_source, **search_kw,
+        hide=hide, hide_source=hide_source,
+        omega=omega, omega_source=omega_source, obs_sink=obs_sink,
+        **search_kw,
     )
     save_plan(plan, cache_path(cache_dir, fp))
     return plan, False
@@ -168,6 +188,7 @@ __all__ = [
     "DeviceRates",
     "LinkModel",
     "OVERLAP_HIDE",
+    "OmegaMeasurement",
     "OverlapMeasurement",
     "PLAN_VERSION",
     "StepPrediction",
@@ -188,6 +209,7 @@ __all__ = [
     "load_cached_plan",
     "load_plan",
     "measure_candidate",
+    "measure_omega",
     "measure_overlap_hide",
     "measure_subtree",
     "plan_fingerprint",

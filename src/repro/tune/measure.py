@@ -249,6 +249,59 @@ def measure_overlap_hide(mesh, wtree_like, *, mode: str = "dense",
     )
 
 
+@dataclass(frozen=True)
+class OmegaMeasurement:
+    """A MEASURED compressor variance: ``omega_hat`` realized on synthetic
+    traffic with the real leaf shapes, plus the global NMSE (defined for
+    biased codecs too).  ``source`` distinguishes this from the analytic
+    ``codec.omega(d)`` certificate in plans/records."""
+
+    omega_hat: float
+    nmse: float
+    n_leaves: int
+    d_total: int
+    source: str = "measured"
+
+
+def measure_omega(codec, wtree_like, *, mesh=None,
+                  cap_bytes: int = DEFAULT_MEASURE_BYTES_CAP,
+                  iters: int = 3,
+                  key: Optional[jax.Array] = None) -> OmegaMeasurement:
+    """Measure ``omega_hat = E||Q(v)-v||^2 / ||v||^2`` on THIS codec over
+    the real (capped) leaf shapes, replacing the analytic estimate the
+    EF-BV ``eta``/``nu`` derivation otherwise trusts.
+
+    Draws ``iters`` independent normal trees (the synthetic stand-in for
+    gradient traffic — mean ratio over normal data is the standard
+    variance probe) and averages the jitted ``obs.quality`` distortion
+    pass; the d-weighting matches ``tune.estimate_omega`` so measured
+    and analytic are directly comparable.
+    """
+    from repro.obs.quality import tree_distortion
+
+    key = jax.random.PRNGKey(13) if key is None else key
+    sub = measure_subtree(wtree_like, cap_bytes)
+    leaves = jax.tree_util.tree_leaves(sub)
+    d_total = sum(
+        max(1, int(np.prod(l.shape[1:]))) for l in leaves
+    )
+    fn = jax.jit(lambda k, t: tree_distortion(codec, k, t))
+    omega_acc = 0.0
+    nmse_acc = 0.0
+    n = max(1, iters)
+    for i in range(n):
+        tree = synth_wtree(jax.random.fold_in(key, i), sub, mesh)
+        out = fn(jax.random.fold_in(key, 1000 + i), tree)
+        omega_acc += float(out["omega_hat"])
+        nmse_acc += float(out["nmse"])
+    return OmegaMeasurement(
+        omega_hat=omega_acc / n,
+        nmse=nmse_acc / n,
+        n_leaves=len(leaves),
+        d_total=int(d_total),
+    )
+
+
 def calibrate_rates(*, n: int = 512, iters: int = 3) -> DeviceRates:
     """Device compute/memory rates from a timed matmul and a timed
     elementwise pass (modest sizes — calibration must not dwarf the

@@ -37,8 +37,11 @@ import jax
 #:  v4: hide_fraction/hide_source — the measured overlap hide replaced
 #:      the nominal constant in the search composition;
 #:  v5: q8_ring_fused_vjp joined the grid and predictions gained the
-#:      standalone-encode term encode_s — zero for the fused mode)
-PLAN_VERSION = 5
+#:      standalone-encode term encode_s — zero for the fused mode;
+#:  v6: omega/omega_source — a measured compressor variance can replace
+#:      the analytic certificate in the EF-BV eta/nu derivation and the
+#:      candidate ranking; "none" records that no certificate existed)
+PLAN_VERSION = 6
 
 
 def plan_fingerprint(params_like, mesh, w: int, compressor: str,
@@ -104,6 +107,9 @@ class TunePlan:
     model_wire: str = "none"
     hide_fraction: Optional[float] = None  # overlap hide the search used
     hide_source: str = "nominal"           # "nominal" | "measured"
+    omega: Optional[float] = None          # compressor variance the
+    #                                        eta/nu derivation used
+    omega_source: str = "analytic"         # "measured"|"analytic"|"none"
     candidates: Tuple[dict, ...] = field(default_factory=tuple)
     version: int = PLAN_VERSION
 

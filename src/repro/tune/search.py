@@ -112,6 +112,7 @@ def default_candidates(
     moe_wire_grid: Sequence[str] = DEFAULT_MOE_WIRE_GRID,
     act_wire_grid: Sequence[str] = DEFAULT_ACT_WIRE_GRID,
     model_wire_grid: Sequence[str] = DEFAULT_MODEL_WIRE_GRID,
+    omega: Optional[float] = None,
 ) -> Tuple[Candidate, ...]:
     """The search grid for one ``CompressionConfig`` (module docstring).
 
@@ -121,7 +122,10 @@ def default_candidates(
     ``act_wire_grid`` / ``model_wire_grid`` cross every mode candidate
     with per-wire codec flags (``WIRE_CODEC_FLAGS``), letting the
     search pick a DIFFERENT codec per registered wire (the model wire
-    is the trainer->serving downlink).
+    is the trainer->serving downlink).  ``omega`` overrides the analytic
+    ``estimate_omega`` in the EF-BV eta/nu derivation — pass
+    ``tune.measure_omega(...).omega_hat`` so the damping runs on the
+    variance REALIZED on this traffic, not the certificate.
     """
     allowed = set(TUNABLE_MODES if modes is None else modes)
     unknown = allowed - set(TUNABLE_MODES)
@@ -132,7 +136,8 @@ def default_candidates(
     base = dict(compressor=comp.compressor,
                 compressor_kwargs=tuple(comp.compressor_kwargs))
     q = make_compressor(comp.compressor, **dict(comp.compressor_kwargs))
-    omega = estimate_omega(q, wtree_like)
+    if omega is None:
+        omega = estimate_omega(q, wtree_like)
     delta = estimate_delta(q, wtree_like)
     eta, nu = efbv_params(delta=delta or 0.0, omega=omega)
 
@@ -218,6 +223,9 @@ def search_plan(
     key: Optional[jax.Array] = None,
     hide: Optional[float] = None,
     hide_source: Optional[str] = None,
+    omega: Optional[float] = None,
+    omega_source: Optional[str] = None,
+    obs_sink=None,
 ) -> TunePlan:
     """Predict-all, measure-top-``verify_top``, pick the measured winner.
 
@@ -231,14 +239,47 @@ def search_plan(
     predicted and the measured composition (pass
     ``measure_overlap_hide(...).hide_fraction`` for the measured
     accounting the obs layer reports); the plan records it with its
-    ``hide_source``.
+    ``hide_source``.  ``omega`` does the same for the compressor
+    variance (pass ``measure_omega(...).omega_hat``): it replaces the
+    analytic ``estimate_omega`` in the EF-BV eta/nu derivation, and the
+    plan records ``omega``/``omega_source``.  A codec with NO variance
+    certificate at all gets ``omega_source="none"`` plus a structured
+    ``omega_unavailable`` warning event on ``obs_sink`` (stdout when no
+    sink) — previously that information was silently dropped and the
+    search proceeded on ``delta or 0.0`` with no trace.
     """
     key = jax.random.PRNGKey(0) if key is None else key
+    q = make_compressor(comp.compressor, **dict(comp.compressor_kwargs))
+    if omega is not None:
+        omega = float(omega)
+        omega_source = omega_source or "measured"
+    else:
+        omega = estimate_omega(q, wtree_like)
+        if omega is not None:
+            omega_source = omega_source or "analytic"
+        else:
+            omega_source = "none"
+            codec_name = type(q).__name__
+            if obs_sink is not None:
+                from repro.obs.metrics import event_record
+
+                obs_sink.emit(event_record(
+                    "omega_unavailable", 0, codec=codec_name,
+                    compressor=comp.compressor,
+                    fallback="efbv eta/nu from delta or 0.0",
+                ))
+            else:
+                print(
+                    f"tune: WARNING: codec {codec_name} has no unbiased "
+                    "variance certificate (.omega); EF-BV eta/nu fall "
+                    "back to the contraction delta or 0.0 "
+                    "(omega_source='none')"
+                )
     candidates = default_candidates(
         comp, wtree_like, modes=modes, bucket_grid=bucket_grid,
         randk_grid=randk_grid, q8_block_grid=q8_block_grid,
         moe_wire_grid=moe_wire_grid, act_wire_grid=act_wire_grid,
-        model_wire_grid=model_wire_grid,
+        model_wire_grid=model_wire_grid, omega=omega,
     )
     if not candidates:
         raise ValueError("empty candidate grid (modes filtered everything)")
@@ -307,5 +348,7 @@ def search_plan(
         hide_fraction=hide,
         hide_source=(hide_source or
                      ("nominal" if hide is None else "measured")),
+        omega=omega,
+        omega_source=omega_source,
         candidates=tuple(rows),
     )

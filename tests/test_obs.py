@@ -493,13 +493,17 @@ def _fake_run_records():
         "train", workers=4,
         wires={"grad": {"topology": "allreduce", "codec": "Natural",
                         "wire_bits": 1000.0, "payload_bytes": 500.0,
-                        "encode_s": 1e-4, "decode_s": 2e-4}},
+                        "encode_s": 1e-4, "decode_s": 2e-4,
+                        "omega_hat": 0.11, "nmse": 0.09}},
         hide_fraction=0.8, hide_source="measured",
+        omega=0.13, omega_source="measured",
     )]
     for i in range(4):
         recs.append(obs.step_record(i, run="train", loss=2.0 - 0.1 * i,
                                     bits=100.0 * (i + 1), step_s=0.01,
-                                    predicted_step_s=0.012))
+                                    predicted_step_s=0.012,
+                                    grad_sq=4.0,
+                                    shift_residual_sq=1.0 / (i + 1)))
     recs.append(obs.event_record("drift_resync", 3, every=4))
     recs.append(obs.event_record("publish", 2, bytes=10.0, err_rel=0.01))
     return recs
@@ -516,20 +520,37 @@ def test_summarize_measured_vs_predicted():
     assert s["hide_fraction"] == pytest.approx(0.8)
     assert s["hide_source"] == "measured"
     assert s["wires"]["grad"]["payload_bytes"] == 500.0
+    assert s["wires"]["grad"]["omega_hat"] == pytest.approx(0.11)
     assert s["events"] == {"drift_resync": 1, "publish": 1}
+    # the quality aggregate: measured omega from the run header, the
+    # shift-residual trajectory from the step stream
+    assert s["omega"] == pytest.approx(0.13)
+    assert s["omega_source"] == "measured"
+    assert s["shift_residual_first"] == pytest.approx(1.0)
+    assert s["shift_residual_last"] == pytest.approx(0.25)
+    assert s["shift_residual_sq"]["count"] == 4
+    assert s["shift_residual_over_grad"]["mean"] == pytest.approx(
+        (1.0 + 0.5 + 1.0 / 3.0 + 0.25) / 4.0 / 4.0)
 
 
 def test_summary_table_and_prometheus_text():
     recs = _fake_run_records()
     table = obs.summary_table(recs, name="train")
     for needle in ("wire grad", "predicted/actual", "event drift_resync",
-                   "overlap hide fraction"):
+                   "overlap hide fraction", "omega", "shift resid/grad",
+                   "omega_hat 0.11"):
         assert needle in table
     prom = obs.prometheus_text(recs, name="train")
     assert '# TYPE repro_overlap_hide_fraction gauge' in prom
     assert 'repro_overlap_hide_fraction{run="train"} 0.8' in prom
     assert 'repro_wire_payload_bytes_per_step{run="train",wire="grad"}' in prom
     assert 'repro_events_total{run="train",event="publish"} 1' in prom
+    # schema pins for the quality gauges (dashboards key on these names)
+    assert 'repro_omega{run="train"} 0.13' in prom
+    assert 'repro_wire_omega_hat{run="train",wire="grad"} 0.11' in prom
+    assert 'repro_wire_nmse{run="train",wire="grad"} 0.09' in prom
+    assert '# TYPE repro_shift_residual_sq gauge' in prom
+    assert '# TYPE repro_shift_residual_over_grad gauge' in prom
     # exposition format: every non-comment line is `name{labels} value`
     for line in prom.strip().splitlines():
         if not line.startswith("#"):

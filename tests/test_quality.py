@@ -1,0 +1,331 @@
+"""The theory observatory: measured omega / shift-residual probes, the
+bench history ledger, and the regression gate.
+
+Two kinds of pins live here:
+
+* **theorem-style** — the measured ``omega_hat`` agrees with the
+  analytic U(omega) certificate where the certificate is EXACT (RandK's
+  ``d/K - 1`` is an equality in expectation for any input) and stays
+  UNDER it where the certificate is a worst-case bound (int8
+  stochastic rounding, natural compression); and the shift residual
+  ``||g - h||^2`` decays under DIANA / EF-BV while plain DCGD keeps it
+  pinned at the gradient norm — the paper's headline effect, observed
+  on the observability surface instead of assumed.
+* **plumbing** — the wire-level quality probe, the history ledger's
+  sha x fingerprint keying, and the regress gate's per-class tolerance
+  bands with their exit codes.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs, tune
+from repro.core.algorithms import DCGDShift
+from repro.core.compressors import (
+    Identity,
+    Int8Stochastic,
+    NaturalCompression,
+    RandK,
+)
+from repro.core.shift_rules import (
+    DianaShift,
+    EFBVShift,
+    FixedShift,
+    residual_sq_diag,
+)
+from repro.data.problems import make_ridge
+from repro.obs import history, regress
+from repro.obs.quality import tree_distortion
+
+tmap = jax.tree_util.tree_map
+
+
+def _wtree_like(w=4, d=2000):
+    return {"a": jax.ShapeDtypeStruct((w, d), jnp.float32),
+            "b": jax.ShapeDtypeStruct((w, d // 2), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# omega_hat vs the analytic certificate (satellite: property tests)
+# ---------------------------------------------------------------------------
+
+
+def test_randk_omega_hat_matches_exact_certificate():
+    """RandK's ``omega(d) = d/K - 1`` is an EQUALITY in expectation for
+    any input, so the measured ratio must converge to it — the one codec
+    where measured-vs-analytic is a tight property, not an inequality."""
+    like = _wtree_like()
+    q = RandK(0.05)
+    analytic = tune.estimate_omega(q, like)
+    m = tune.measure_omega(q, like, iters=4)
+    assert m.source == "measured"
+    assert m.omega_hat == pytest.approx(analytic, rel=0.1)
+    # the global NMSE of an exact-variance sparsifier sits at the same
+    # scale (it is the norm-weighted rather than d-weighted mean)
+    assert m.nmse == pytest.approx(analytic, rel=0.15)
+
+
+@pytest.mark.parametrize("codec", [Int8Stochastic(), NaturalCompression()])
+def test_quantizer_omega_hat_within_certificate_bound(codec):
+    """int8 / natural omegas are worst-case BOUNDS, not expectations:
+    on Gaussian traffic the realized variance sits far below (int8:
+    ~400x — the bound charges the max-scale corner).  The property is
+    the certificate itself: ``0 < omega_hat <= omega``."""
+    like = _wtree_like()
+    bound = tune.estimate_omega(codec, like)
+    m = tune.measure_omega(codec, like, iters=2)
+    assert 0.0 < m.omega_hat <= bound
+    assert 0.0 < m.nmse <= bound
+
+
+def test_identity_omega_hat_is_zero():
+    m = tune.measure_omega(Identity(), _wtree_like(), iters=1)
+    assert m.omega_hat == 0.0 and m.nmse == 0.0
+
+
+def test_tree_distortion_jits_and_rejects_empty():
+    q = NaturalCompression()
+    wtree = {"a": jax.random.normal(jax.random.PRNGKey(0), (3, 64))}
+    fn = jax.jit(lambda k, t: tree_distortion(q, k, t))
+    out = fn(jax.random.PRNGKey(1), wtree)
+    assert float(out["omega_hat"]) > 0.0
+    assert float(out["err_sq"]) > 0.0 and float(out["norm_sq"]) > 0.0
+    with pytest.raises(ValueError, match="empty tree"):
+        tree_distortion(q, jax.random.PRNGKey(0), {})
+
+
+# ---------------------------------------------------------------------------
+# The shift residual ||g - h||^2: decays under DIANA/EF-BV, flat under
+# plain DCGD (theorem-style, on the ridge fixture)
+# ---------------------------------------------------------------------------
+
+
+def _residual_trajectory(rule, steps=400, gamma=None, seed=0):
+    prob = make_ridge(lam=0.3, noise=10.0)
+    q = RandK(0.25)
+    gamma = gamma if gamma is not None else 0.25 / prob.L
+    alg = DCGDShift(q, rule)
+    x0 = jnp.zeros((prob.d,), prob.x_star.dtype)
+    state0 = alg.init(prob.worker_grads(x0), seed=seed)
+
+    def body(carry, _):
+        x, st = carry
+        wg = prob.worker_grads(x)
+        diag = residual_sq_diag(wg, st.h)
+        g, st = alg.estimate(st, wg)
+        return (x - gamma * g, st), (diag["shift_residual_sq"],
+                                     diag["grad_sq"])
+
+    (_, _), (resid, grad) = jax.lax.scan(body, (x0, state0), None,
+                                         length=steps)
+    return np.asarray(resid), np.asarray(grad)
+
+
+def test_shift_residual_decays_under_diana_and_efbv_flat_under_dcgd():
+    omega = 80 / 20 - 1.0  # RandK(0.25) on d=80
+    for rule in (DianaShift(alpha=1.0 / (1.0 + omega)),
+                 EFBVShift(eta=1.0 / (1.0 + omega), nu=1.0)):
+        resid, grad = _residual_trajectory(rule)
+        # averaged tails beat single-draw noise from the sparsifier
+        head = resid[:10].mean()
+        tail = resid[-50:].mean()
+        assert tail < 0.05 * head, f"{type(rule).__name__}: {tail} vs {head}"
+        # the gradient norm itself does NOT vanish (noise=10 puts the
+        # optimum away from interpolation) — the decay is the shift's
+        assert grad[-50:].mean() > 10.0 * tail
+
+    resid, grad = _residual_trajectory(FixedShift())
+    # stateless rule: h is None, the wire carries g itself — the ratio
+    # is pinned at exactly 1 every step
+    np.testing.assert_allclose(resid, grad, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Wire-level probe + snapshot plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_wire_codec_quality_and_snapshot_keys():
+    from repro.comm import SimChannel, build_transport
+    from repro.configs import get_smoke_config
+    from repro.configs.base import CompressionConfig
+    from repro.models import model as M
+
+    cfg = get_smoke_config("qwen3-0.6b").with_(dtype="float32")
+    shapes = jax.eval_shape(
+        lambda k: M.init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    comp = CompressionConfig(enabled=False, model_wire="q8", publish_every=2)
+    transport = build_transport(comp, cfg, SimChannel(), params_like=shapes)
+    wire = transport["model"]
+    qual = wire.codec_quality()
+    assert 0.0 < qual["nmse"] < 1.0          # int8 on normal data
+    assert qual["omega_hat"] == qual["nmse"]  # single payload: coincide
+
+    snap = transport.obs_snapshot()
+    assert snap["model"]["omega_hat"] is None  # probe is opt-in
+    snap_q = transport.obs_snapshot(quality=True)
+    assert snap_q["model"]["omega_hat"] == pytest.approx(qual["omega_hat"])
+    # record-ready for the run header, strict schema
+    obs.validate_record(obs.run_record("t", wires=snap_q))
+
+    # a traffic-free wire reports Nones, not zeros
+    bare = build_transport(CompressionConfig(enabled=False, model_wire="q8"),
+                           cfg, SimChannel())["model"]
+    assert bare.codec_quality() == {"omega_hat": None, "nmse": None}
+
+
+# ---------------------------------------------------------------------------
+# History ledger: sha x fingerprint keying, schema-valid records
+# ---------------------------------------------------------------------------
+
+
+def _bench(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def test_history_ingest_fingerprint_and_schema(tmp_path):
+    a = _bench(tmp_path, "BENCH_a.json",
+               {"mode": "q8", "step_s": 0.5, "bytes_per_step": 1024,
+                "loss": 1.25, "nested": {"bits": 99.0}})
+    b = _bench(tmp_path, "BENCH_b.json", {"iters": [3, 4], "ok": True})
+    out = str(tmp_path / "history.jsonl")
+
+    recs = history.ingest([a, b], out, sha="cafe" * 10)
+    assert len(recs) == 2
+    for rec in recs:
+        obs.validate_record(rec)           # ledger rides the obs schema
+    n, errors = obs.check_jsonl(out)
+    assert n == 2 and not errors
+
+    d = recs[0]["data"]
+    assert d["sha"] == "cafe" * 10
+    assert d["metrics"]["step_s"] == 0.5
+    assert d["metrics"]["nested.bits"] == 99.0
+    assert d["metrics"]["bytes_per_step"] == 1024.0
+    assert "ok" not in recs[1]["data"]["metrics"]       # bools are config
+    assert recs[1]["data"]["metrics"]["iters[0]"] == 3.0
+
+    # fingerprint: INSENSITIVE to metric values, sensitive to config
+    # scalars and to the metric-name set
+    base = json.loads(open(a).read())
+    fp0 = history.config_fingerprint("BENCH_a.json", base)
+    assert fp0 == history.config_fingerprint(
+        "BENCH_a.json", {**base, "step_s": 99.0})
+    assert fp0 != history.config_fingerprint(
+        "BENCH_a.json", {**base, "mode": "dense"})
+    assert fp0 != history.config_fingerprint(
+        "BENCH_a.json", {**base, "extra_metric": 1.0})
+    assert fp0 != history.config_fingerprint("BENCH_other.json", base)
+
+    # append again: latest_by_artifact keeps the LAST entry per name
+    history.ingest([a], out, sha="beef" * 10)
+    latest = history.latest_by_artifact(history.load_history(out))
+    assert latest["BENCH_a.json"]["data"]["sha"] == "beef" * 10
+    assert set(latest) == {"BENCH_a.json", "BENCH_b.json"}
+
+
+# ---------------------------------------------------------------------------
+# Regression gate: tolerance classes, exit codes, --inject self-test
+# ---------------------------------------------------------------------------
+
+
+def test_classify_metric_classes():
+    assert regress.classify("fused.step_s") == "timing"
+    assert regress.classify("elapsed_total") == "timing"
+    assert regress.classify("wall_seconds") == "timing"
+    assert regress.classify("modes.q8.bytes_per_step") == "structural"
+    assert regress.classify("uplink_bits") == "structural"
+    assert regress.classify("suites[0].steps") == "structural"
+    assert regress.classify("publishes") == "structural"
+    assert regress.classify("loss") == "other"
+    assert regress.classify("err_rel") == "other"
+    assert regress.classify("omega_hat") == "other"
+
+
+def test_regress_gate_exit_codes(tmp_path):
+    art = _bench(tmp_path, "BENCH_g.json",
+                 {"mode": "q8", "step_s": 0.5, "bytes_per_step": 1024.0,
+                  "loss": 1.25})
+    base_path = str(tmp_path / "baseline.json")
+
+    # freeze strips timings by default; the committed baseline never
+    # gates absolute times across machines
+    assert regress.main(["--freeze", base_path, art]) == 0
+    frozen = json.loads(open(base_path).read())
+    assert frozen["version"] == regress.BASELINE_VERSION
+    assert not frozen["timings_kept"]
+    assert "step_s" not in frozen["artifacts"]["BENCH_g.json"]["metrics"]
+
+    # clean pass against its own freeze
+    assert regress.main(["--baseline", base_path, art]) == 0
+
+    # the timing band: a same-run --keep-timings freeze plus --inject
+    # MUST trip (the CI self-test), while inject within band passes
+    base_t = str(tmp_path / "baseline_t.json")
+    assert regress.main(["--freeze", base_t, "--keep-timings", art]) == 0
+    assert regress.main(["--baseline", base_t, "--inject", "1.2", art]) == 1
+    assert regress.main(["--baseline", base_t, "--inject", "1.1", art]) == 0
+    # one-sided: getting FASTER never violates
+    assert regress.main(["--baseline", base_t, "--inject", "0.5", art]) == 0
+
+    # structural drift beyond 1% trips even when quality is unchanged
+    payload = json.loads(open(art).read())
+    payload["bytes_per_step"] = 1040.0          # +1.6%
+    with open(art, "w") as f:
+        json.dump(payload, f)
+    assert regress.main(["--baseline", base_path, art]) == 1
+
+    # usage errors exit 2 / argparse error paths
+    assert regress.main(["--baseline", str(tmp_path / "nope.json"),
+                         art]) == 2
+    missing = str(tmp_path / "BENCH_missing.json")
+    assert regress.main(["--baseline", base_path, missing]) == 2
+
+
+def test_regress_compare_metrics_bands_and_zero_baseline():
+    kw = dict(timing_rtol=0.15, structural_rtol=0.01, other_rtol=0.25)
+    base = {"step_s": 1.0, "bytes_per_step": 100.0, "loss": 1.0,
+            "resyncs": 0.0}
+
+    assert regress.compare_metrics(dict(base), base, **kw) == []
+    # other-class two-sided band: -30% trips, -20% doesn't
+    v = regress.compare_metrics({**base, "loss": 0.7}, base, **kw)
+    assert [x["metric"] for x in v] == ["loss"]
+    assert regress.compare_metrics({**base, "loss": 0.8}, base, **kw) == []
+    # a structural zero must STAY zero
+    v = regress.compare_metrics({**base, "resyncs": 1.0}, base, **kw)
+    assert v and v[0]["metric"] == "resyncs"
+    # a disappeared metric is a violation only when the config matches
+    cur = {k: v for k, v in base.items() if k != "loss"}
+    v = regress.compare_metrics(cur, base, **kw)
+    assert [x["why"] for x in v] == ["metric disappeared"]
+    assert regress.compare_metrics(cur, base, require_all=False, **kw) == []
+
+
+def test_regress_fingerprint_mismatch_intersects_only(tmp_path):
+    """A config change makes runs incomparable point-to-point: the gate
+    compares the INTERSECTING metrics, notes the mismatch, and a metric
+    present only in the baseline is NOT a violation."""
+    art = _bench(tmp_path, "BENCH_fp.json",
+                 {"mode": "q8", "loss": 1.0, "gone": 5.0})
+    base_path = str(tmp_path / "b.json")
+    assert regress.main(["--freeze", base_path, art]) == 0
+    # change a config scalar AND drop a metric
+    with open(art, "w") as f:
+        json.dump({"mode": "dense", "loss": 1.05}, f)
+    result = regress.run_gate(regress.load_baseline(base_path), [art])
+    assert result["violations"] == []
+    assert any("fingerprint changed" in n for n in result["notes"])
+    # but an intersecting metric outside its band still trips
+    with open(art, "w") as f:
+        json.dump({"mode": "dense", "loss": 2.0}, f)
+    result = regress.run_gate(regress.load_baseline(base_path), [art])
+    assert [v["metric"] for v in result["violations"]] == ["loss"]

@@ -322,6 +322,101 @@ def test_search_plan_prediction_only_when_verify_zero():
     assert plan.comm_mode == "randk_shared"
 
 
+def test_measured_omega_lands_in_tune_plan(tmp_path):
+    """Satellite: a measured ``omega_hat`` replaces the analytic
+    certificate in the EF-BV eta/nu derivation, the plan records the
+    value AND its provenance (v6 fields), and both survive the
+    strict-JSON round trip."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    wtree = _wtree(jax.random.PRNGKey(0), w=4)
+    comp = CompressionConfig(compressor="natural")
+    kw = dict(modes=("efbv",), link=tune.LinkModel.nominal(),
+              verify_top=0)
+
+    analytic = tune.search_plan(comp, wtree, mesh, 4, **kw)
+    assert analytic.omega == pytest.approx(0.125)   # natural certificate
+    assert analytic.omega_source == "analytic"
+    assert analytic.efbv_eta == pytest.approx(1.0 / 1.125)
+
+    measured = tune.search_plan(comp, wtree, mesh, 4, omega=0.5, **kw)
+    assert measured.omega == pytest.approx(0.5)
+    assert measured.omega_source == "measured"
+    # the damping really runs on the observed variance, not the bound
+    assert measured.efbv_eta == pytest.approx(1.0 / 1.5)
+    assert measured.efbv_eta != analytic.efbv_eta
+
+    rt = tune.load_plan(tune.save_plan(measured, str(tmp_path / "p.json")))
+    assert rt.omega == pytest.approx(0.5)
+    assert rt.omega_source == "measured"
+
+
+def test_no_certificate_codec_warns_with_structured_event():
+    """Satellite: a codec with NO unbiased certificate (TopK has only
+    ``delta``) yields ``omega_source="none"`` and a structured
+    ``omega_unavailable`` obs event naming the codec — a warning a
+    dashboard can alert on, not a lost stdout line."""
+    from repro import obs
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    wtree = _wtree(jax.random.PRNGKey(0), w=4)
+    comp = CompressionConfig(compressor="topk",
+                             compressor_kwargs=(("q", 0.25),))
+    sink = obs.MemorySink()
+    plan = tune.search_plan(comp, wtree, mesh, 4, modes=("dense", "ef21"),
+                            link=tune.LinkModel.nominal(), verify_top=0,
+                            obs_sink=sink)
+    assert plan.omega is None
+    assert plan.omega_source == "none"
+    events = sink.events("omega_unavailable")
+    assert len(events) == 1
+    assert events[0]["data"]["codec"] == "TopK"
+    assert events[0]["data"]["compressor"] == "topk"
+    obs.validate_record(events[0])
+
+
+def test_autotune_measured_omega_lazy_only_on_miss(tmp_path):
+    """``omega_fn`` mirrors ``hide_fn``: invoked once on a cache miss
+    with measured verification, never on a hit — and the cached plan
+    round-trips the measured value."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    comp = CompressionConfig(comm_mode="auto", compressor="natural")
+    params = {"w": jax.ShapeDtypeStruct((16, 8), jnp.float32)}
+    calls = []
+
+    def omega_fn():
+        calls.append(1)
+        return tune.OmegaMeasurement(omega_hat=0.5, nmse=0.4,
+                                     n_leaves=1, d_total=128)
+
+    kw = dict(cache_dir=str(tmp_path), modes=("dense", "efbv"),
+              link=tune.LinkModel.nominal(), verify_top=1,
+              measure_fn=lambda c, t, k: 1e-3,
+              analysis_fn=lambda: {"flops": 1e9, "bytes": 1e8},
+              rates_fn=tune.DeviceRates.nominal, omega_fn=omega_fn)
+    plan, hit = tune.autotune(comp, params, mesh, 2, **kw)
+    assert not hit and len(calls) == 1
+    assert plan.omega == pytest.approx(0.5)
+    assert plan.omega_source == "measured"
+    plan2, hit2 = tune.autotune(comp, params, mesh, 2, **kw)
+    assert hit2 and len(calls) == 1       # a hit stays free of probe work
+    assert plan2.omega == pytest.approx(0.5)
+    assert plan2.omega_source == "measured"
+
+
+def test_measure_omega_probe_matches_certificate():
+    """The probe the trainer's ``--comm_mode auto`` path feeds the
+    tuner: d-weighted like ``estimate_omega``, so the two are directly
+    comparable (RandK's certificate is exact in expectation)."""
+    like = {"a": jax.ShapeDtypeStruct((4, 1000), jnp.float32)}
+    from repro.core.compressors import RandK
+
+    m = tune.measure_omega(RandK(0.1), like, iters=4)
+    assert m.source == "measured"
+    assert m.n_leaves == 1 and m.d_total == 1000
+    assert m.omega_hat == pytest.approx(
+        tune.estimate_omega(RandK(0.1), like), rel=0.15)
+
+
 def test_default_candidates_grid_and_filters():
     comp = CompressionConfig(compressor="topk",
                              compressor_kwargs=(("q", 0.25),))
